@@ -1,0 +1,120 @@
+"""Kernel microbenchmarks: the scoring hot-spot at cache sizes from 4k to
+512k entries (jnp/XLA path on this CPU host; the Pallas kernel is the TPU
+target, validated in interpret mode by tests — interpret timings are
+Python-bound and not meaningful, so we benchmark the oracle the kernel
+replaces and report the analytic TPU-side expectation)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cosine_topk import quantize_keys
+
+
+def _time(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def cosine_topk_scaling():
+    rows = []
+    d, b, k = 384, 32, 4
+    f = jax.jit(lambda q, kk, v: ref.cosine_topk_ref(q, kk, v, k))
+    fq = jax.jit(lambda q, kk, sc, v: ref.quant_cosine_topk_ref(q, kk, sc, v, k))
+    for n in (4096, 32768, 131072, 524288):
+        rng = jax.random.PRNGKey(n)
+        kq, kk_ = jax.random.split(rng)
+        q = jax.random.normal(kq, (b, d))
+        q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+        keys = jax.random.normal(kk_, (n, d))
+        keys = keys / jnp.linalg.norm(keys, axis=1, keepdims=True)
+        valid = jnp.ones((n,), bool)
+        t = _time(f, q, keys, valid)
+        kq8, sc = quantize_keys(keys)
+        tq = _time(fq, q, kq8, sc, valid)
+        # TPU expectation: GEMM flops / MXU peak + slab HBM read
+        flops = 2 * b * n * d
+        mxu_s = flops / 197e12
+        hbm_s = n * d * 4 / 819e9
+        hbm_q = n * d * 1 / 819e9
+        rows.append({
+            "name": f"kernel/cosine_topk_n{n}",
+            "us_per_call": t * 1e6,
+            "derived": (f"cpu_f32_us={t*1e6:.0f} cpu_int8_us={tq*1e6:.0f} "
+                        f"tpu_roofline_us={max(mxu_s, hbm_s)*1e6:.1f} "
+                        f"tpu_int8_roofline_us={max(mxu_s, hbm_q)*1e6:.1f}"),
+        })
+    return rows, {}
+
+
+def hnsw_vs_exact():
+    """Paper-faithful HNSW vs the TPU-native exact scoring (DESIGN.md §3)."""
+    import numpy as np
+    from repro.core.hnsw import HNSWIndex
+    d, n, nq = 384, 8192, 64
+    rng = np.random.default_rng(0)
+    keys = rng.normal(size=(n, d)).astype(np.float32)
+    keys /= np.linalg.norm(keys, axis=1, keepdims=True)
+    queries = keys[:nq] + 0.05 * rng.normal(size=(nq, d)).astype(np.float32)
+
+    idx = HNSWIndex(dim=d, max_elements=n, m=16, ef_construction=100,
+                    ef_search=64)
+    t0 = time.perf_counter()
+    for v in keys:
+        idx.add(v)
+    build_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ids_h, _ = idx.search_batch(queries, 1)
+    search_s = (time.perf_counter() - t0) / nq
+
+    f = jax.jit(lambda q, kk, v: ref.cosine_topk_ref(q, kk, v, 1))
+    qj = jnp.asarray(queries / np.linalg.norm(queries, axis=1, keepdims=True))
+    kj = jnp.asarray(keys)
+    valid = jnp.ones((n,), bool)
+    exact_s = _time(f, qj, kj, valid) / nq
+    s_ex, i_ex = f(qj, kj, valid)
+    recall = float((np.asarray(i_ex)[:, 0] == ids_h[:, 0]).mean())
+    rows = [{
+        "name": "design3/hnsw_vs_exact",
+        "us_per_call": search_s * 1e6,
+        "derived": (f"hnsw_search_us={search_s*1e6:.0f} "
+                    f"exact_batched_us={exact_s*1e6:.1f} "
+                    f"hnsw_build_s={build_s:.1f} agreement={recall:.2f}"),
+    }]
+    return rows, {}
+
+
+def ivf_bench():
+    from repro.core.index import ExactIndex, IVFIndex
+    d, n, nq = 384, 65536, 64
+    rng = jax.random.PRNGKey(0)
+    keys = jax.random.normal(rng, (n, d))
+    keys = keys / jnp.linalg.norm(keys, axis=1, keepdims=True)
+    valid = jnp.ones((n,), bool)
+    queries = keys[:nq] + 0.05 * jax.random.normal(jax.random.PRNGKey(1),
+                                                   (nq, d))
+    ivf = IVFIndex(ncentroids=256, nprobe=16, bucket_cap=512, topk=1)
+    st = ivf.fit(keys, valid, jax.random.PRNGKey(2))
+    fs = jax.jit(lambda q: ivf.search(st, q, keys, valid))
+    fe = jax.jit(lambda q: ExactIndex(topk=1, backend="jnp").search(
+        q, keys, valid))
+    t_ivf = _time(fs, queries)
+    t_ex = _time(fe, queries)
+    _, i_ivf = fs(queries)
+    _, i_ex = fe(queries)
+    recall = float(jnp.mean((i_ivf[:, 0] == i_ex[:, 0]).astype(jnp.float32)))
+    rows = [{
+        "name": "beyond/ivf_n65536",
+        "us_per_call": t_ivf * 1e6,
+        "derived": (f"ivf_us={t_ivf*1e6:.0f} exact_us={t_ex*1e6:.0f} "
+                    f"speedup={t_ex/t_ivf:.2f}x recall@1={recall:.3f}"),
+    }]
+    return rows, {}

@@ -1,0 +1,158 @@
+"""Benchmarks reproducing the paper's tables/figures (one function each).
+
+fig2  — API-call frequency: traditional vs semantic caching (per category)
+fig3  — average query response time: with cache vs without
+fig4/table1 — cache hits + positive-hit accuracy per category
+threshold_sweep — §5.3: cosine threshold 0.6..0.9 step 0.05
+
+Each returns (rows, summary) where rows are CSV-able dicts; ``run.py``
+prints them in the harness format.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.types import CacheConfig
+from repro.data.qa_dataset import (CATEGORIES, build_corpus,
+                                   build_test_queries)
+from repro.serving import CachedEngine, Request, SimulatedLLMBackend
+
+_PAPER_TABLE1 = {   # category -> (cache hits / 500, positive hits)
+    "python_basics": (335, 310),
+    "network_support": (335, 326),
+    "order_shipping": (344, 331),
+    "customer_shopping": (308, 298),
+}
+
+
+def _run_system(threshold: float = 0.8, n_per_category: int = 2000,
+                n_queries_per_cat: int = 500, ttl: float | None = None,
+                seed: int = 0):
+    pairs = build_corpus(n_per_category, seed=seed)
+    queries = build_test_queries(pairs, n_per_category=n_queries_per_cat,
+                                 seed=seed + 1)
+    by_id = {p.qa_id: p for p in pairs}
+
+    def judge(req, sid):
+        return sid >= 0 and sid in by_id and \
+            by_id[sid].semantic_key == req.semantic_key
+
+    cfg = CacheConfig(dim=384, capacity=4 * n_per_category * 2, value_len=48,
+                      ttl=ttl, threshold=threshold)
+    eng = CachedEngine(cfg, SimulatedLLMBackend(pairs), judge=judge,
+                       batch_size=128)
+    eng.warm(pairs)
+    t0 = time.perf_counter()
+    eng.process([Request(query=q.query, category=q.category,
+                         source_id=q.source_id, semantic_key=q.semantic_key)
+                 for q in queries])
+    wall = time.perf_counter() - t0
+    return eng.metrics.summary(), wall, len(queries)
+
+
+def table1(full: bool = True):
+    """Table 1 + Fig 4: hits and positive hits per category vs paper."""
+    n = 2000 if full else 400
+    nq = 500 if full else 100
+    s, wall, nqueries = _run_system(n_per_category=n, n_queries_per_cat=nq)
+    rows = []
+    for cat in CATEGORIES:
+        m = s["categories"][cat]
+        paper_hits, paper_pos = _PAPER_TABLE1[cat]
+        rows.append({
+            "name": f"table1/{cat}",
+            "us_per_call": 1e6 * wall / nqueries,
+            "derived": (f"hits={m['cache_hits']}/{m['lookups']}"
+                        f" hit_rate={m['hit_rate']:.3f}"
+                        f" positive_rate={m['positive_rate']:.3f}"
+                        f" paper_hits={paper_hits}/500"
+                        f" paper_pos={paper_pos}"),
+        })
+    return rows, s
+
+
+def fig2(summary=None):
+    """API-call frequency: traditional = 100%; ours = miss fraction."""
+    if summary is None:
+        summary, _, _ = _run_system()
+    rows = []
+    for cat in CATEGORIES:
+        m = summary["categories"][cat]
+        rows.append({
+            "name": f"fig2/api_calls/{cat}",
+            "us_per_call": 0.0,
+            "derived": (f"traditional=1.00 cached={m['api_call_fraction']:.3f}"
+                        f" reduction={1 - m['api_call_fraction']:.3f}"),
+        })
+    return rows, summary
+
+
+def fig3(summary=None):
+    """Response time with vs without cache (LLM latency modeled, cache
+    path measured on this host)."""
+    if summary is None:
+        summary, _, _ = _run_system()
+    rows = [{
+        "name": "fig3/latency",
+        "us_per_call": summary["avg_latency_with_cache_s"] * 1e6,
+        "derived": (f"with_cache_s={summary['avg_latency_with_cache_s']:.4f}"
+                    f" without_cache_s={summary['avg_latency_without_cache_s']:.4f}"
+                    f" speedup={summary['avg_latency_without_cache_s'] / max(summary['avg_latency_with_cache_s'], 1e-9):.2f}x"),
+    }]
+    return rows, summary
+
+
+def threshold_sweep(full: bool = False):
+    """§5.3: sweep 0.60..0.90 in 0.05 steps; 0.8 should be the knee."""
+    n = 1000 if full else 500
+    nq = 250 if full else 125
+    rows = []
+    best = None
+    for thr in [0.60, 0.65, 0.70, 0.75, 0.80, 0.85, 0.90]:
+        s, wall, nqueries = _run_system(threshold=thr, n_per_category=n,
+                                        n_queries_per_cat=nq)
+        hit = sum(s["categories"][c]["cache_hits"] for c in CATEGORIES) / \
+            sum(s["categories"][c]["lookups"] for c in CATEGORIES)
+        jh = sum(round(s["categories"][c]["positive_rate"]
+                       * s["categories"][c]["cache_hits"]) for c in CATEGORIES)
+        th = sum(s["categories"][c]["cache_hits"] for c in CATEGORIES)
+        pos = jh / max(th, 1)
+        # the paper's selection logic (§5.3): thresholds below the knee
+        # "introduce irrelevant matches, decreasing the positive hit rate";
+        # pick the highest hit rate whose precision clears the paper's
+        # observed floor (92.5%)
+        score = hit if pos >= 0.92 else -1.0
+        if best is None or score > best[1]:
+            best = (thr, score)
+        rows.append({
+            "name": f"sec5.3/threshold_{thr:.2f}",
+            "us_per_call": 1e6 * wall / nqueries,
+            "derived": f"hit_rate={hit:.3f} positive_rate={pos:.3f} "
+                       f"tradeoff={score:.3f}",
+        })
+    rows.append({"name": "sec5.3/optimal", "us_per_call": 0.0,
+                 "derived": f"best_threshold={best[0]:.2f} (paper: 0.80)"})
+    return rows, {"best": best}
+
+
+def ttl_behaviour():
+    """TTL mechanism (paper §2.7): hit rate collapses after expiry."""
+
+    def run(ttl, tick):
+        pairs = build_corpus(300, seed=0)
+        queries = build_test_queries(pairs, n_per_category=75, seed=1)
+        cfg = CacheConfig(dim=384, capacity=4096, value_len=48, ttl=ttl,
+                          threshold=0.8)
+        eng = CachedEngine(cfg, SimulatedLLMBackend(pairs), batch_size=128)
+        eng.warm(pairs)
+        eng.tick(tick)      # advance the clock past (or not past) the TTL
+        eng.process([Request(query=q.query, category=q.category)
+                     for q in queries])
+        return sum(eng.metrics.per_category[c].hits for c in CATEGORIES)
+
+    hit_fresh = run(ttl=3600.0, tick=60.0)     # within TTL
+    hit_expired = run(ttl=30.0, tick=60.0)     # past TTL: warm cache useless
+    rows = [{"name": "sec2.7/ttl", "us_per_call": 0.0,
+             "derived": f"hits_within_ttl={hit_fresh} "
+                        f"hits_after_expiry={hit_expired}"}]
+    return rows, {}

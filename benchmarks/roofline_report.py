@@ -1,0 +1,73 @@
+"""Render the §Roofline table from dry-run artifacts (benchmarks/artifacts)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_artifacts(mesh: str = "pod_16x16") -> list[dict]:
+    arts = []
+    for f in sorted(glob.glob(os.path.join(ART_DIR, f"*_{mesh}.json"))):
+        with open(f) as fh:
+            a = json.load(fh)
+        if a.get("ok") and isinstance(a.get("roofline"), dict) \
+                and "arch" in a.get("roofline", {}):
+            arts.append(a)
+    return arts
+
+
+def markdown_table(mesh: str = "pod_16x16") -> str:
+    arts = load_artifacts(mesh)
+    arts.sort(key=lambda a: (a["arch"], SHAPE_ORDER.index(a["shape"])
+                             if a["shape"] in SHAPE_ORDER else 9))
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant "
+        "| model_GF | HLO-true_GF | useful | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in arts:
+        r = a["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| **{r['dominant']}** | {r['model_gflops']:.3g} "
+            f"| {r['hlo_gflops']:.3g} | {r['useful_ratio']:.2f} "
+            f"| {r.get('note', '')} |")
+    return "\n".join(lines)
+
+
+def rows_for_run(mesh: str = "pod_16x16"):
+    rows = []
+    for a in load_artifacts(mesh):
+        r = a["roofline"]
+        dom_s = {"compute": r["compute_s"], "memory": r["memory_s"],
+                 "collective": r["collective_s"]}[r["dominant"]]
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}",
+            "us_per_call": dom_s * 1e6,
+            "derived": (f"dominant={r['dominant']} "
+                        f"compute_s={r['compute_s']:.4f} "
+                        f"memory_s={r['memory_s']:.4f} "
+                        f"collective_s={r['collective_s']:.4f} "
+                        f"useful={r['useful_ratio']:.2f}"),
+        })
+    return rows, {}
+
+
+def dryrun_summary_rows():
+    rows = []
+    for mesh in ("pod_16x16", "multipod_2x16x16"):
+        arts = load_artifacts(mesh)
+        n_cache = len([1 for f in glob.glob(os.path.join(
+            ART_DIR, f"semantic-cache_*_{mesh}.json"))])
+        rows.append({
+            "name": f"dryrun/{mesh}",
+            "us_per_call": 0.0,
+            "derived": f"model_pairs_ok={len(arts)} cache_step_ok={n_cache}",
+        })
+    return rows, {}

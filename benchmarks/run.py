@@ -1,0 +1,74 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  table1/*        — paper Table 1 / Fig 4 (hits + positive hits per category)
+  fig2/*          — API-call frequency, traditional vs cached
+  fig3/*          — latency with vs without cache
+  sec5.3/*        — threshold sweep 0.60..0.90
+  sec2.7/*        — TTL behaviour
+  kernel/*        — scoring-kernel scaling (slab 4k..512k)
+  design3/*       — HNSW (paper algorithm) vs exact MXU scoring
+  beyond/*        — IVF index (beyond-paper ANN)
+  roofline/*      — per (arch x shape) dominant roofline terms (from dry-run)
+  dryrun/*        — dry-run coverage counters
+
+Run ``python -m benchmarks.run --quick`` for a reduced-size pass.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _emit(rows):
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced dataset sizes (CI-friendly)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark group names")
+    args = ap.parse_args()
+    full = not args.quick
+
+    from benchmarks import kernel_bench, paper_tables, roofline_report
+
+    groups = []
+    groups.append(("table1", lambda: paper_tables.table1(full=full)))
+    # fig2/fig3 reuse table1's system run only when sizes match; rerun cheap
+    summary_holder = {}
+
+    def _table1_then_figs():
+        rows, s = paper_tables.table1(full=full)
+        summary_holder["s"] = s
+        return rows, s
+
+    groups = [
+        ("table1", _table1_then_figs),
+        ("fig2", lambda: paper_tables.fig2(summary_holder.get("s"))),
+        ("fig3", lambda: paper_tables.fig3(summary_holder.get("s"))),
+        ("sec5.3", lambda: paper_tables.threshold_sweep(full=False)),
+        ("sec2.7", paper_tables.ttl_behaviour),
+        ("kernel", kernel_bench.cosine_topk_scaling),
+        ("design3", kernel_bench.hnsw_vs_exact),
+        ("beyond", kernel_bench.ivf_bench),
+        ("roofline", roofline_report.rows_for_run),
+        ("dryrun", roofline_report.dryrun_summary_rows),
+    ]
+
+    for name, fn in groups:
+        if args.only and args.only not in name:
+            continue
+        try:
+            rows, _ = fn()
+            _emit(rows)
+        except Exception as e:  # noqa: BLE001 — keep the harness going
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Train a ~100M-param model for a few hundred steps on the QA corpus
+(deliverable b: end-to-end training driver).
+
+    PYTHONPATH=src python examples/train_small.py [--steps 300]
+
+Uses the mamba2-130m architecture at FULL assigned size (130M params — the
+one assigned config that is genuinely CPU-trainable), the synthetic QA
+corpus, AdamW + cosine schedule, and checkpoints at the end.
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced variant (fast CI)")
+    args = ap.parse_args()
+    argv = ["train", "--arch", "mamba2-130m", "--steps", str(args.steps),
+            "--batch", "4", "--seq", "128", "--lr", "1e-3",
+            "--checkpoint", "/tmp/repro_mamba2_130m.npz"]
+    if not args.reduced:
+        argv.append("--full")
+    sys.argv = argv
+    train_main()

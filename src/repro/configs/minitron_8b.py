@@ -1,0 +1,15 @@
+"""minitron-8b — width/depth-pruned Nemotron-4 [arXiv:2407.14679]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    arch_type="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab=256000,
+    source="Minitron: pruned Nemotron [arXiv:2407.14679]",
+)

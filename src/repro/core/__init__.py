@@ -1,0 +1,24 @@
+"""GPT Semantic Cache — the paper's contribution as composable JAX.
+
+Public API:
+  CacheConfig, CacheState, CacheStats, LookupResult  (types)
+  SemanticCache                                       (orchestration)
+  ExactIndex, IVFIndex, HNSWIndex                     (ANN indexes)
+  FixedThreshold, PerCategoryThreshold, AdaptiveThreshold (policies)
+  DistributedCache                                    (sharded cache)
+"""
+from repro.core.types import (CacheConfig, CacheState, CacheStats,
+                              LookupResult, init_cache_state)
+from repro.core.cache import SemanticCache
+from repro.core.index import ExactIndex, IVFIndex, IVFState
+from repro.core.hnsw import HNSWIndex
+from repro.core.policy import (AdaptiveThreshold, FixedThreshold,
+                               PerCategoryThreshold, make_policy)
+from repro.core.distributed import DistributedCache
+
+__all__ = [
+    "CacheConfig", "CacheState", "CacheStats", "LookupResult",
+    "init_cache_state", "SemanticCache", "ExactIndex", "IVFIndex", "IVFState",
+    "HNSWIndex", "AdaptiveThreshold", "FixedThreshold", "PerCategoryThreshold",
+    "make_policy", "DistributedCache",
+]

@@ -1,0 +1,169 @@
+"""SemanticCache — the paper's query-handling workflow (§2.5, §2.8) as a
+composable, jit-able JAX module.
+
+Workflow per batch of queries:
+  1. embed (done by the caller / serving engine),
+  2. ``lookup`` — ANN search over the slab, threshold policy decides hit/miss,
+  3. hit  -> cached response returned, LRU/LFU counters touched,
+  4. miss -> caller generates with the LLM backend, then ``insert`` stores
+     (embedding, response) and the index absorbs the new entries.
+
+Everything is batched (beyond-paper: the paper scores one query at a time;
+batching turns scoring into a GEMM — see DESIGN.md §11.5) and functional:
+``(state, stats)`` thread through, so the whole serve step can live inside
+one ``jax.jit`` with donated buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import store
+from repro.core.index import ExactIndex, IVFIndex, IVFState
+from repro.core.policy import FixedThreshold
+from repro.core.types import (CacheConfig, CacheState, CacheStats,
+                              LookupResult, init_cache_state)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SemanticCache:
+    """Stateless orchestrator; all state lives in (CacheState, CacheStats)."""
+
+    config: CacheConfig
+    index: Any = None          # ExactIndex | IVFIndex (None -> Exact)
+    policy: Any = None         # threshold policy (None -> Fixed(config.threshold))
+
+    def __post_init__(self):
+        if self.index is None:
+            object.__setattr__(self, "index", ExactIndex(topk=self.config.topk))
+        if self.policy is None:
+            object.__setattr__(
+                self, "policy", FixedThreshold(threshold=self.config.threshold))
+
+    # -- state ------------------------------------------------------------
+    def init(self) -> tuple[CacheState, CacheStats]:
+        return init_cache_state(self.config), CacheStats.zeros()
+
+    def init_policy(self) -> Array:
+        return self.policy.init_state()
+
+    # -- lookup (paper §2.5 step 1) ----------------------------------------
+    def lookup(
+        self,
+        state: CacheState,
+        stats: CacheStats,
+        queries: Array,                 # (B, d) embeddings (normalized or not)
+        now: Array | float,
+        *,
+        policy_state: Array | None = None,
+        ivf_state: IVFState | None = None,
+        update_counters: bool = True,
+    ) -> tuple[LookupResult, CacheState, CacheStats]:
+        b = queries.shape[0]
+        now = jnp.asarray(now, dtype=jnp.float32)
+        alive = store.alive_mask(state, now)
+
+        if isinstance(self.index, IVFIndex):
+            if ivf_state is None:
+                raise ValueError("IVFIndex requires ivf_state (call index.fit)")
+            top_s, top_i = self.index.search(ivf_state, queries, state.keys, alive)
+        else:
+            top_s, top_i = self.index.search(queries, state.keys, alive)
+
+        best_score = top_s[:, 0]
+        best_idx = jnp.maximum(top_i[:, 0], 0)  # -1 guard when cache empty
+        any_alive = jnp.any(alive)
+        best_score = jnp.where(any_alive & (top_i[:, 0] >= 0), best_score, -jnp.inf)
+
+        pstate = policy_state if policy_state is not None else self.init_policy()
+        hit, pstate = self.policy.decide(best_score, pstate)
+        hit = hit & (best_score > -jnp.inf)
+
+        result = LookupResult(
+            index=best_idx.astype(jnp.int32),
+            score=best_score,
+            hit=hit,
+            values=state.values[best_idx],
+            value_lens=state.value_lens[best_idx],
+            source_id=state.source_id[best_idx],
+            topk_index=top_i,
+            topk_score=top_s,
+        )
+        if update_counters:
+            state = store.touch(state, best_idx, now, hit)
+            nhit = jnp.sum(hit).astype(jnp.int32)
+            stats = CacheStats(
+                lookups=stats.lookups + b,
+                hits=stats.hits + nhit,
+                misses=stats.misses + (b - nhit),
+                expired_evictions=stats.expired_evictions,
+                inserts=stats.inserts,
+            )
+        return result, state, stats
+
+    # -- insert (paper §2.5 step 3) -----------------------------------------
+    def insert(
+        self,
+        state: CacheState,
+        stats: CacheStats,
+        queries: Array,
+        values: Array,
+        value_lens: Array,
+        now: Array | float,
+        *,
+        source_id: Array | None = None,
+        mask: Array | None = None,     # typically = ~hit from the lookup
+    ) -> tuple[CacheState, CacheStats]:
+        state = store.insert(
+            self.config, state, queries, values, value_lens, now,
+            source_id=source_id, mask=mask)
+        n = jnp.sum(mask).astype(jnp.int32) if mask is not None else queries.shape[0]
+        stats = dataclasses.replace(stats, inserts=stats.inserts + n)
+        return state, stats
+
+    # -- maintenance (paper §2.7 TTL; §2.4 rebalancing) ----------------------
+    def expire(self, state: CacheState, stats: CacheStats, now: Array | float
+               ) -> tuple[CacheState, CacheStats]:
+        state, n = store.expire(state, now)
+        stats = dataclasses.replace(
+            stats, expired_evictions=stats.expired_evictions + n)
+        return state, stats
+
+    def rebuild_index(self, state: CacheState, now: Array | float, rng: Array
+                      ) -> IVFState | None:
+        """Periodic IVF rebuild — the analogue of HNSW rebalancing (§2.4)."""
+        if isinstance(self.index, IVFIndex):
+            return self.index.fit(state.keys, store.alive_mask(state, now), rng)
+        return None
+
+    # -- fused serve-side step (beyond-paper: single jit) --------------------
+    def lookup_insert(
+        self,
+        state: CacheState,
+        stats: CacheStats,
+        queries: Array,
+        miss_values: Array,
+        miss_value_lens: Array,
+        now: Array | float,
+        *,
+        source_id: Array | None = None,
+        policy_state: Array | None = None,
+    ) -> tuple[LookupResult, CacheState, CacheStats]:
+        """Lookup, then insert exactly the missed queries' fresh responses.
+
+        ``miss_values`` are the responses the LLM backend produced for every
+        query (rows for hits are ignored via the insert mask) — this is the
+        shape-static formulation that lets the whole hit/miss branch live in
+        one compiled step (no host round-trip for the branch).
+        """
+        result, state, stats = self.lookup(
+            state, stats, queries, now, policy_state=policy_state)
+        state, stats = self.insert(
+            state, stats, queries, miss_values, miss_value_lens, now,
+            source_id=source_id, mask=~result.hit)
+        return result, state, stats

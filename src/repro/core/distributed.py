@@ -1,0 +1,196 @@
+"""Distributed semantic cache — paper §2.10 "Distributed Caching" / §5.4.
+
+Sharding scheme (DESIGN.md §5):
+  * the slab shards its *capacity* dimension over the ``data`` mesh axis —
+    each data-parallel group owns ``capacity/shards`` entries (a Redis
+    Cluster hash-slot analogue, but with deterministic round-robin routing);
+  * queries are replicated across cache shards for lookup (they are a few
+    hundred floats; the slab is the big operand);
+  * lookup = per-shard fused top-k, then a global argmax combine with
+    ``jax.lax.pmax`` over packed (score, global_slot) pairs — one small
+    all-reduce instead of gathering any slab data;
+  * the winning entry's value tokens are fetched with a masked ``psum``
+    (owner contributes, everyone else contributes zeros);
+  * inserts route round-robin by global insert clock — shard
+    ``(n_inserts + row) % num_shards`` takes the row, keeping shards
+    balanced without coordination;
+  * across pods the cache shards over ``data`` within each pod and the
+    ``pod`` axis joins the same combine, so a response cached in pod 0
+    serves a query landing on pod 1.
+
+Everything is ``shard_map`` + ``jax.lax`` collectives — no host round trips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import store
+from repro.core.cache import SemanticCache
+from repro.core.types import CacheConfig, CacheState, CacheStats, LookupResult
+
+Array = jax.Array
+
+
+def shard_axes(mesh: Mesh, cache_axes: Sequence[str]) -> int:
+    return int(jnp.prod(jnp.asarray([mesh.shape[a] for a in cache_axes])))
+
+
+def cache_sharding(mesh: Mesh, cache_axes: Sequence[str]) -> dict:
+    """NamedShardings for a CacheState whose capacity dim shards over axes."""
+    row = NamedSharding(mesh, P(tuple(cache_axes)))
+    mat = NamedSharding(mesh, P(tuple(cache_axes), None))
+    rep = NamedSharding(mesh, P())
+    return dict(keys=mat, values=mat, value_lens=row, expiry=row, valid=row,
+                freq=row, last_used=row, inserted_at=row, source_id=row,
+                ptr=rep, n_inserts=rep)
+
+
+def place_cache_state(state: CacheState, mesh: Mesh, cache_axes: Sequence[str]
+                      ) -> CacheState:
+    sh = cache_sharding(mesh, cache_axes)
+    return CacheState(**{
+        f.name: jax.device_put(getattr(state, f.name), sh[f.name])
+        for f in dataclasses.fields(CacheState)})
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedCache:
+    """Sharded wrapper around SemanticCache. ``cache_axes`` shard capacity."""
+
+    cache: SemanticCache
+    mesh: Mesh
+    cache_axes: tuple[str, ...] = ("data",)
+
+    @property
+    def num_shards(self) -> int:
+        n = 1
+        for a in self.cache_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def local_config(self) -> CacheConfig:
+        cfg = self.cache.config
+        return dataclasses.replace(cfg, capacity=cfg.capacity // self.num_shards)
+
+    def init(self) -> tuple[CacheState, CacheStats]:
+        state, stats = self.cache.init()
+        return place_cache_state(state, self.mesh, self.cache_axes), stats
+
+    # ------------------------------------------------------------------ #
+    def _local_lookup(self, state: CacheState, queries: Array, now: Array):
+        """Runs per-shard inside shard_map. Returns packed global winners."""
+        axes = self.cache_axes
+        shard_id = jnp.zeros((), jnp.int32)
+        mult = 1
+        for a in reversed(axes):
+            shard_id = shard_id + jax.lax.axis_index(a) * mult
+            mult *= jax.lax.axis_size(a)
+        local_cap = state.keys.shape[0]
+
+        alive = store.alive_mask(state, now)
+        local_cache = SemanticCache(self.local_config, index=self.cache.index,
+                                    policy=self.cache.policy)
+        top_s, top_i = local_cache.index.search(queries, state.keys, alive)
+        best_s, best_i = top_s[:, 0], jnp.maximum(top_i[:, 0], 0)
+        best_s = jnp.where(top_i[:, 0] >= 0, best_s, -jnp.inf)
+        global_slot = shard_id * local_cap + best_i
+
+        # pack (score, slot): lexicographic max == max score, tie -> max slot
+        packed = jnp.stack([best_s, global_slot.astype(jnp.float32)], axis=-1)
+
+        def combine(p):
+            for a in axes:
+                # pmax on score; to carry the winning slot, use the classic
+                # two-field trick: compare scores, select slot of the winner.
+                s = jax.lax.pmax(p[..., 0], a)
+                winner = p[..., 0] >= s - 0.0  # == max on the winning shard
+                slot = jnp.where(winner, p[..., 1], -1.0)
+                slot = jax.lax.pmax(slot, a)
+                p = jnp.stack([s, slot], axis=-1)
+            return p
+
+        packed = combine(packed)
+        g_score, g_slot = packed[..., 0], packed[..., 1].astype(jnp.int32)
+
+        # fetch winning values: owner shard contributes, psum broadcasts
+        owner = g_slot // local_cap
+        local_idx = jnp.where(owner == shard_id, g_slot % local_cap, 0)
+        mine = (owner == shard_id) & (g_score > -jnp.inf)
+        vals = jnp.where(mine[:, None], state.values[local_idx], 0)
+        vlen = jnp.where(mine, state.value_lens[local_idx], 0)
+        src = jnp.where(mine, state.source_id[local_idx], 0)
+        # fused fetch: one psum of the concatenated (values | len | src)
+        # payload instead of three collectives (§Perf iteration 3.2)
+        packed = jnp.concatenate(
+            [vals, vlen[:, None], src[:, None]], axis=1)
+        for a in axes:
+            packed = jax.lax.psum(packed, a)
+        vals = packed[:, :-2]
+        vlen = packed[:, -2]
+        src = packed[:, -1]
+
+        pstate = self.cache.init_policy()
+        hit, _ = self.cache.policy.decide(g_score, pstate)
+        hit = hit & (g_score > -jnp.inf)
+
+        # touch local LRU/LFU where this shard owns the hit
+        state = store.touch(state, local_idx, now, hit & mine)
+        return state, (g_slot, g_score, hit, vals, vlen, src)
+
+    def _local_insert(self, state: CacheState, queries, values, value_lens,
+                      source_id, mask, now):
+        axes = self.cache_axes
+        shard_id = jnp.zeros((), jnp.int32)
+        mult = 1
+        for a in reversed(axes):
+            shard_id = shard_id + jax.lax.axis_index(a) * mult
+            mult *= jax.lax.axis_size(a)
+        b = queries.shape[0]
+        # round-robin routing by (global insert clock + row index)
+        owner = (state.n_inserts + jnp.arange(b, dtype=jnp.int32)) % self.num_shards
+        take = mask & (owner == shard_id)
+        new_state = store.insert(self.local_config, state, queries, values,
+                                 value_lens, now, source_id=source_id, mask=take)
+        # keep the *global* insert clock in sync on every shard
+        n_global = state.n_inserts + jnp.sum(mask).astype(jnp.int32)
+        new_state.n_inserts = n_global
+        new_state.ptr = jnp.where(
+            jnp.asarray(self.cache.config.eviction == "ring"),
+            new_state.ptr, new_state.ptr)
+        return new_state
+
+    # ------------------------------------------------------------------ #
+    def make_lookup_insert(self):
+        """Build the jit-able fused sharded step (state donated)."""
+        axes = self.cache_axes
+        mesh = self.mesh
+        row = P(tuple(axes))
+        mat = P(tuple(axes), None)
+        state_spec = CacheState(
+            keys=mat, values=mat, value_lens=row, expiry=row, valid=row,
+            freq=row, last_used=row, inserted_at=row, source_id=row,
+            ptr=P(), n_inserts=P())
+        rep = P()
+
+        def step(state, queries, miss_values, miss_value_lens, source_id, now):
+            state, (slot, score, hit, vals, vlen, src) = self._local_lookup(
+                state, queries, now)
+            state = self._local_insert(
+                state, queries, miss_values, miss_value_lens, source_id,
+                ~hit, now)
+            return state, (slot, score, hit, vals, vlen, src)
+
+        sharded = shard_map(
+            step, mesh=mesh,
+            in_specs=(state_spec, rep, rep, rep, rep, rep),
+            out_specs=(state_spec, (rep, rep, rep, rep, rep, rep)),
+            check_vma=False)
+        return jax.jit(sharded, donate_argnums=(0,))

@@ -1,0 +1,141 @@
+"""ANN indexes over the cache slab (paper §2.4, TPU-adapted — DESIGN.md §3).
+
+Two TPU-native index structures replace the paper's HNSW graph:
+
+* ``ExactIndex`` — blocked brute-force cosine top-k on the MXU. Exact
+  (recall = 1.0), one GEMM; dispatches to the Pallas fused kernel on TPU
+  and to the jnp reference elsewhere.
+* ``IVFIndex`` — inverted-file index: k-means centroids over the slab;
+  search probes the top-``nprobe`` clusters only. This recovers HNSW's
+  sub-linear scaling with *static shapes and dense matmuls*: both the
+  centroid scoring and the in-cluster scoring are GEMMs. Cluster membership
+  is a padded (ncentroids, bucket_cap) table rebuilt by ``fit`` —
+  the analogue of the paper's periodic HNSW "rebalancing" (§2.4).
+
+The paper-faithful HNSW itself lives in ``repro.core.hnsw`` (CPU reference).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import cosine_scores, masked_topk, l2_normalize, NEG_INF
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactIndex:
+    """Exact blocked scoring. ``backend='auto'|'jnp'|'pallas'``."""
+
+    topk: int = 4
+    backend: str = "auto"
+
+    def search(self, queries: Array, keys: Array, valid: Array) -> tuple[Array, Array]:
+        """(B,d) x (N,d) -> (scores (B,k), indices (B,k))."""
+        backend = self.backend
+        if backend == "auto":
+            backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        queries = l2_normalize(queries)  # keys are normalized at insert time
+        if backend == "pallas":
+            from repro.kernels import ops  # deferred: kernels are optional deps
+
+            return ops.cosine_topk(queries, keys, valid, k=self.topk)
+        scores = cosine_scores(queries, keys, valid)
+        vals, idx = masked_topk(scores, self.topk)
+        return vals, idx.astype(jnp.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class IVFState:
+    centroids: Array   # (C, d) normalized
+    buckets: Array     # (C, cap) int32 slot ids, -1 padded
+    bucket_valid: Array  # (C, cap) bool
+
+
+@dataclasses.dataclass(frozen=True)
+class IVFIndex:
+    """Inverted-file ANN. ``fit`` = k-means rebuild; ``search`` = 2 GEMMs."""
+
+    ncentroids: int = 64
+    nprobe: int = 8
+    bucket_cap: int = 512
+    topk: int = 4
+    kmeans_iters: int = 10
+
+    def fit(self, keys: Array, valid: Array, rng: Array) -> IVFState:
+        """K-means over live keys; bucket table with static capacity.
+
+        Overflowing buckets drop the farthest members (recall loss is
+        measured in tests against the exact index) — the static-shape price
+        of TPU-friendliness, and the analogue of HNSW's bounded degree M.
+        """
+        n, d = keys.shape
+        c = self.ncentroids
+        # init: random valid rows (fall back to arbitrary rows if few valid)
+        p = valid.astype(jnp.float32) + 1e-6
+        init_idx = jax.random.choice(rng, n, shape=(c,), replace=True, p=p / p.sum())
+        centroids = l2_normalize(keys[init_idx])
+
+        def step(centroids, _):
+            sims = jnp.einsum("nd,cd->nc", keys, centroids)
+            assign = jnp.argmax(sims, axis=-1)
+            onehot = jax.nn.one_hot(assign, c, dtype=jnp.float32)
+            onehot = onehot * valid[:, None]
+            sums = jnp.einsum("nc,nd->cd", onehot, keys)
+            counts = jnp.sum(onehot, axis=0)[:, None]
+            new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), centroids)
+            return l2_normalize(new), None
+
+        centroids, _ = jax.lax.scan(step, centroids, None, length=self.kmeans_iters)
+
+        sims = jnp.einsum("nd,cd->nc", keys, centroids)
+        sims = jnp.where(valid[:, None], sims, NEG_INF)
+        assign = jnp.argmax(sims, axis=-1)           # (N,)
+        member_sim = jnp.max(sims, axis=-1)          # (N,)
+
+        # Build padded buckets: for each centroid take its top-cap members.
+        # score matrix (C, N): member_sim where assigned, else -inf
+        belong = jax.nn.one_hot(assign, c, dtype=bool).T  # (C, N)
+        belong = belong & valid[None, :]
+        member_scores = jnp.where(belong, member_sim[None, :], NEG_INF)
+        top_scores, top_idx = jax.lax.top_k(member_scores, min(self.bucket_cap, n))
+        cap = self.bucket_cap
+        if top_idx.shape[1] < cap:  # pad if slab smaller than bucket cap
+            pad = cap - top_idx.shape[1]
+            top_idx = jnp.pad(top_idx, ((0, 0), (0, pad)), constant_values=0)
+            top_scores = jnp.pad(top_scores, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        bucket_valid = top_scores > NEG_INF
+        buckets = jnp.where(bucket_valid, top_idx, -1).astype(jnp.int32)
+        return IVFState(centroids=centroids, buckets=buckets, bucket_valid=bucket_valid)
+
+    def search(self, ivf: IVFState, queries: Array, keys: Array, valid: Array
+               ) -> tuple[Array, Array]:
+        """(B,d) -> (scores (B,k), slot indices (B,k)). Probes nprobe buckets."""
+        q = l2_normalize(queries)
+        csims = jnp.einsum("bd,cd->bc", q, ivf.centroids)      # (B, C)
+        _, probe = jax.lax.top_k(csims, min(self.nprobe, self.ncentroids))  # (B, P)
+        cand = ivf.buckets[probe]          # (B, P, cap)
+        cand_ok = ivf.bucket_valid[probe]  # (B, P, cap)
+        b = q.shape[0]
+        cand_flat = cand.reshape(b, -1)
+        ok_flat = cand_ok.reshape(b, -1)
+        safe = jnp.maximum(cand_flat, 0)
+        cand_keys = keys[safe]                                  # (B, M, d)
+        sims = jnp.einsum("bd,bmd->bm", q, cand_keys)
+        alive = valid[safe] & ok_flat
+        sims = jnp.where(alive, sims, NEG_INF)
+        k = min(self.topk, sims.shape[-1])
+        top_s, top_m = jax.lax.top_k(sims, k)
+        top_slot = jnp.take_along_axis(cand_flat, top_m, axis=-1)
+        top_slot = jnp.where(top_s > NEG_INF, top_slot, -1)
+        return top_s, top_slot.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def exact_search_jit(index: ExactIndex, queries, keys, valid):
+    return index.search(queries, keys, valid)

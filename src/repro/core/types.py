@@ -1,0 +1,129 @@
+"""Core datatypes for the semantic cache.
+
+The cache is a *functional*, device-resident analogue of the paper's
+Redis + hnswlib stack: a fixed-capacity slab of embedding keys, response
+values and per-entry metadata (TTL deadline, validity, LRU/LFU counters),
+updated purely with ``.at[]`` so every operation is jit-able, donate-able
+and pjit-shardable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Static configuration of a semantic cache instance.
+
+    Attributes:
+      dim: embedding dimensionality (384 for MiniLM-class, 1536 for ada-002).
+      capacity: number of slab slots (paper: Redis keyspace size).
+      value_len: stored response length in tokens (fixed-width slab).
+      ttl: time-to-live in seconds (paper §2.7). ``None`` disables expiry.
+      threshold: cosine-similarity hit threshold (paper: 0.8).
+      topk: neighbours retrieved per query (paper: top-k ANN search).
+      eviction: slot-selection policy on insert: "ring" | "lru" | "lfu".
+      key_dtype: dtype of stored keys (f32 faithful; int8 = quantized variant).
+    """
+
+    dim: int = 384
+    capacity: int = 8192
+    value_len: int = 32
+    ttl: float | None = 3600.0
+    threshold: float = 0.8
+    topk: int = 4
+    eviction: str = "ring"
+    key_dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.eviction not in ("ring", "lru", "lfu"):
+            raise ValueError(f"unknown eviction policy {self.eviction!r}")
+        if self.capacity <= 0 or self.dim <= 0 or self.value_len <= 0:
+            raise ValueError("capacity, dim and value_len must be positive")
+        if not (0.0 <= self.threshold <= 1.0):
+            raise ValueError("threshold must be within [0, 1]")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CacheState:
+    """The slab. All leaves have leading dim = capacity (except scalars)."""
+
+    keys: Array        # (N, dim) normalized embeddings
+    values: Array      # (N, value_len) int32 response token ids
+    value_lens: Array  # (N,) int32 true response lengths
+    expiry: Array      # (N,) float32 absolute deadline (inf = never)
+    valid: Array       # (N,) bool slot occupied & alive
+    freq: Array        # (N,) int32 hit count since insert (LFU)
+    last_used: Array   # (N,) float32 last access time (LRU)
+    inserted_at: Array # (N,) float32 insert time
+    source_id: Array   # (N,) int32 provenance id (dataset QA id; -1 unknown)
+    ptr: Array         # () int32 ring insert pointer
+    n_inserts: Array   # () int32 total inserts (monotone clock)
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.keys.shape[1]
+
+
+def init_cache_state(config: CacheConfig) -> CacheState:
+    """Fresh, empty slab."""
+    n, d, v = config.capacity, config.dim, config.value_len
+    return CacheState(
+        keys=jnp.zeros((n, d), dtype=config.key_dtype),
+        values=jnp.zeros((n, v), dtype=jnp.int32),
+        value_lens=jnp.zeros((n,), dtype=jnp.int32),
+        expiry=jnp.full((n,), jnp.inf, dtype=jnp.float32),
+        valid=jnp.zeros((n,), dtype=bool),
+        freq=jnp.zeros((n,), dtype=jnp.int32),
+        last_used=jnp.zeros((n,), dtype=jnp.float32),
+        inserted_at=jnp.zeros((n,), dtype=jnp.float32),
+        source_id=jnp.full((n,), -1, dtype=jnp.int32),
+        ptr=jnp.zeros((), dtype=jnp.int32),
+        n_inserts=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LookupResult:
+    """Result of a batched cache lookup."""
+
+    index: Array    # (B,) int32 best slot (argmax cosine among valid+alive)
+    score: Array    # (B,) float32 best cosine similarity (-inf if cache empty)
+    hit: Array      # (B,) bool score >= threshold
+    values: Array   # (B, value_len) int32 cached response (garbage when miss)
+    value_lens: Array  # (B,) int32
+    source_id: Array   # (B,) int32 provenance of the matched entry
+    topk_index: Array  # (B, k) int32
+    topk_score: Array  # (B, k) float32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CacheStats:
+    """Running counters (the paper's Table-1 numbers are derived from these)."""
+
+    lookups: Array  # () int32 (int64 unavailable without x64)
+    hits: Array     # () int32
+    misses: Array   # () int32
+    expired_evictions: Array  # () int32
+    inserts: Array  # () int32
+
+    @staticmethod
+    def zeros() -> "CacheStats":
+        z = jnp.zeros((), dtype=jnp.int32)
+        return CacheStats(lookups=z, hits=z, misses=z, expired_evictions=z, inserts=z)
+
+    def hit_rate(self) -> Array:
+        return jnp.where(self.lookups > 0, self.hits / jnp.maximum(self.lookups, 1), 0.0)

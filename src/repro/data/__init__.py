@@ -1,0 +1,9 @@
+"""Data substrate: tokenizer, synthetic QA corpus, training pipeline."""
+from repro.data.tokenizer import HashTokenizer, PAD_ID, BOS_ID, EOS_ID
+from repro.data.qa_dataset import (CATEGORIES, QAPair, TestQuery,
+                                   build_corpus, build_test_queries,
+                                   paraphrase)
+
+__all__ = ["HashTokenizer", "PAD_ID", "BOS_ID", "EOS_ID", "CATEGORIES",
+           "QAPair", "TestQuery", "build_corpus", "build_test_queries",
+           "paraphrase"]

@@ -1,0 +1,8 @@
+"""Embedding generation (paper §2.2): hash featurizer + JAX MiniLM-class
+encoder. Both produce L2-normalized vectors compatible with the cache."""
+from repro.embedding.hash_embedder import HashEmbedder
+from repro.embedding.encoder import (EncoderConfig, MINILM_L6, encode,
+                                     init_encoder_params)
+
+__all__ = ["HashEmbedder", "EncoderConfig", "MINILM_L6", "encode",
+           "init_encoder_params"]

@@ -1,0 +1,94 @@
+"""MiniLM-class sentence-embedding encoder in JAX (the paper's "local
+ONNX model" path, §2.2).
+
+A 6-layer bidirectional transformer (384-dim, 12 heads — the
+all-MiniLM-L6-v2 geometry the paper uses for its experiments) with mean
+pooling over non-pad positions and L2 normalization, exactly the paper's
+"normalized and pooled" recipe. Weights are randomly initialized (no
+checkpoint downloads offline); the paper-metric experiments therefore use
+the deterministic ``HashEmbedder`` (DESIGN.md §9) while this module provides
+the production embedding path and is exercised by tests and the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    vocab: int = 32768
+    d_model: int = 384
+    n_layers: int = 6
+    n_heads: int = 12
+    d_ff: int = 1536
+    max_len: int = 256
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+MINILM_L6 = EncoderConfig()
+
+
+def init_encoder_params(rng: Array, cfg: EncoderConfig = MINILM_L6) -> dict:
+    ks = jax.random.split(rng, 8)
+    d, ff, l = cfg.d_model, cfg.d_ff, cfg.n_layers
+
+    def nrm(key, shape, scale):
+        return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+    return {
+        "embed": nrm(ks[0], (cfg.vocab, d), 0.02),
+        "pos_embed": nrm(ks[1], (cfg.max_len, d), 0.02),
+        "blocks": {
+            "norm1": jnp.ones((l, d)),
+            "wqkv": nrm(ks[2], (l, d, 3 * d), d ** -0.5),
+            "wo": nrm(ks[3], (l, d, d), d ** -0.5),
+            "norm2": jnp.ones((l, d)),
+            "w1": nrm(ks[4], (l, d, ff), d ** -0.5),
+            "w2": nrm(ks[5], (l, ff, d), ff ** -0.5),
+        },
+        "final_norm": jnp.ones((d,)),
+    }
+
+
+def encode(params: dict, tokens: Array, lengths: Array,
+           cfg: EncoderConfig = MINILM_L6) -> Array:
+    """tokens (B, L) int32, lengths (B,) -> (B, d) unit embeddings."""
+    b, l = tokens.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    mask = jnp.arange(l)[None, :] < lengths[:, None]          # (B, L)
+    x = params["embed"][tokens] + params["pos_embed"][:l][None]
+
+    def body(x, lp):
+        xn = rms_norm(x, lp["norm1"])
+        qkv = jnp.einsum("bld,de->ble", xn, lp["wqkv"])
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, l, h, hd)
+        k = k.reshape(b, l, h, hd)
+        v = v.reshape(b, l, h, hd)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd ** 0.5)
+        s = jnp.where(mask[:, None, None, :], s, -1e30)       # bidirectional
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, l, cfg.d_model)
+        x = x + jnp.einsum("bld,de->ble", o, lp["wo"])
+        xn = rms_norm(x, lp["norm2"])
+        y = jnp.einsum("bld,df->blf", xn, lp["w1"])
+        y = jnp.einsum("blf,fd->bld", jax.nn.gelu(y), lp["w2"])
+        return x + y, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"])
+    # mean pooling over valid positions + L2 norm (paper §2.2)
+    m = mask[..., None].astype(x.dtype)
+    pooled = jnp.sum(x * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    return pooled / jnp.maximum(
+        jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-12)

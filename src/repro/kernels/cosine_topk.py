@@ -1,0 +1,202 @@
+"""Fused cosine-similarity + top-k Pallas TPU kernel — the scoring hot-spot.
+
+This is the TPU-native replacement for the paper's HNSW search (DESIGN.md §3):
+one pass over the cache slab, blocked through VMEM, with the similarity GEMM
+on the MXU and a running top-k merge held in VMEM across grid steps.
+
+Tiling:
+  grid = (B/BB, N/BN); the N axis is the minor (sequential) axis, so the
+  output blocks (BB, k) stay resident in VMEM and accumulate the running
+  top-k while key blocks (BN, d) stream HBM -> VMEM.
+
+  BB=128, BN=512, d<=1536  ->  VMEM working set per step:
+    keys  512 x 1536 x 4B = 3.0 MiB
+    q     128 x 1536 x 4B = 0.75 MiB
+    scores 128 x 512 x 4B = 0.25 MiB            << 16 MiB VMEM/core
+  The GEMM contraction dim (d: 384/768/1536) and BN are multiples of 128,
+  keeping the MXU systolic array fully tiled.
+
+Top-k strategy: ``k`` is tiny (<=8). A k-step unrolled argmax-and-suppress
+over the (BB, BN) score block is pure VPU work and avoids any sort network;
+the per-block winners then merge with the resident (BB, k) running set via
+one more k-step selection over the concatenated (BB, 2k) candidates.
+
+Validity/TTL masking is fused: the ``valid`` column (f32 0/1, shaped (N, 1)
+to satisfy TPU >=2D tiling) rides in with each key block and masked slots
+score -inf — the kernel-level analogue of Redis lazy expiry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+NEG_INF = -3.0e38  # finite -inf stand-in (python float: not a traced const)
+
+
+def _iter_topk(scores: Array, ids: Array, k: int) -> tuple[Array, Array]:
+    """k-step argmax-and-suppress. scores (B, M) f32, ids (B, M) i32."""
+    b, m = scores.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (b, m), 1)
+    out_s, out_i = [], []
+    for _ in range(k):
+        best = jnp.max(scores, axis=1)
+        arg = jnp.argmax(scores, axis=1).astype(jnp.int32)
+        sel = jnp.take_along_axis(ids, arg[:, None], axis=1)[:, 0]
+        out_s.append(best)
+        out_i.append(jnp.where(best > NEG_INF, sel, -1))
+        scores = jnp.where(cols == arg[:, None], NEG_INF, scores)
+    return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)
+
+
+def _cosine_topk_kernel(q_ref, k_ref, valid_ref, ts_ref, ti_ref, *,
+                        k: int, block_n: int, dequant: bool,
+                        scale_ref=None):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        ts_ref[...] = jnp.full_like(ts_ref, NEG_INF)
+        ti_ref[...] = jnp.full_like(ti_ref, -1)
+
+    q = q_ref[...]                      # (BB, d) f32
+    kb = k_ref[...]                     # (BN, d) f32|bf16|int8
+    if dequant:
+        kb = kb.astype(jnp.float32) * scale_ref[...]  # (BN,1) per-row scale
+    # MXU GEMM; contraction over d.
+    s = jax.lax.dot_general(
+        q, kb.astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (BB, BN)
+    vmask = valid_ref[...]              # (BN, 1) f32 0/1
+    s = jnp.where((vmask[:, 0] > 0.5)[None, :], s, NEG_INF)
+
+    base = j * block_n
+    bb = s.shape[0]
+    gids = base + jax.lax.broadcasted_iota(jnp.int32, (bb, s.shape[1]), 1)
+    blk_s, blk_i = _iter_topk(s, gids, k)
+
+    run_s, run_i = ts_ref[...], ti_ref[...]
+    cand_s = jnp.concatenate([run_s, blk_s], axis=1)   # (BB, 2k)
+    cand_i = jnp.concatenate([run_i, blk_i], axis=1)
+    new_s, new_i = _iter_topk(cand_s, cand_i, k)
+    ts_ref[...] = new_s
+    ti_ref[...] = new_i
+
+
+def _pad_to(x: Array, n: int, axis: int, fill) -> Array:
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_b", "block_n",
+                                             "interpret"))
+def cosine_topk_pallas(queries: Array, keys: Array, valid: Array, *,
+                       k: int = 4, block_b: int = 128, block_n: int = 512,
+                       interpret: bool = False) -> tuple[Array, Array]:
+    """Fused masked cosine top-k. See module docstring for the contract.
+
+    queries (B, d) f32 normalized; keys (N, d); valid (N,) bool.
+    Returns (scores (B, k), indices (B, k) int32, -1 where masked/empty).
+    """
+    b, d = queries.shape
+    n = keys.shape[0]
+    bb = min(block_b, max(8, b))
+    bn = min(block_n, n)
+    # pad to tile multiples; padded keys are masked invalid
+    b_pad = -(-b // bb) * bb
+    n_pad = -(-n // bn) * bn
+    q = _pad_to(queries.astype(jnp.float32), b_pad, 0, 0.0)
+    kk = _pad_to(keys, n_pad, 0, 0.0)
+    vm = _pad_to(valid.astype(jnp.float32)[:, None], n_pad, 0, 0.0)
+
+    grid = (b_pad // bb, n_pad // bn)
+    kernel = functools.partial(
+        _cosine_topk_kernel, k=k, block_n=bn, dequant=False)
+    ts, ti = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((b_pad, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, kk, vm)
+    ts = jnp.where(ts <= NEG_INF, -jnp.inf, ts)
+    return ts[:b], ti[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_b", "block_n",
+                                             "interpret"))
+def quant_cosine_topk_pallas(queries: Array, keys_q: Array, scales: Array,
+                             valid: Array, *, k: int = 4, block_b: int = 128,
+                             block_n: int = 512, interpret: bool = False
+                             ) -> tuple[Array, Array]:
+    """int8-slab variant: keys int8 + per-row f32 scale, dequant in VMEM.
+
+    Cuts slab HBM traffic 4x vs f32 keys (the lookup is memory-bound at
+    large N — see EXPERIMENTS.md §Perf); dequant happens after the DMA, on
+    the block in VMEM, so the MXU still sees f32 operands.
+    """
+    b, d = queries.shape
+    n = keys_q.shape[0]
+    bb = min(block_b, max(8, b))
+    bn = min(block_n, n)
+    b_pad = -(-b // bb) * bb
+    n_pad = -(-n // bn) * bn
+    q = _pad_to(queries.astype(jnp.float32), b_pad, 0, 0.0)
+    kk = _pad_to(keys_q, n_pad, 0, 0)
+    sc = _pad_to(scales[:, None], n_pad, 0, 0.0)
+    vm = _pad_to(valid.astype(jnp.float32)[:, None], n_pad, 0, 0.0)
+
+    grid = (b_pad // bb, n_pad // bn)
+
+    def kernel(q_ref, k_ref, s_ref, valid_ref, ts_ref, ti_ref):
+        _cosine_topk_kernel(q_ref, k_ref, valid_ref, ts_ref, ti_ref,
+                            k=k, block_n=bn, dequant=True, scale_ref=s_ref)
+
+    ts, ti = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((b_pad, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, kk, sc, vm)
+    ts = jnp.where(ts <= NEG_INF, -jnp.inf, ts)
+    return ts[:b], ti[:b]
+
+
+def quantize_keys(keys: Array) -> tuple[Array, Array]:
+    """Symmetric per-row int8 quantization: keys ≈ q * scale."""
+    absmax = jnp.max(jnp.abs(keys), axis=1)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(keys / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)

@@ -1,0 +1,54 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``cosine_topk`` picks the execution path:
+  * TPU backend  -> compiled Pallas kernel,
+  * anything else -> interpret-mode only when explicitly requested
+    (``REPRO_PALLAS_INTERPRET=1``; it is Python-slow and meant for tests),
+    otherwise the jnp oracle, which XLA fuses perfectly well on CPU.
+The numerical contract is ``repro.kernels.ref``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cosine_topk import (cosine_topk_pallas,
+                                       quant_cosine_topk_pallas,
+                                       quantize_keys)
+
+Array = jax.Array
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret_requested() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def cosine_topk(queries: Array, keys: Array, valid: Array, *, k: int = 4
+                ) -> tuple[Array, Array]:
+    """Masked cosine top-k with automatic backend dispatch."""
+    if _use_pallas():
+        return cosine_topk_pallas(queries, keys, valid, k=k)
+    if _interpret_requested():
+        return cosine_topk_pallas(queries, keys, valid, k=k, interpret=True)
+    return ref.cosine_topk_ref(queries, keys, valid, k)
+
+
+def quant_cosine_topk(queries: Array, keys_q: Array, scales: Array,
+                      valid: Array, *, k: int = 4) -> tuple[Array, Array]:
+    """int8-slab masked cosine top-k."""
+    if _use_pallas():
+        return quant_cosine_topk_pallas(queries, keys_q, scales, valid, k=k)
+    if _interpret_requested():
+        return quant_cosine_topk_pallas(queries, keys_q, scales, valid, k=k,
+                                        interpret=True)
+    return ref.quant_cosine_topk_ref(queries, keys_q, scales, valid, k)
+
+
+__all__ = ["cosine_topk", "quant_cosine_topk", "quantize_keys"]

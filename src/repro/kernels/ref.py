@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the numerical contract; kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these functions (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+def cosine_topk_ref(queries: Array, keys: Array, valid: Array, k: int
+                    ) -> tuple[Array, Array]:
+    """Exact masked cosine top-k.
+
+    Args:
+      queries: (B, d) float32, assumed L2-normalized.
+      keys: (N, d) float or quantized-dequantized values, normalized.
+      valid: (N,) bool aliveness mask.
+      k: neighbours to return.
+    Returns:
+      (scores (B, k) f32 desc-sorted, indices (B, k) int32; -1 where masked).
+    """
+    scores = jnp.einsum("bd,nd->bn", queries, keys.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+    vals, idx = jax.lax.top_k(scores, k)
+    idx = jnp.where(vals > NEG_INF, idx, -1)
+    return vals, idx.astype(jnp.int32)
+
+
+def quant_cosine_topk_ref(queries: Array, keys_q: Array, scales: Array,
+                          valid: Array, k: int) -> tuple[Array, Array]:
+    """int8-quantized scoring oracle: dequantize then exact top-k.
+
+    keys_q: (N, d) int8; scales: (N,) f32 per-row dequant scale.
+    """
+    keys = keys_q.astype(jnp.float32) * scales[:, None]
+    return cosine_topk_ref(queries, keys, valid, k)
+
+
+def flash_attention_ref(q: Array, kk: Array, v: Array, *, causal: bool = True,
+                        window: int | None = None, scale: float | None = None
+                        ) -> Array:
+    """Blockwise-attention oracle: plain softmax attention.
+
+    Shapes: q (B, Lq, H, D), kk/v (B, Lk, H, D) — same head count (callers
+    expand GQA groups before the kernel). Supports causal & sliding-window
+    masks with the convention that query position i attends to key positions
+    ``max(0, i - window + 1) .. i`` (absolute offset = Lk - Lq aligns ends).
+    """
+    b, lq, h, d = q.shape
+    lk = kk.shape[1]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(lq)[:, None] + (lk - lq)
+    kpos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v).astype(q.dtype)

@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS at import — import it only in
+a dedicated process (``python -m repro.launch.dryrun``)."""
+from repro.launch.mesh import (data_axes_of, make_local_mesh,
+                               make_production_mesh, model_axes_of)
+
+__all__ = ["make_production_mesh", "make_local_mesh", "data_axes_of",
+           "model_axes_of"]

@@ -1,0 +1,366 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) pair.
+
+THE FIRST TWO LINES below must run before any other import — jax locks the
+device count on first initialization, and the production meshes need 512
+placeholder host devices.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHITECTURES, INPUT_SHAPES, get_arch, get_shape
+from repro.core.cache import SemanticCache
+from repro.core.distributed import DistributedCache
+from repro.core.types import CacheConfig
+from repro.launch import sharding as shlib
+from repro.launch.hlo_analysis import collective_stats, op_histogram
+from repro.launch.mesh import (data_axes_of, make_production_mesh,
+                               model_axes_of)
+from repro.launch.roofline import derive
+from repro.models.model import Model
+from repro.training.optimizer import AdamWConfig, adamw_update, init_adamw
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../benchmarks/artifacts/dryrun")
+
+ADAMW = AdamWConfig()
+
+
+def _named(mesh, spec_tree):
+    is_p = lambda x: isinstance(x, P) or x is None
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()),
+        spec_tree, is_leaf=is_p)
+
+
+def build_fn_and_args(arch_name: str, shape_name: str, mesh, variant: str = ""):
+    """Returns (jitted_fn, args_SDS_tuple) for one (arch, shape, mesh).
+
+    ``variant`` selects §Perf optimization knobs: "attn" = explicit attention
+    sharding constraints; "attn-sp" = + sequence-parallel residuals.
+    """
+    config = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    dp = data_axes_of(mesh)
+    mp = model_axes_of(mesh)
+    remat_policy = "full"
+    if "dots" in variant:
+        remat_policy = "dots"
+    elif "noremat" in variant:
+        remat_policy = "none"
+    model = Model(config, mesh=mesh, data_axes=dp, model_axes=mp,
+                  opt_attn_sharding="attn" in variant,
+                  opt_seq_parallel="sp" in variant,
+                  remat_policy=remat_policy)
+
+    pspec = shlib.param_pspecs(config, dp)
+    params_sds = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0)))
+    in_specs = shlib.input_specs(config, shape)
+    bspecs = shlib.batch_pspecs(config, shape, dp)
+
+    if shape.kind == "train":
+        opt_sds = jax.eval_shape(lambda p: init_adamw(p), params_sds)
+        ospec = shlib.opt_pspecs(pspec)
+
+        def train_step(params, opt_state, batch):
+            def loss(p):
+                return model.loss_fn(p, batch["tokens"],
+                                     prefix_emb=batch.get("prefix_emb"),
+                                     remat=True)
+            loss_v, grads = jax.value_and_grad(loss)(params)
+            params, opt_state, metrics = adamw_update(
+                ADAMW, params, grads, opt_state)
+            return params, opt_state, loss_v
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(_named(mesh, pspec), _named(mesh, ospec),
+                          _named(mesh, bspecs)),
+            out_shardings=(_named(mesh, pspec), _named(mesh, ospec),
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0, 1))
+        return fn, (params_sds, opt_sds, in_specs)
+
+    if shape.kind == "prefill":
+        cache_size = shape.seq_len
+
+        def prefill(params, batch):
+            logits, caches, _ = model.forward(
+                params, batch["tokens"],
+                prefix_emb=batch.get("prefix_emb"),
+                collect_cache=True, cache_size=cache_size,
+                logits_last_only=True)
+            return logits, caches
+
+        cache_spec = shlib.decode_cache_pspecs(config, shape.global_batch, dp)
+        out_spec = (NamedSharding(mesh, P(dp if _div(shape.global_batch, mesh, dp)
+                                          else None, None, None)),
+                    _named(mesh, cache_spec))
+        fn = jax.jit(prefill,
+                     in_shardings=(_named(mesh, pspec), _named(mesh, bspecs)),
+                     out_shardings=out_spec)
+        return fn, (params_sds, in_specs)
+
+    # decode
+    kvq = "kvq" in variant
+    cache_sds = shlib.decode_cache_specs(config, shape, quantized=kvq)
+    cache_spec = shlib.decode_cache_pspecs(config, shape.global_batch, dp,
+                                           quantized=kvq)
+    bspec = dp if _div(shape.global_batch, mesh, dp) else None
+
+    def decode(params, caches, batch):
+        logits, caches = model.decode_step(params, caches, batch["tokens"])
+        return logits, caches
+
+    ndim_logits = 4 if config.n_codebooks > 1 else 3
+    logits_spec = NamedSharding(mesh, P(bspec, *([None] * (ndim_logits - 1))))
+    fn = jax.jit(decode,
+                 in_shardings=(_named(mesh, pspec), _named(mesh, cache_spec),
+                               _named(mesh, {"tokens": P(bspec, None, None)
+                                             if config.n_codebooks > 1
+                                             else P(bspec, None)})),
+                 out_shardings=(logits_spec, _named(mesh, cache_spec)),
+                 donate_argnums=(1,))
+    return fn, (params_sds, cache_sds, in_specs)
+
+
+def _div(n, mesh, axes):
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return n % total == 0 and n >= total
+
+
+# --------------------------------------------------------------------------- #
+# semantic-cache dry-run (the paper's technique on the production mesh)
+# --------------------------------------------------------------------------- #
+
+def build_cache_fn(mesh, *, capacity: int = 1_048_576, batch: int = 256,
+                   dim: int = 384, variant: str = ""):
+    cfg = CacheConfig(dim=dim, capacity=capacity, value_len=64, ttl=3600.0,
+                      threshold=0.8,
+                      key_dtype=jnp.int8 if "int8" in variant else jnp.float32)
+    dc = DistributedCache(SemanticCache(cfg), mesh,
+                          cache_axes=data_axes_of(mesh))
+    state_sds = jax.eval_shape(lambda: dc.cache.init()[0])
+    fn = dc.make_lookup_insert()
+    args = (state_sds,
+            jax.ShapeDtypeStruct((batch, dim), jnp.float32),
+            jax.ShapeDtypeStruct((batch, 64), jnp.int32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.float32))
+    return fn, args
+
+
+# --------------------------------------------------------------------------- #
+# artifact extraction
+# --------------------------------------------------------------------------- #
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float))}
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "temp_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def run_one(arch_name: str, shape_name: str, *, multi_pod: bool,
+            out_dir: str = ARTIFACT_DIR, verbose: bool = True,
+            variant: str = "") -> dict:
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    tag = f"{arch_name}_{shape_name}_{mesh_name}"
+    if variant:
+        tag += f"__{variant}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            art = json.load(f)
+        if art.get("ok"):
+            if verbose:
+                print(f"[skip] {tag} (cached)")
+            return art
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    config = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    art: dict = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+                 "chips": chips, "ok": False}
+    t0 = time.time()
+    art["variant"] = variant
+    try:
+        fn, args = build_fn_and_args(arch_name, shape_name, mesh, variant)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = _cost_dict(compiled)
+        mem = _memory_dict(compiled)
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        coll = collective_stats(hlo)
+        hist = op_histogram(hlo)
+
+        from repro.launch.roofline import (analytic_flops,
+                                           analytic_hbm_bytes_per_chip)
+        from repro.launch.sharding import decode_cache_size
+        n_mp = mesh.shape["model"]
+        n_dp = chips // n_mp
+        csize = decode_cache_size(config, shape) if shape.kind == "decode" \
+            else None
+        a_flops = analytic_flops(config, shape, cache_size=csize)
+        a_bytes = analytic_hbm_bytes_per_chip(
+            config, shape, n_dp, n_mp, cache_size=csize,
+            kv_bytes=1 if "kvq" in variant else 2)
+        art.update(ok=True, lower_s=round(t_lower, 2),
+                   compile_s=round(t_compile, 2), cost=cost, memory=mem,
+                   collectives=coll, op_histogram=hist,
+                   flops=a_flops,                       # analytic (loop-true)
+                   bytes_accessed=a_bytes * chips,      # analytic, global
+                   hlo_flops=cost.get("flops", 0.0),    # raw XLA (loops x1)
+                   hlo_bytes=cost.get("bytes accessed", 0.0),
+                   active_params=config.active_param_count(),
+                   total_params=config.param_count())
+        rt = derive(arch_name, shape_name, shape.kind, mesh_name, chips,
+                    flops=a_flops, bytes_accessed=a_bytes * chips,
+                    collective_bytes_per_chip=coll["total_bytes"],
+                    n_active_params=config.active_param_count(),
+                    global_batch=shape.global_batch, seq_len=shape.seq_len)
+        art["roofline"] = rt.row()
+        if verbose:
+            print(f"[ok] {tag}: lower {t_lower:.1f}s compile {t_compile:.1f}s "
+                  f"flops {art['flops']:.3g} coll {coll['total_bytes']:.3g}B "
+                  f"dominant={rt.dominant}")
+    except Exception as e:  # noqa: BLE001 — record the failure in the artifact
+        art["error"] = f"{type(e).__name__}: {e}"
+        art["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[FAIL] {tag}: {art['error']}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1)
+    return art
+
+
+def run_cache(multi_pod: bool, out_dir: str = ARTIFACT_DIR,
+              variant: str = "") -> dict:
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    tag = f"semantic-cache_lookup-insert_{mesh_name}"
+    if variant:
+        tag += f"__{variant}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            art = json.load(f)
+        if art.get("ok"):
+            return art
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    art = {"arch": "semantic-cache", "shape": "lookup-insert",
+           "mesh": mesh_name, "chips": int(mesh.devices.size), "ok": False}
+    t0 = time.time()
+    try:
+        capacity, batch, dim = 1_048_576, 256, 384
+        fn, args = build_cache_fn(mesh, capacity=capacity, batch=batch,
+                                  dim=dim, variant=variant)
+        compiled = fn.lower(*args).compile()
+        cost = _cost_dict(compiled)
+        coll = collective_stats(compiled.as_text())
+        n_dp = art["chips"] // mesh.shape["model"]
+        key_bytes = 1 if "int8" in variant else 4
+        slab_local = capacity // n_dp * dim * key_bytes
+        terms = {
+            "compute_s": 2 * batch * (capacity // n_dp) * dim / 197e12,
+            "memory_s": slab_local / 819e9,
+            "collective_s": coll["total_bytes"] / 50e9,
+        }
+        terms["dominant"] = max(terms, key=lambda k: terms[k]
+                                if k.endswith("_s") else -1).replace("_s", "")
+        art.update(ok=True, compile_s=round(time.time() - t0, 2), cost=cost,
+                   collectives=coll, memory=_memory_dict(compiled),
+                   roofline=terms, variant=variant)
+        print(f"[ok] {tag}")
+    except Exception as e:  # noqa: BLE001
+        art["error"] = f"{type(e).__name__}: {e}"
+        art["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {tag}: {art['error']}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1)
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (or all)")
+    ap.add_argument("--shape", default=None, help="input shape id (or all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all 10 archs x 4 shapes (+ cache) on this mesh")
+    ap.add_argument("--cache", action="store_true",
+                    help="dry-run the distributed semantic cache step")
+    ap.add_argument("--variant", default="",
+                    help="perf variant: attn | attn-sp (see §Perf)")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    results = []
+    for mp in meshes:
+        if args.cache or args.all:
+            results.append(run_cache(mp, args.out, variant=args.variant))
+        if args.all:
+            for arch in ARCHITECTURES:
+                for shape in INPUT_SHAPES:
+                    results.append(run_one(arch, shape, multi_pod=mp,
+                                           out_dir=args.out))
+        elif args.arch:
+            shapes = list(INPUT_SHAPES) if args.shape in (None, "all") \
+                else [args.shape]
+            for shape in shapes:
+                results.append(run_one(args.arch, shape, multi_pod=mp,
+                                       out_dir=args.out,
+                                       variant=args.variant))
+    n_ok = sum(r.get("ok", False) for r in results)
+    print(f"\n{n_ok}/{len(results)} dry-runs succeeded")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Parse compiled/optimized HLO text for roofline inputs.
+
+``cost_analysis()`` reports FLOPs/bytes but (a) does not include collective
+traffic and (b) counts ``while`` bodies ONCE instead of trip_count times —
+fatal for scan-over-layers models. This module recovers honest collective
+traffic with a *loop-aware* walk of the HLO call graph:
+
+  1. split the module text into computations,
+  2. sum collective payload bytes per computation (all-gather / all-reduce /
+     reduce-scatter / all-to-all / collective-permute),
+  3. propagate along call edges (fusion ``calls=``, while ``body=`` /
+     ``condition=``, conditional branches), multiplying while bodies by the
+     ``known_trip_count`` XLA attaches to unrolled-scan loops.
+
+Per-chip traffic convention (ring algorithms): all-gather counts its result
+size, reduce-scatter its operand size, all-to-all its operand size, and
+all-reduce 2x operand (reduce-scatter + all-gather phases); the (n-1)/n
+ring factor is folded to 1.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVE_MULT = {
+    "all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[([0-9,]*)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_KIND_RE = re.compile(
+    r"=\s*(?:\([^=]*?\)|\S+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    entry: str | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_START_RE.match(line.strip())
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    comps["__entry__"] = [entry or ""]
+    return comps
+
+
+def _line_collective(line: str) -> tuple[str, int] | None:
+    """Returns (kind, payload bytes) if this line is a collective op."""
+    if "-done(" in line:        # async pair: payload counted at -start
+        if any(k + "-done(" in line for k in _COLLECTIVE_MULT):
+            return None
+    m = _KIND_RE.search(line)
+    if not m:
+        return None
+    kind = m.group(1)
+    lhs = line.split("=", 1)[0]
+    shapes = _SHAPE_RE.findall(lhs) or _SHAPE_RE.findall(line)
+    if not shapes:
+        return None
+    nbytes = max(_shape_bytes(dt, dims) for dt, dims in shapes)
+    if kind == "reduce-scatter" or kind == "all-to-all":
+        # operand is the larger side for RS; payload ~ operand size
+        rhs_shapes = _SHAPE_RE.findall(line.split("=", 1)[1])
+        if rhs_shapes:
+            nbytes = max(nbytes, max(_shape_bytes(dt, dims)
+                                     for dt, dims in rhs_shapes))
+    return kind, nbytes
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Loop-aware collective traffic per chip. See module docstring."""
+    comps = _split_computations(hlo_text)
+    entry = comps.pop("__entry__")[0]
+
+    direct_bytes: dict[str, dict[str, float]] = {}
+    direct_count: dict[str, dict[str, int]] = {}
+    edges: dict[str, list[tuple[str, float]]] = {}
+    for name, lines in comps.items():
+        db: dict[str, float] = defaultdict(float)
+        dc: dict[str, int] = defaultdict(int)
+        ed: list[tuple[str, float]] = []
+        for line in lines:
+            col = _line_collective(line)
+            if col:
+                kind, nbytes = col
+                db[kind] += nbytes * _COLLECTIVE_MULT[kind]
+                dc[kind] += 1
+            mult = 1.0
+            if "while(" in line:
+                t = _TRIP_RE.search(line)
+                mult = float(t.group(1)) if t else 1.0
+            for callee in _CALL_RE.findall(line):
+                ed.append((callee, mult))
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    ed.append((b.strip().lstrip("%"), 1.0))
+        direct_bytes[name] = db
+        direct_count[name] = dc
+        edges[name] = ed
+
+    memo: dict[str, dict[str, float]] = {}
+    cmemo: dict[str, dict[str, float]] = {}
+    visiting: set[str] = set()
+
+    def total(name: str) -> tuple[dict[str, float], dict[str, float]]:
+        if name in memo:
+            return memo[name], cmemo[name]
+        if name in visiting or name not in direct_bytes:
+            return {}, {}
+        visiting.add(name)
+        agg = defaultdict(float, direct_bytes[name])
+        cagg = defaultdict(float, direct_count[name])
+        for callee, mult in edges.get(name, ()):
+            sub_b, sub_c = total(callee)
+            for k, v in sub_b.items():
+                agg[k] += mult * v
+            for k, v in sub_c.items():
+                cagg[k] += mult * v
+        visiting.discard(name)
+        memo[name] = dict(agg)
+        cmemo[name] = dict(cagg)
+        return memo[name], cmemo[name]
+
+    agg, cagg = total(entry) if entry else ({}, {})
+    return {
+        "bytes": {k: float(v) for k, v in agg.items()},
+        "count": {k: float(v) for k, v in cagg.items()},
+        "total_bytes": float(sum(agg.values())),
+        "static_count": {
+            k: sum(direct_count[c].get(k, 0) for c in direct_count)
+            for k in _COLLECTIVE_MULT},
+    }
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "dot", "scatter", "gather",
+                                     "while", "reshape", "transpose", "copy")
+                 ) -> dict[str, int]:
+    hist: dict[str, int] = {}
+    for op in ops:
+        hist[op] = len(re.findall(rf"=\s*\S*\s*{op}\(", hlo_text))
+    return hist
+
+
+def while_trip_counts(hlo_text: str) -> list[int]:
+    return [int(m) for m in _TRIP_RE.findall(hlo_text)]

@@ -1,0 +1,69 @@
+"""Serving driver: ``python -m repro.launch.serve [--backend sim|model]``.
+
+Runs the full GPT-Semantic-Cache serving system: warm the cache with the
+QA corpus, stream the 2,000-test-query workload through the CachedEngine,
+and print the paper's metrics. ``--backend model`` places a real (reduced)
+architecture behind the cache; ``--backend sim`` uses the simulated LLM
+API with the paper-style latency/cost model.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_arch
+from repro.core.types import CacheConfig
+from repro.data.qa_dataset import build_corpus, build_test_queries
+from repro.data.tokenizer import HashTokenizer
+from repro.serving import (CachedEngine, ModelBackend, Request,
+                           SimulatedLLMBackend)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("sim", "model"), default="sim")
+    ap.add_argument("--arch", default="yi-6b",
+                    help="arch for --backend model (reduced variant)")
+    ap.add_argument("--corpus", type=int, default=2000,
+                    help="QA pairs per category")
+    ap.add_argument("--queries", type=int, default=500,
+                    help="test queries per category")
+    ap.add_argument("--threshold", type=float, default=0.8)
+    ap.add_argument("--ttl", type=float, default=None)
+    ap.add_argument("--batch", type=int, default=128)
+    args = ap.parse_args()
+
+    pairs = build_corpus(args.corpus, seed=0)
+    queries = build_test_queries(pairs, n_per_category=args.queries, seed=1)
+    by_id = {p.qa_id: p for p in pairs}
+
+    def judge(req, sid):
+        return sid >= 0 and sid in by_id and \
+            by_id[sid].semantic_key == req.semantic_key
+
+    if args.backend == "sim":
+        backend = SimulatedLLMBackend(pairs)
+    else:
+        import jax
+        from repro.models.model import Model
+        config = get_arch(args.arch).reduced()
+        model = Model(config)
+        params = model.init_params(jax.random.PRNGKey(0))
+        backend = ModelBackend(model, params,
+                               HashTokenizer(vocab_size=config.vocab))
+
+    cfg = CacheConfig(dim=384, capacity=max(16384, 8 * args.corpus),
+                      value_len=48, ttl=args.ttl, threshold=args.threshold)
+    engine = CachedEngine(cfg, backend, judge=judge, batch_size=args.batch)
+
+    print(f"warming cache with {len(pairs)} QA pairs ...")
+    engine.warm(pairs)
+    print(f"serving {len(queries)} queries ...")
+    engine.process([Request(query=q.query, category=q.category,
+                            source_id=q.source_id,
+                            semantic_key=q.semantic_key) for q in queries])
+    print(json.dumps(engine.metrics.summary(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

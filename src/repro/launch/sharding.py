@@ -1,0 +1,182 @@
+"""PartitionSpecs for every pytree the dry-run lowers (DESIGN.md §5).
+
+Conventions:
+  * weights shard their *fused feature* dim over ``model`` (always divisible,
+    unlike head counts: hymba 25H/5KV, qwen2-vl 2KV ...);
+  * embeddings/heads shard the (padded) vocab over ``model``;
+  * batch shards over the data axes (``("pod","data")`` multi-pod);
+  * decode KV caches shard batch over data and *sequence over model*
+    (context-parallel decode — kv_heads are often < 16);
+  * SSM parameters and states replicate over ``model`` (mamba2 is 130M;
+    SSD head counts don't divide 16 — recorded in DESIGN.md §4);
+  * the semantic-cache slab shards capacity over data (core/distributed.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.attention import KVCache
+from repro.models.model import DecodeCaches, Model
+from repro.models.ssm import SSMState, ssm_dims
+from repro.training.optimizer import AdamWState
+
+
+def param_pspecs(config: ModelConfig, dp: tuple[str, ...]) -> dict:
+    """PartitionSpec pytree mirroring Model.init_params."""
+    rep = P()
+    specs: dict = {"final_norm": rep}
+    if config.n_codebooks > 1:
+        specs["embed"] = P(None, "model", None)
+        specs["lm_head"] = P(None, None, "model")
+    else:
+        specs["embed"] = P("model", None)
+        specs["lm_head"] = P(None, "model")
+    if config.n_prefix > 0:
+        specs["prefix_proj"] = P(None, "model")
+    if config.n_meta_tokens > 0:
+        specs["meta_tokens"] = rep
+
+    blocks: dict = {}
+    if config.has_attention:
+        blocks["norm1"] = rep
+        blocks["wq"] = P(None, None, None, "model")
+        blocks["wk"] = P(None, None, None, "model")
+        blocks["wv"] = P(None, None, None, "model")
+        blocks["wo"] = P(None, None, "model", None)
+    if config.has_ssm:
+        if not config.has_attention:
+            blocks["norm1"] = rep
+        blocks["ssm"] = {k: rep for k in
+                         ("in_proj", "conv_w", "conv_b", "dt_bias", "a_log",
+                          "d_skip", "norm_w", "out_proj")}
+    model = Model(config)
+    if model.n_mlp_slots > 0:
+        blocks["norm2"] = rep
+        blocks["mlp_gate"] = P(None, None, None, "model")
+        blocks["mlp_up"] = P(None, None, None, "model")
+        blocks["mlp_down"] = P(None, None, "model", None)
+    if config.is_moe:
+        blocks["moe_norm"] = rep
+        blocks["router"] = rep
+        blocks["moe_gate"] = P(None, None, None, "model")
+        blocks["moe_up"] = P(None, None, None, "model")
+        blocks["moe_down"] = P(None, None, "model", None)
+    specs["blocks"] = blocks
+    return specs
+
+
+def opt_pspecs(param_specs: dict) -> AdamWState:
+    """AdamW moments inherit the parameter shardings (specs are immutable,
+    sharing the same pytree is safe)."""
+    return AdamWState(step=P(), m=param_specs, v=param_specs)
+
+
+def batch_pspecs(config: ModelConfig, shape: InputShape, dp: tuple[str, ...]):
+    """Input shardings for (tokens[, prefix_emb])."""
+    bspec = dp if _divisible(shape.global_batch, dp) else None
+    tok = P(bspec, None, None) if config.n_codebooks > 1 else P(bspec, None)
+    if config.n_prefix > 0:
+        return {"tokens": tok, "prefix_emb": P(bspec, None, None)}
+    return {"tokens": tok}
+
+
+def _divisible(n: int, axes: tuple[str, ...], mesh=None) -> bool:
+    # conservative static check against the production axis sizes
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    total = 1
+    for a in axes or ():
+        total *= sizes[a]
+    return axes is not None and n % total == 0 and n >= total
+
+
+def decode_cache_pspecs(config: ModelConfig, batch: int, dp: tuple[str, ...],
+                        quantized: bool = False) -> DecodeCaches:
+    bspec = dp if _divisible(batch, dp) else None
+    kv = None
+    if config.has_attention:
+        scale_spec = P(None, bspec, "model", None) if quantized else P()
+        kv = KVCache(
+            k=P(None, bspec, "model", None, None),
+            v=P(None, bspec, "model", None, None),
+            slot_pos=P(), pos=P(),
+            k_scale=scale_spec, v_scale=scale_spec)
+    ssm = None
+    if config.has_ssm:
+        ssm = SSMState(conv=P(None, bspec, None, None),
+                       ssd=P(None, bspec, None, None, None))
+    return DecodeCaches(kv=kv, ssm=ssm)
+
+
+# --------------------------------------------------------------------------- #
+# ShapeDtypeStruct stand-ins (no allocation — the dry-run's only inputs)
+# --------------------------------------------------------------------------- #
+
+def input_specs(config: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for every model input of this (arch, shape)."""
+    b, s = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if shape.kind in ("train", "prefill"):
+        text_len = s - config.n_prefix
+        if config.n_codebooks > 1:
+            out["tokens"] = jax.ShapeDtypeStruct(
+                (b, text_len, config.n_codebooks), jnp.int32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, text_len), jnp.int32)
+        if config.n_prefix > 0:
+            out["prefix_emb"] = jax.ShapeDtypeStruct(
+                (b, config.n_prefix, config.d_model), jnp.float32)
+    else:  # decode
+        if config.n_codebooks > 1:
+            out["tokens"] = jax.ShapeDtypeStruct(
+                (b, 1, config.n_codebooks), jnp.int32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return out
+
+
+def decode_cache_size(config: ModelConfig, shape: InputShape) -> int:
+    """KV cache length for a decode shape.
+
+    decode_32k keeps the full 32k context. long_500k uses the sub-quadratic
+    variant: SSM archs have no KV at all; attention archs fall back to the
+    sliding-window ring (long_context_window) — the memory-bounded design
+    that makes 524k context feasible (DESIGN.md §4).
+    """
+    if shape.name == "long_500k":
+        return min(config.long_context_window, shape.seq_len)
+    return shape.seq_len
+
+
+def decode_cache_specs(config: ModelConfig, shape: InputShape,
+                       quantized: bool = False) -> DecodeCaches:
+    """ShapeDtypeStructs for the decode caches at ``pos = seq_len - 1``."""
+    b = shape.global_batch
+    size = decode_cache_size(config, shape)
+    dt = jnp.bfloat16 if config.dtype == "bfloat16" else jnp.float32
+    kv = None
+    if config.has_attention:
+        kv_shape = (config.n_layers, b, size, config.n_kv_heads,
+                    config.head_dim)
+        kdt = jnp.int8 if quantized else dt
+        sc_shape = kv_shape[:-1] if quantized else (0,)
+        kv = KVCache(
+            k=jax.ShapeDtypeStruct(kv_shape, kdt),
+            v=jax.ShapeDtypeStruct(kv_shape, kdt),
+            slot_pos=jax.ShapeDtypeStruct((size,), jnp.int32),
+            pos=jax.ShapeDtypeStruct((), jnp.int32),
+            k_scale=jax.ShapeDtypeStruct(sc_shape, jnp.float32),
+            v_scale=jax.ShapeDtypeStruct(sc_shape, jnp.float32))
+    ssm = None
+    if config.has_ssm:
+        dims = ssm_dims(config)
+        ssm = SSMState(
+            conv=jax.ShapeDtypeStruct(
+                (config.n_layers, b, config.ssm_conv - 1, dims["conv_dim"]),
+                jnp.float32),
+            ssd=jax.ShapeDtypeStruct(
+                (config.n_layers, b, dims["nheads"], dims["headdim"],
+                 dims["state"]), jnp.float32))
+    return DecodeCaches(kv=kv, ssm=ssm)

@@ -1,0 +1,89 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--steps N]``.
+
+Trains a (reduced by default) architecture on the synthetic QA corpus with
+AdamW + cosine schedule, periodic checkpointing, and loss logging. With
+``--full`` it uses the assigned full-size config (only sensible on a real
+cluster; on CPU use the default reduced variant).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.qa_dataset import build_corpus
+from repro.data.tokenizer import HashTokenizer
+from repro.models.model import Model
+from repro.training.checkpoint import save_checkpoint
+from repro.training.optimizer import AdamWConfig, adamw_update, init_adamw
+
+
+def make_batches(tokenizer, pairs, batch: int, seq: int, vocab: int, seed=0):
+    """Pack Q+A text into fixed-length LM training rows."""
+    texts = [f"{p.question} ? {p.answer}" for p in pairs]
+    toks, _ = tokenizer.encode_batch(texts, seq)
+    toks = np.minimum(toks, vocab - 1)
+    rng = np.random.default_rng(seed)
+    while True:
+        idx = rng.integers(0, len(texts), size=batch)
+        yield jnp.asarray(toks[idx])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full-size config (cluster only)")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    config = get_arch(args.arch)
+    if not args.full:
+        config = config.reduced()
+    model = Model(config)
+    tokenizer = HashTokenizer(vocab_size=config.vocab)
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt = init_adamw(params)
+    ocfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                       total_steps=args.steps)
+
+    n_params = sum(int(np.prod(x.shape))
+                   for x in jax.tree_util.tree_leaves(params))
+    print(f"arch={config.name} params={n_params/1e6:.1f}M "
+          f"steps={args.steps} batch={args.batch} seq={args.seq}")
+
+    @jax.jit
+    def step(params, opt, tokens):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, tokens, remat=True))(params)
+        params, opt, metrics = adamw_update(ocfg, params, grads, opt)
+        return params, opt, loss, metrics
+
+    batches = make_batches(tokenizer, build_corpus(500), args.batch,
+                           args.seq, config.vocab)
+    t0 = time.time()
+    for i in range(args.steps):
+        tokens = next(batches)
+        params, opt, loss, metrics = step(params, opt, tokens)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(loss):.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, {"params": params},
+                        metadata={"arch": config.name, "steps": args.steps})
+        print(f"checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model zoo: the ten assigned architectures across six families."""
+from repro.models.model import Model, DecodeCaches
+from repro.models.attention import KVCache, blockwise_attention, init_kv_cache
+from repro.models.ssm import SSMState, init_ssm_state
+
+__all__ = ["Model", "DecodeCaches", "KVCache", "SSMState",
+           "blockwise_attention", "init_kv_cache", "init_ssm_state"]

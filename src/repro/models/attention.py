@@ -1,0 +1,273 @@
+"""Attention substrate: blockwise online-softmax attention (train/prefill)
+and single-token decode attention against full or sliding-window KV caches.
+
+One implementation serves every arch family: causal masking, GQA head
+grouping, sliding windows, attention sinks (hymba meta tokens), and both
+position conventions (RoPE applied by the caller before entry).
+
+The blockwise path is the pure-JAX mirror of ``kernels/flash_attention``:
+an outer *python* loop over query blocks (static per-block KV ranges — so
+causal/windowed dry-runs never pay for masked-out blocks) with an inner
+``lax.scan`` over exactly the KV blocks that block can see. The (Lq, Lk)
+score matrix never materializes, which is what lets prefill_32k lower with
+bounded memory on every mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _gqa_expand(h: int, hkv: int) -> int:
+    assert h % hkv == 0
+    return h // hkv
+
+
+def blockwise_attention(
+    q: Array,            # (B, Lq, H, D) — RoPE already applied
+    k: Array,            # (B, Lk, HKV, D)
+    v: Array,            # (B, Lk, HKV, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    n_sink: int = 0,
+    block_q: int = 1024,
+    block_k: int = 1024,
+    scale: float | None = None,
+) -> Array:
+    """Memory-bounded attention; query offset = Lk - Lq (ends aligned)."""
+    b, lq, h, d = q.shape
+    lk, hkv = k.shape[1], k.shape[2]
+    g = _gqa_expand(h, hkv)
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    offset = lk - lq
+
+    bq = min(block_q, lq)
+    bk = min(block_k, lk)
+    nq = -(-lq // bq)
+    nk_total = -(-lk // bk)
+    # pad seq dims to block multiples (padding keys are masked by position)
+    lq_p, lk_p = nq * bq, nk_total * bk
+    if lq_p != lq:
+        q = jnp.pad(q, ((0, 0), (0, lq_p - lq), (0, 0), (0, 0)))
+    if lk_p != lk:
+        k = jnp.pad(k, ((0, 0), (0, lk_p - lk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, lk_p - lk), (0, 0), (0, 0)))
+
+    # (B, HKV, G, Lq, D) query view grouped by kv head
+    qg = q.reshape(b, lq_p, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)      # (B, HKV, Lk, D)
+    vg = v.transpose(0, 2, 1, 3)
+
+    # A *static* (python int) window allows pruning whole KV block ranges;
+    # a traced window (per-layer table under a layer scan — hybrid archs)
+    # falls back to full block range + masking.
+    static_window = window if (window is None or isinstance(window, int)) else None
+    sink_blocks = -(-n_sink // bk) if n_sink > 0 else 0
+    out_blocks = []
+    for qi in range(nq):
+        q_lo = offset + qi * bq                  # absolute pos of first row
+        q_hi = q_lo + bq - 1
+        # static KV block range this q block can see
+        if causal:
+            end_blk = min(nk_total, -(-(q_hi + 1) // bk))
+        else:
+            end_blk = nk_total
+        if static_window is not None:
+            start_blk = max(0, (q_lo - static_window + 1) // bk)
+        else:
+            start_blk = 0
+        # attention sinks: always include blocks covering [0, n_sink)
+        ranges = []
+        if sink_blocks > 0 and start_blk > 0:
+            ranges.append((0, min(sink_blocks, start_blk)))
+        ranges.append((start_blk, max(end_blk, start_blk + 1)))
+
+        qb = jax.lax.dynamic_slice_in_dim(qg, qi * bq, bq, axis=3)  # (B,HKV,G,BQ,D)
+        qpos = q_lo + jnp.arange(bq)
+
+        m = jnp.full((b, hkv, g, bq), NEG_INF, dtype=jnp.float32)
+        l = jnp.zeros((b, hkv, g, bq), dtype=jnp.float32)
+        acc = jnp.zeros((b, hkv, g, bq, d), dtype=jnp.float32)
+
+        def kv_step(carry, ki, qb=qb, qpos=qpos):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(kg, ki * bk, bk, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(vg, ki * bk, bk, axis=2)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = ki * bk + jnp.arange(bk)
+            mask = kpos[None, :] < lk                      # clip key padding
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                wmask = kpos[None, :] > qpos[:, None] - window
+                if n_sink > 0:
+                    wmask = wmask | (kpos[None, :] < n_sink)
+                mask = mask & wmask
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        for (lo_b, hi_b) in ranges:
+            if hi_b <= lo_b:
+                continue
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m, l, acc), jnp.arange(lo_b, hi_b))
+        ob = acc / jnp.maximum(l, 1e-30)[..., None]
+        out_blocks.append(ob)
+
+    out = jnp.concatenate(out_blocks, axis=3)             # (B,HKV,G,Lq_p,D)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, lq_p, h, d)
+    return out[:, :lq].astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Decode: one new token against a KV cache.
+# --------------------------------------------------------------------------- #
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """Per-model KV cache, layers stacked on the leading axis.
+
+    Full cache:   k/v (L, B, S, HKV, D); ``slot_pos`` (S,) = absolute position
+    stored in each slot (-1 = empty). For the sliding-window variant S is the
+    window and slots are a ring buffer — slot = pos % S — so memory is O(W)
+    for the 524k-token long-context shape.
+
+    Quantized variant (§Perf pair 4): k/v int8 with per-(token, head) f32
+    scales (L, B, S, HKV) — halves decode's dominant HBM term vs bf16.
+    ``k_scale``/``v_scale`` are zero-size placeholders when unquantized
+    (keeps the pytree structure static).
+    """
+
+    k: Array
+    v: Array
+    slot_pos: Array   # (S,) int32, -1 when empty (shared across layers/batch)
+    pos: Array        # () int32: next absolute position to write
+    k_scale: Array = dataclasses.field(
+        default_factory=lambda: jnp.zeros((0,), jnp.float32))
+    v_scale: Array = dataclasses.field(
+        default_factory=lambda: jnp.zeros((0,), jnp.float32))
+
+    @property
+    def size(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def quantized(self) -> bool:
+        return self.k.dtype == jnp.int8
+
+
+def init_kv_cache(n_layers: int, batch: int, size: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16, quantized: bool = False) -> KVCache:
+    shape = (n_layers, batch, size, n_kv, head_dim)
+    if quantized:
+        return KVCache(
+            k=jnp.zeros(shape, dtype=jnp.int8),
+            v=jnp.zeros(shape, dtype=jnp.int8),
+            slot_pos=jnp.full((size,), -1, dtype=jnp.int32),
+            pos=jnp.zeros((), dtype=jnp.int32),
+            k_scale=jnp.zeros(shape[:-1], dtype=jnp.float32),
+            v_scale=jnp.zeros(shape[:-1], dtype=jnp.float32),
+        )
+    return KVCache(
+        k=jnp.zeros(shape, dtype=dtype),
+        v=jnp.zeros(shape, dtype=dtype),
+        slot_pos=jnp.full((size,), -1, dtype=jnp.int32),
+        pos=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def quantize_kv(x: Array) -> tuple[Array, Array]:
+    """Per-(…, head) symmetric int8 over the head_dim axis.
+    x (..., D) -> (int8 (..., D), scale (...))."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: Array, scale: Array, dtype=jnp.float32) -> Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def decode_attention(
+    q: Array,           # (B, 1, H, D) — RoPE applied at current position
+    k_cache: Array,     # (B, S, HKV, D) one layer's cache (new k written)
+    v_cache: Array,
+    slot_pos: Array,    # (S,) absolute positions, -1 empty
+    pos: Array,         # () current position
+    *,
+    window: int | None = None,
+    n_sink: int = 0,
+    scale: float | None = None,
+    k_scale: Array | None = None,   # (B, S, HKV) when the cache is int8
+    v_scale: Array | None = None,
+) -> Array:
+    """Single-token attention over every live cache slot (order-free:
+    the ring buffer never needs unrotating because masks use slot_pos)."""
+    if k_cache.dtype == jnp.int8:
+        k_cache = dequantize_kv(k_cache, k_scale, q.dtype)
+        v_cache = dequantize_kv(v_cache, v_scale, q.dtype)
+    b, _, h, d = q.shape
+    hkv = k_cache.shape[2]
+    g = _gqa_expand(h, hkv)
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    visible = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        wmask = slot_pos > pos - window
+        if n_sink > 0:
+            wmask = wmask | (slot_pos < n_sink)
+        visible = visible & wmask
+    s = jnp.where(visible[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def cache_write(k_cache: Array, v_cache: Array, slot_pos: Array,
+                k_new: Array, v_new: Array, pos: Array,
+                k_scale: Array | None = None, v_scale: Array | None = None):
+    """Write one token's k/v at ring slot ``pos % S`` (== pos for full cache
+    sized >= max_len). k_new/v_new: (B, 1, HKV, D).
+
+    Returns (k_cache, v_cache, slot_pos[, k_scale, v_scale]) — scales only
+    for int8 caches."""
+    size = k_cache.shape[1]
+    slot = pos % size
+    if k_cache.dtype == jnp.int8:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kq, slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vq, slot, axis=1)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, slot, axis=1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, slot, axis=1)
+        slot_pos = jax.lax.dynamic_update_slice_in_dim(
+            slot_pos, pos[None].astype(jnp.int32), slot, axis=0)
+        return k_cache, v_cache, slot_pos, k_scale, v_scale
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        slot_pos, pos[None].astype(jnp.int32), slot, axis=0)
+    return k_cache, v_cache, slot_pos, None, None

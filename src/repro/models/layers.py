@@ -1,0 +1,122 @@
+"""Shared model layers: RMSNorm, RoPE / M-RoPE, SwiGLU MLP, embeddings.
+
+Parameters are plain dict pytrees; layer weights for the whole depth are
+*stacked* on a leading layer axis and the forward pass scans over them
+(MaxText-style), keeping the HLO size O(1) in depth — essential for the
+126-layer llama3-405b dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE (standard) and M-RoPE (qwen2-vl §2.1: multimodal rotary with
+# (temporal, height, width) position triples split across head_dim sections).
+# --------------------------------------------------------------------------- #
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (..., S, H, D); positions (..., S) int32 -> rotated x."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions3: Array, theta: float,
+                sections: tuple[int, int, int]) -> Array:
+    """M-RoPE: positions3 (..., S, 3) = (t, h, w) per token.
+
+    head_dim/2 frequency slots are partitioned into three contiguous
+    sections; each section rotates by its own coordinate. Text tokens carry
+    t == h == w, which makes M-RoPE degenerate to standard RoPE for them —
+    matching Qwen2-VL's construction.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    # section id per frequency slot: 0,0,...,1,1,...,2,2
+    sec_id = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)])
+    # pick the coordinate for each slot: (..., S, D/2)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, positions3.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )
+    angles = pos * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positionize(config: ModelConfig, positions: Array) -> Array:
+    """Normalize positions to the arch's expected rank.
+
+    Standard RoPE archs take (..., S); qwen2-vl takes (..., S, 3). Text-only
+    callers pass (..., S) and we broadcast t=h=w for M-RoPE.
+    """
+    if config.mrope and positions.shape[-1] != 3:
+        positions = jnp.stack([positions] * 3, axis=-1)
+    return positions
+
+
+def rope_for(config: ModelConfig, x: Array, positions: Array) -> Array:
+    if config.mrope:
+        return apply_mrope(x, positions, config.rope_theta,
+                           config.mrope_sections)
+    return apply_rope(x, positions, config.rope_theta)
+
+
+# --------------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------------- #
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / unembedding (vocab padded for `model`-axis sharding)
+# --------------------------------------------------------------------------- #
+
+def embed_tokens(table: Array, tokens: Array) -> Array:
+    return table[tokens]
+
+
+def unembed(x: Array, head: Array, logical_vocab: int) -> Array:
+    """Project to padded vocab, mask the padding rows to -inf."""
+    logits = jnp.einsum("...d,dv->...v", x, head)
+    pad = logits.shape[-1] - logical_vocab
+    if pad > 0:
+        neg = jnp.full((pad,), -1e9, dtype=logits.dtype)
+        logits = logits.at[..., logical_vocab:].set(neg)
+    return logits

@@ -1,0 +1,663 @@
+"""Model assembly for all six assigned arch families.
+
+One ``Model`` class builds dense GQA / MoE / SSM / hybrid / audio / VLM
+backbones from a ``ModelConfig``:
+
+  * layer weights are stacked on a leading *group* axis and the forward
+    pass is a ``lax.scan`` over groups (HLO depth-independent — llama3's
+    126 layers compile as one scanned body);
+  * a group holds ``moe_interleave`` layers; for MoE archs the last slot in
+    each group is the MoE layer (llama4: dense/MoE alternation; grok: every
+    layer MoE with interleave=1);
+  * hybrid (hymba) layers run attention and SSD heads *in parallel* on the
+    same normed input, per-branch-normalized and mean-fused, with
+    ``n_meta_tokens`` learned registers prepended as attention sinks;
+  * audio (musicgen) sums ``n_codebooks`` embedding tables and emits one
+    head per codebook; vlm (qwen2-vl) consumes stub patch embeddings with
+    M-RoPE grid positions.
+
+Three entry points per model (the shapes' three workloads):
+  ``forward``      — full-sequence logits (train_4k, prefill_32k),
+  ``prefill``      — forward + KV/SSM cache construction,
+  ``decode_step``  — one token against the caches (decode_32k, long_500k).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import (KVCache, blockwise_attention, cache_write,
+                                    decode_attention, init_kv_cache)
+from repro.models.layers import rms_norm, rope_for, positionize, unembed
+from repro.models.ssm import SSMState, init_ssm_state
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecodeCaches:
+    """Everything ``decode_step`` threads through. Fields may be None-like
+    (zero-size arrays) depending on the arch family."""
+
+    kv: Optional[KVCache]
+    ssm: Optional[SSMState]
+
+
+def _dtype(config: ModelConfig):
+    return jnp.bfloat16 if config.dtype == "bfloat16" else jnp.float32
+
+
+class Model:
+    """Config-driven multi-family decoder. Stateless; params are pytrees."""
+
+    def __init__(self, config: ModelConfig, mesh=None,
+                 data_axes: tuple[str, ...] = ("data",),
+                 model_axes: tuple[str, ...] = ("model",),
+                 opt_attn_sharding: bool = False,
+                 opt_seq_parallel: bool = False,
+                 remat_policy: str = "full"):
+        self.config = config
+        self.mesh = mesh
+        self.data_axes = data_axes
+        self.model_axes = model_axes
+        # §Perf knobs (EXPERIMENTS.md): explicit sharding constraints on the
+        # attention block (kills GSPMD's speculative all-gathers in the
+        # blockwise-attention scan) and sequence-parallel residuals
+        # (Megatron-SP: halves TP activation traffic).
+        self.opt_attn_sharding = opt_attn_sharding
+        self.opt_seq_parallel = opt_seq_parallel
+        # "full" = nothing saveable (recompute everything), "dots" = save
+        # matmul outputs (no recompute of TP collectives in bwd), "none" =
+        # no remat. §Perf knob: trades HBM for recomputed FLOPs+collectives.
+        self.remat_policy = remat_policy
+        c = config
+        self.n_groups = c.n_layers // c.moe_interleave
+        self.interleave = c.moe_interleave
+        self.n_mlp_slots = (self.interleave - 1) if c.is_moe else (
+            self.interleave if c.d_ff > 0 else 0)
+
+    # ------------------------------------------------------------------ #
+    # sharding constraints (perf knobs; no-ops without a mesh)
+    # ------------------------------------------------------------------ #
+    def _constrain(self, x: Array, *spec) -> Array:
+        if self.mesh is None or not self.opt_attn_sharding:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def _sp(self, x: Array) -> Array:
+        """Sequence-parallel residual constraint (Megatron-SP): the residual
+        stream lives sequence-sharded over `model`, so each TP sublayer exits
+        through a reduce-scatter (operand counted once) instead of an
+        all-reduce (2x), and norms/adds compute on 1/TP of the tokens. GSPMD
+        inserts the matching all-gather where the next projection needs the
+        full sequence."""
+        if self.mesh is None or not self.opt_seq_parallel or x.ndim != 3:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(self._dp(), "model", None)))
+
+    def _dp(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    # ------------------------------------------------------------------ #
+    # parameter construction
+    # ------------------------------------------------------------------ #
+    def init_params(self, rng: Array) -> dict:
+        c = self.config
+        dt = _dtype(c)
+        g_cnt, i_cnt = self.n_groups, self.interleave
+        d, vp = c.d_model, c.padded_vocab
+        keys = jax.random.split(rng, 16)
+        kit = iter(keys)
+
+        def nrm(key, shape, scale):
+            return (jax.random.normal(key, shape, dtype=jnp.float32)
+                    * scale).astype(dt)
+
+        params: dict[str, Any] = {}
+        if c.n_codebooks > 1:
+            params["embed"] = nrm(next(kit), (c.n_codebooks, vp, d), 0.02)
+            params["lm_head"] = nrm(next(kit), (c.n_codebooks, d, vp), d ** -0.5)
+        else:
+            params["embed"] = nrm(next(kit), (vp, d), 0.02)
+            params["lm_head"] = nrm(next(kit), (d, vp), d ** -0.5)
+        params["final_norm"] = jnp.ones((d,), dtype=jnp.float32)
+        if c.n_prefix > 0:
+            params["prefix_proj"] = nrm(next(kit), (d, d), d ** -0.5)
+        if c.n_meta_tokens > 0:
+            params["meta_tokens"] = nrm(next(kit), (c.n_meta_tokens, d), 0.02)
+
+        blocks: dict[str, Any] = {}
+        if c.has_attention:
+            h, hkv, hd = c.n_heads, c.n_kv_heads, c.head_dim
+            blocks["norm1"] = jnp.ones((g_cnt, i_cnt, d), dtype=jnp.float32)
+            blocks["wq"] = nrm(next(kit), (g_cnt, i_cnt, d, h * hd), d ** -0.5)
+            blocks["wk"] = nrm(next(kit), (g_cnt, i_cnt, d, hkv * hd), d ** -0.5)
+            blocks["wv"] = nrm(next(kit), (g_cnt, i_cnt, d, hkv * hd), d ** -0.5)
+            blocks["wo"] = nrm(next(kit), (g_cnt, i_cnt, h * hd, d),
+                               (h * hd) ** -0.5)
+        if c.has_ssm:
+            if not c.has_attention:   # pure ssm arch: own input norm
+                blocks["norm1"] = jnp.ones((g_cnt, i_cnt, d), dtype=jnp.float32)
+            ssm_stack = []
+            srng = jax.random.split(next(kit), g_cnt * i_cnt)
+            for li in range(g_cnt * i_cnt):
+                ssm_stack.append(ssm_lib.init_ssm_params(srng[li], c, dt))
+            blocks["ssm"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs).reshape((g_cnt, i_cnt) + xs[0].shape),
+                *ssm_stack)
+        if self.n_mlp_slots > 0:
+            ff = c.d_ff
+            blocks["norm2"] = jnp.ones((g_cnt, self.n_mlp_slots, d),
+                                       dtype=jnp.float32)
+            blocks["mlp_gate"] = nrm(next(kit), (g_cnt, self.n_mlp_slots, d, ff),
+                                     d ** -0.5)
+            blocks["mlp_up"] = nrm(next(kit), (g_cnt, self.n_mlp_slots, d, ff),
+                                   d ** -0.5)
+            blocks["mlp_down"] = nrm(next(kit), (g_cnt, self.n_mlp_slots, ff, d),
+                                     ff ** -0.5)
+        if c.is_moe:
+            e, ff = c.n_experts, c.d_ff
+            blocks["moe_norm"] = jnp.ones((g_cnt, d), dtype=jnp.float32)
+            blocks["router"] = nrm(next(kit), (g_cnt, d, e), d ** -0.5)
+            blocks["moe_gate"] = nrm(next(kit), (g_cnt, e, d, ff), d ** -0.5)
+            blocks["moe_up"] = nrm(next(kit), (g_cnt, e, d, ff), d ** -0.5)
+            blocks["moe_down"] = nrm(next(kit), (g_cnt, e, ff, d), ff ** -0.5)
+        params["blocks"] = blocks
+        return params
+
+    # ------------------------------------------------------------------ #
+    # per-layer pieces
+    # ------------------------------------------------------------------ #
+    def _window_list(self) -> list[int]:
+        """Per-layer attention window; -1 = global."""
+        c = self.config
+        wins = []
+        for li in range(c.n_layers):
+            if c.arch_type == "hybrid" and c.global_attn_every:
+                w = -1 if li % c.global_attn_every == 0 else c.sliding_window
+            elif c.sliding_window:
+                w = c.sliding_window
+            else:
+                w = -1
+            wins.append(w if w is not None else -1)
+        return wins
+
+    def _window_table(self) -> jnp.ndarray:
+        """(G, I) int32 attention window per layer; -1 = global."""
+        return jnp.asarray(self._window_list(), dtype=jnp.int32).reshape(
+            self.n_groups, self.interleave)
+
+    def _uniform_window(self) -> int | None | str:
+        """The common static window if all layers agree, else 'mixed'.
+
+        Returns None for uniformly-global, an int for a uniform window, or
+        the string 'mixed' when per-layer windows differ (hymba) — mixed
+        forces the traced-window path (no static block pruning).
+        """
+        wins = set(self._window_list())
+        if len(wins) > 1:
+            return "mixed"
+        w = wins.pop()
+        return None if w < 0 else w
+
+    def _attn_seq(self, lp: dict, s: int, x: Array, positions: Array,
+                  window, n_sink: int, block_q: int, block_k: int) -> Array:
+        """Full-sequence attention sublayer for slot ``s``. x (B, L, d)."""
+        c = self.config
+        h, hkv, hd = c.n_heads, c.n_kv_heads, c.head_dim
+        b, l, d = x.shape
+        q = jnp.einsum("bld,de->ble", x, lp["wq"][s]).reshape(b, l, h, hd)
+        k = jnp.einsum("bld,de->ble", x, lp["wk"][s]).reshape(b, l, hkv, hd)
+        v = jnp.einsum("bld,de->ble", x, lp["wv"][s]).reshape(b, l, hkv, hd)
+        q = rope_for(c, q, positions)
+        k = rope_for(c, k, positions)
+        # §Perf: pin the TP layout for the attention inner loop — query heads
+        # shard over `model` (GSPMD pads non-divisible head counts), KV heads
+        # replicate (small: one AG per layer instead of per KV block).
+        dp = self._dp()
+        cache_k, cache_v = k, v
+        if self.opt_attn_sharding and hkv < h:
+            # expand KV groups so the (b,l,h,hd) -> (b,h,...) reshape keeps
+            # the head sharding (GQA group splits would break it); the
+            # expansion is a broadcast of already-replicated KV.
+            g = h // hkv
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        q = self._constrain(q, dp, None, "model", None)
+        k = self._constrain(k, dp, None, "model" if k.shape[2] == h else None,
+                            None)
+        v = self._constrain(v, dp, None, "model" if v.shape[2] == h else None,
+                            None)
+        o = blockwise_attention(q, k, v, causal=True, window=window,
+                                n_sink=n_sink, block_q=block_q, block_k=block_k)
+        o = self._constrain(o, dp, None, "model", None)
+        o = o.reshape(b, l, h * hd)
+        out = jnp.einsum("ble,ed->bld", o, lp["wo"][s])
+        out = self._sp(out) if self.opt_seq_parallel \
+            else self._constrain(out, dp, None, None)
+        return out, cache_k, cache_v
+
+    def _ffn(self, lp: dict, x: Array, s: int, is_moe_slot: bool
+             ) -> tuple[Array, Array]:
+        """FFN sublayer: dense SwiGLU or MoE. Returns (y, aux)."""
+        c = self.config
+        zero = jnp.zeros((), dtype=jnp.float32)
+        if not is_moe_slot:
+            xn = rms_norm(x, lp["norm2"][s])
+            g = jnp.einsum("bld,df->blf", xn, lp["mlp_gate"][s])
+            u = jnp.einsum("bld,df->blf", xn, lp["mlp_up"][s])
+            y = jnp.einsum("blf,fd->bld", jax.nn.silu(g) * u, lp["mlp_down"][s])
+            return self._sp(y), zero
+        xn = rms_norm(x, lp["moe_norm"])
+        b, l, d = xn.shape
+        flat = xn.reshape(b * l, d)
+        use_shard_map = False
+        if self.mesh is not None:
+            n_data = 1
+            for ax in self.data_axes:
+                n_data *= self.mesh.shape[ax]
+            # shard_map needs the token batch to split evenly over data
+            use_shard_map = (b * l) % n_data == 0 and (b * l) >= n_data
+        if use_shard_map:
+            fn = moe_lib.moe_ffn_sharded(self.mesh, self.data_axes,
+                                         self.model_axes)
+            y, aux = fn(flat, lp["router"], lp["moe_gate"], lp["moe_up"],
+                        lp["moe_down"], topk=c.moe_topk,
+                        capacity_factor=c.capacity_factor)
+        else:
+            y, aux = moe_lib.moe_ffn(flat, lp["router"], lp["moe_gate"],
+                                     lp["moe_up"], lp["moe_down"],
+                                     topk=c.moe_topk,
+                                     capacity_factor=c.capacity_factor)
+        return y.reshape(b, l, d), aux
+
+    # ------------------------------------------------------------------ #
+    # embedding / head
+    # ------------------------------------------------------------------ #
+    def _embed(self, params: dict, tokens: Array) -> Array:
+        c = self.config
+        if c.n_codebooks > 1:       # audio: tokens (B, L, C); sum codebooks
+            parts = [params["embed"][cb][tokens[..., cb]]
+                     for cb in range(c.n_codebooks)]
+            return functools.reduce(jnp.add, parts)
+        return params["embed"][tokens]
+
+    def _head(self, params: dict, x: Array) -> Array:
+        c = self.config
+        x = rms_norm(x, params["final_norm"])
+        if c.n_codebooks > 1:
+            logits = jnp.einsum("bld,cdv->blcv", x, params["lm_head"])
+            return unembed_multi(logits, c.vocab)
+        return unembed(x, params["lm_head"], c.vocab)
+
+    def _prepend_context(self, params: dict, x: Array, positions: Array,
+                         prefix_emb: Array | None):
+        """Prepend (meta tokens +) projected frontend embeddings.
+
+        Returns (x, positions, n_lead) where n_lead = prepended length.
+        positions for prepended tokens occupy 0..n_lead-1 and the supplied
+        positions are shifted up (callers pass 0-based text positions).
+        """
+        c = self.config
+        b = x.shape[0]
+        lead = []
+        if c.n_meta_tokens > 0:
+            meta = jnp.broadcast_to(params["meta_tokens"][None],
+                                    (b,) + params["meta_tokens"].shape)
+            lead.append(meta.astype(x.dtype))
+        if prefix_emb is not None:
+            proj = jnp.einsum("bpd,de->bpe", prefix_emb.astype(x.dtype),
+                              params["prefix_proj"])
+            lead.append(proj)
+        if not lead:
+            return x, positionize(c, positions), 0
+        lead_x = jnp.concatenate(lead, axis=1)
+        n_lead = lead_x.shape[1]
+        x = jnp.concatenate([lead_x, x], axis=1)
+        if c.mrope:
+            positions3 = positionize(c, positions) + n_lead
+            lead_pos = self._mrope_grid_positions(b, n_lead)
+            positions = jnp.concatenate([lead_pos, positions3], axis=1)
+        else:
+            lead_pos = jnp.broadcast_to(jnp.arange(n_lead, dtype=positions.dtype),
+                                        (b, n_lead))
+            positions = jnp.concatenate([lead_pos, positions + n_lead], axis=1)
+        return x, positions, n_lead
+
+    def _mrope_grid_positions(self, b: int, n: int) -> Array:
+        """Stub-ViT patch grid (t=0, h=row, w=col) M-RoPE positions."""
+        side = max(int(n ** 0.5), 1)
+        idx = jnp.arange(n)
+        t = jnp.zeros((n,), dtype=jnp.int32)
+        hh = (idx // side).astype(jnp.int32)
+        ww = (idx % side).astype(jnp.int32)
+        pos3 = jnp.stack([t, hh, ww], axis=-1)            # (n, 3)
+        return jnp.broadcast_to(pos3[None], (b, n, 3))
+
+    # ------------------------------------------------------------------ #
+    # full-sequence forward (train / prefill)
+    # ------------------------------------------------------------------ #
+    def forward(self, params: dict, tokens: Array, *,
+                prefix_emb: Array | None = None, collect_cache: bool = False,
+                cache_size: int | None = None, remat: bool = False,
+                logits_last_only: bool = False,
+                block_q: int = 1024, block_k: int = 1024):
+        """Returns logits (B, L_text, ...) [, caches], aux_loss.
+
+        ``logits_last_only`` computes the LM head on the final position only
+        (serving prefill: the 32k x vocab unembed would dominate otherwise).
+        """
+        c = self.config
+        b = tokens.shape[0]
+        l_text = tokens.shape[1]
+        x = self._embed(params, tokens)
+        positions = jnp.broadcast_to(jnp.arange(l_text, dtype=jnp.int32),
+                                     (b, l_text))
+        x, positions, n_lead = self._prepend_context(
+            params, x, positions, prefix_emb)
+        l_total = x.shape[1]
+        window_tbl = self._window_table()
+        uniform_win = self._uniform_window()
+        n_sink = c.n_meta_tokens
+
+        def group_body(carry, xs):
+            x, aux = carry
+            lp, wins = xs
+            new_k, new_v, new_conv, new_ssd = [], [], [], []
+            for s in range(self.interleave):
+                if uniform_win == "mixed":   # traced per-layer window
+                    win = wins[s]
+                    win_eff = jnp.where(win < 0, jnp.int32(l_total + 1), win)
+                else:                        # static: enables block pruning
+                    win_eff = uniform_win
+                if c.has_attention:
+                    xn = rms_norm(x, lp["norm1"][s])
+                    attn_out, k, v = self._attn_seq(
+                        lp, s, xn, positions, win_eff, n_sink, block_q, block_k)
+                    if c.arch_type == "hybrid":
+                        ssm_p = jax.tree_util.tree_map(lambda a: a[s], lp["ssm"])
+                        if collect_cache:
+                            ssm_out, cs, ss = ssm_lib.ssm_forward(
+                                ssm_p, xn, c, return_state=True)
+                            new_conv.append(cs)
+                            new_ssd.append(ss)
+                        else:
+                            ssm_out = ssm_lib.ssm_forward(ssm_p, xn, c)
+                        # per-branch norm then mean fusion (hymba §3)
+                        fused = 0.5 * (_branch_norm(attn_out)
+                                       + _branch_norm(ssm_out))
+                        x = self._sp(x + fused.astype(x.dtype))
+                    else:
+                        x = self._sp(x + attn_out)
+                    if collect_cache:
+                        new_k.append(k)
+                        new_v.append(v)
+                else:    # pure ssm
+                    xn = rms_norm(x, lp["norm1"][s])
+                    ssm_p = jax.tree_util.tree_map(lambda a: a[s], lp["ssm"])
+                    if collect_cache:
+                        y, cs, ss = ssm_lib.ssm_forward(
+                            ssm_p, xn, c, return_state=True)
+                        new_conv.append(cs)
+                        new_ssd.append(ss)
+                    else:
+                        y = ssm_lib.ssm_forward(ssm_p, xn, c)
+                    x = x + y
+                is_moe_slot = c.is_moe and s == self.interleave - 1
+                if is_moe_slot or self.n_mlp_slots > 0 and s < self.n_mlp_slots:
+                    y, a = self._ffn(lp, x, s, is_moe_slot)
+                    x = self._sp(x + y)
+                    aux = aux + a
+            ys = {}
+            if collect_cache and c.has_attention:
+                ys["k"] = jnp.stack(new_k)     # (I, B, L, HKV, D)
+                ys["v"] = jnp.stack(new_v)
+            if collect_cache and c.has_ssm:
+                ys["conv"] = jnp.stack(new_conv)
+                ys["ssd"] = jnp.stack(new_ssd)
+            return (x, aux), (ys or None)
+
+        body = group_body
+        if remat and self.remat_policy != "none":
+            if self.remat_policy == "dots":
+                policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            else:
+                policy = jax.checkpoint_policies.nothing_saveable
+            body = jax.checkpoint(group_body, policy=policy)
+
+        (x, aux), cache_ys = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["blocks"], window_tbl))
+
+        x_out = x[:, -1:] if logits_last_only else x[:, n_lead:]
+        logits = self._head(params, x_out)
+        if not collect_cache:
+            return logits, aux
+
+        caches = self._build_prefill_caches(cache_ys, l_total, cache_size, b)
+        return logits, caches, aux
+
+    def _build_prefill_caches(self, cache_ys, l_total: int,
+                              cache_size: int | None, b: int) -> DecodeCaches:
+        c = self.config
+        kv = None
+        if c.has_attention and cache_ys is not None:
+            ks, vs = cache_ys["k"], cache_ys["v"]  # (G, I, B, L, HKV, D)
+            ks = ks.reshape((c.n_layers,) + ks.shape[2:])
+            vs = vs.reshape((c.n_layers,) + vs.shape[2:])
+            size = cache_size or l_total
+            if size >= l_total:                # plain copy into the front
+                pad = size - l_total
+                ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                slot_pos = jnp.concatenate([
+                    jnp.arange(l_total, dtype=jnp.int32),
+                    jnp.full((pad,), -1, jnp.int32)])
+            else:                              # ring: keep the last `size`
+                slots = jnp.arange(size)
+                # position stored in ring slot i after prefilling l_total:
+                last = l_total - 1
+                pos_i = last - ((last - slots) % size)
+                take = jnp.where(pos_i >= 0, pos_i, 0)
+                ks = jnp.take(ks, take, axis=2)
+                vs = jnp.take(vs, take, axis=2)
+                slot_pos = jnp.where(pos_i >= 0, pos_i, -1).astype(jnp.int32)
+            kv = KVCache(k=ks, v=vs, slot_pos=slot_pos,
+                         pos=jnp.asarray(l_total, jnp.int32))
+        ssm = None
+        if c.has_ssm and cache_ys is not None and "conv" in cache_ys:
+            conv = cache_ys["conv"]            # (G, I, B, K-1, conv_dim)
+            ssd = cache_ys["ssd"]              # (G, I, B, H, P, N)
+            ssm = SSMState(
+                conv=conv.reshape((c.n_layers,) + conv.shape[2:]),
+                ssd=ssd.reshape((c.n_layers,) + ssd.shape[2:]))
+        return DecodeCaches(kv=kv, ssm=ssm)
+
+    # ------------------------------------------------------------------ #
+    # decode
+    # ------------------------------------------------------------------ #
+    def init_decode_caches(self, batch: int, cache_size: int,
+                           kv_quantized: bool = False) -> DecodeCaches:
+        c = self.config
+        kv = None
+        if c.has_attention:
+            kv = init_kv_cache(c.n_layers, batch, cache_size, c.n_kv_heads,
+                               c.head_dim, dtype=_dtype(c),
+                               quantized=kv_quantized)
+        ssm = init_ssm_state(c, batch) if c.has_ssm else None
+        return DecodeCaches(kv=kv, ssm=ssm)
+
+    def decode_step(self, params: dict, caches: DecodeCaches, tokens: Array
+                    ) -> tuple[Array, DecodeCaches]:
+        """One token for every sequence. tokens (B, 1) or (B, 1, C)."""
+        c = self.config
+        b = tokens.shape[0]
+        x = self._embed(params, tokens)
+        pos = caches.kv.pos if caches.kv is not None else _ssm_pos(caches)
+        positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+        positions = positionize(c, positions)
+        window_tbl = self._window_table()
+        n_sink = c.n_meta_tokens
+        cache_sz = caches.kv.size if caches.kv is not None else 0
+
+        # reshape stacked caches to groups for the scan
+        def regroup(a):
+            return a.reshape((self.n_groups, self.interleave) + a.shape[1:])
+
+        kv_quant = caches.kv is not None and caches.kv.quantized
+        xs = {"lp": params["blocks"], "win": window_tbl}
+        if caches.kv is not None:
+            xs["k"] = regroup(caches.kv.k)
+            xs["v"] = regroup(caches.kv.v)
+            if kv_quant:
+                xs["ks"] = regroup(caches.kv.k_scale)
+                xs["vs"] = regroup(caches.kv.v_scale)
+        if caches.ssm is not None:
+            xs["conv"] = regroup(caches.ssm.conv)
+            xs["ssd"] = regroup(caches.ssm.ssd)
+
+        slot_pos = caches.kv.slot_pos if caches.kv is not None else None
+
+        def group_body(x, xs):
+            lp, wins = xs["lp"], xs["win"]
+            outs = {}
+            if "k" in xs:
+                outs["k"], outs["v"] = [], []
+                if kv_quant:
+                    outs["ks"], outs["vs"] = [], []
+            if "conv" in xs:
+                outs["conv"], outs["ssd"] = [], []
+            for s in range(self.interleave):
+                win = wins[s]
+                win_eff = jnp.where(win < 0, jnp.int32(2 ** 30), win)
+                if c.has_attention:
+                    xn = rms_norm(x, lp["norm1"][s])
+                    h, hkv, hd = c.n_heads, c.n_kv_heads, c.head_dim
+                    q = jnp.einsum("bld,de->ble", xn, lp["wq"][s]
+                                   ).reshape(b, 1, h, hd)
+                    k1 = jnp.einsum("bld,de->ble", xn, lp["wk"][s]
+                                    ).reshape(b, 1, hkv, hd)
+                    v1 = jnp.einsum("bld,de->ble", xn, lp["wv"][s]
+                                    ).reshape(b, 1, hkv, hd)
+                    q = rope_for(c, q, positions)
+                    k1 = rope_for(c, k1, positions)
+                    kc, vc, sp, ksc, vsc = cache_write(
+                        xs["k"][s], xs["v"][s], slot_pos, k1, v1, pos,
+                        xs["ks"][s] if kv_quant else None,
+                        xs["vs"][s] if kv_quant else None)
+                    o = decode_attention(q, kc, vc, sp, pos, window=win_eff,
+                                         n_sink=n_sink, k_scale=ksc,
+                                         v_scale=vsc)
+                    o = o.reshape(b, 1, h * hd)
+                    attn_out = jnp.einsum("ble,ed->bld", o, lp["wo"][s])
+                    if c.arch_type == "hybrid":
+                        ssm_p = jax.tree_util.tree_map(lambda a: a[s], lp["ssm"])
+                        ssm_out, nconv, nssd = ssm_lib.ssm_decode_step(
+                            ssm_p, xn, xs["conv"][s], xs["ssd"][s], c)
+                        fused = 0.5 * (_branch_norm(attn_out)
+                                       + _branch_norm(ssm_out))
+                        x = x + fused.astype(x.dtype)
+                        outs["conv"].append(nconv)
+                        outs["ssd"].append(nssd)
+                    else:
+                        x = x + attn_out
+                    outs["k"].append(kc)
+                    outs["v"].append(vc)
+                    if kv_quant:
+                        outs["ks"].append(ksc)
+                        outs["vs"].append(vsc)
+                else:
+                    xn = rms_norm(x, lp["norm1"][s])
+                    ssm_p = jax.tree_util.tree_map(lambda a: a[s], lp["ssm"])
+                    y, nconv, nssd = ssm_lib.ssm_decode_step(
+                        ssm_p, xn, xs["conv"][s], xs["ssd"][s], c)
+                    x = x + y
+                    outs["conv"].append(nconv)
+                    outs["ssd"].append(nssd)
+                is_moe_slot = c.is_moe and s == self.interleave - 1
+                if is_moe_slot or self.n_mlp_slots > 0 and s < self.n_mlp_slots:
+                    y, _ = self._ffn(lp, x, s, is_moe_slot)
+                    x = x + y
+            ys = {kk: jnp.stack(vv) for kk, vv in outs.items()}
+            return x, ys
+
+        x, ys = jax.lax.scan(group_body, x, xs)
+        logits = self._head(params, x)
+
+        def flatten_groups(a):
+            return a.reshape((c.n_layers,) + a.shape[2:])
+
+        new_kv = None
+        if caches.kv is not None:
+            size = cache_sz
+            new_slot = jax.lax.dynamic_update_slice_in_dim(
+                slot_pos, pos[None].astype(jnp.int32), pos % size, axis=0)
+            new_kv = KVCache(
+                k=flatten_groups(ys["k"]), v=flatten_groups(ys["v"]),
+                slot_pos=new_slot, pos=pos + 1,
+                k_scale=flatten_groups(ys["ks"]) if kv_quant
+                else caches.kv.k_scale,
+                v_scale=flatten_groups(ys["vs"]) if kv_quant
+                else caches.kv.v_scale)
+        new_ssm = None
+        if caches.ssm is not None:
+            new_ssm = SSMState(conv=flatten_groups(ys["conv"]),
+                               ssd=flatten_groups(ys["ssd"]))
+            if caches.kv is None:
+                new_ssm = dataclasses.replace(new_ssm)
+        return logits, DecodeCaches(kv=new_kv, ssm=new_ssm)
+
+    # ------------------------------------------------------------------ #
+    # loss
+    # ------------------------------------------------------------------ #
+    def loss_fn(self, params: dict, tokens: Array, *,
+                prefix_emb: Array | None = None, remat: bool = True,
+                aux_weight: float = 0.01) -> Array:
+        """Next-token cross-entropy (+ MoE load-balance aux)."""
+        c = self.config
+        logits, aux = self.forward(params, tokens, prefix_emb=prefix_emb,
+                                   remat=remat)
+        logits = logits.astype(jnp.float32)
+        if c.n_codebooks > 1:
+            inp, tgt = logits[:, :-1], tokens[:, 1:]       # (B,L-1,C,V),(B,L-1,C)
+            logp = jax.nn.log_softmax(inp, axis=-1)
+            nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+            loss = jnp.mean(nll)
+        else:
+            inp, tgt = logits[:, :-1], tokens[:, 1:]
+            logp = jax.nn.log_softmax(inp, axis=-1)
+            nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+            loss = jnp.mean(nll)
+        return loss + aux_weight * aux
+
+
+def _branch_norm(x: Array) -> Array:
+    """Parameter-free per-branch RMS normalization (hymba output fusion)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return x32 * jax.lax.rsqrt(var + 1e-6)
+
+
+def _ssm_pos(caches: DecodeCaches) -> Array:
+    # pure-SSM archs carry no explicit position; decode uses a zero position
+    # (RoPE-free path) — position only matters for attention masks.
+    return jnp.zeros((), dtype=jnp.int32)
+
+
+def unembed_multi(logits: Array, logical_vocab: int) -> Array:
+    pad = logits.shape[-1] - logical_vocab
+    if pad > 0:
+        logits = logits.at[..., logical_vocab:].set(-1e9)
+    return logits

@@ -1,0 +1,232 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060], TPU-adapted.
+
+The SSD *dual form* is the TPU-native formulation of the selective-scan:
+sequence chunks of length Q are processed with dense matmuls (MXU) —
+an intra-chunk "attention-like" quadratic term plus an inter-chunk
+recurrence on the (H, P, N) state carried through a ``lax.scan``. This is
+exactly the hardware adaptation the paper's CUDA kernel performs for GPUs
+(DESIGN.md: rethink blocking for the memory hierarchy), expressed here in
+JAX so XLA pipelines chunk GEMMs.
+
+Layer = in_proj -> causal depthwise conv (x,B,C) -> SiLU -> SSD ->
+gated RMSNorm (y · silu(z)) -> out_proj, matching the published block.
+
+Decode is the recurrent form: S ← exp(dt·A)·S + dt·B·x, y = C·S + D·x,
+with a (d_conv-1)-deep conv ring state — O(1) per token, no KV cache, which
+is why the SSM/hybrid archs run the 524k long-context shape natively.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+
+Array = jax.Array
+
+
+def ssm_dims(config: ModelConfig) -> dict:
+    d_inner = config.d_inner
+    h = config.ssm_nheads
+    g, n = config.ssm_ngroups, config.ssm_state
+    conv_dim = d_inner + 2 * g * n
+    in_dim = 2 * d_inner + 2 * g * n + h   # z, xBC, dt
+    return dict(d_inner=d_inner, nheads=h, ngroups=g, state=n,
+                conv_dim=conv_dim, in_dim=in_dim, headdim=config.ssm_headdim)
+
+
+def _split_proj(zxbcdt: Array, dims: dict) -> tuple[Array, Array, Array]:
+    d_inner, conv_dim = dims["d_inner"], dims["conv_dim"]
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xbc, dt
+
+
+def causal_conv1d(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv. x (B, L, C), w (K, C), b (C,)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def _segsum_exp(a_cum: Array) -> Array:
+    """L[i, j] = exp(a_cum[i] - a_cum[j]) for i >= j else 0. a_cum (..., Q)."""
+    q = a_cum.shape[-1]
+    diff = a_cum[..., :, None] - a_cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_scan(x: Array, dt: Array, a: Array, b_mat: Array, c_mat: Array,
+             d_skip: Array, chunk: int, init_state: Array | None = None
+             ) -> tuple[Array, Array]:
+    """Chunked SSD. Shapes:
+      x (B, L, H, P); dt (B, L, H) (post-softplus); a (H,) (negative);
+      b_mat/c_mat (B, L, G, N); d_skip (H,).
+    Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    q = min(chunk, l)
+    l_orig = l
+    if l % q:   # pad to a chunk multiple; dt=0 rows are state-transparent
+        pad = q - l % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = l + pad
+    nc = l // q
+
+    xr = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    dtr = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    br = jnp.repeat(b_mat.reshape(bsz, nc, q, g, n), rep, axis=3).astype(jnp.float32)
+    cr = jnp.repeat(c_mat.reshape(bsz, nc, q, g, n), rep, axis=3).astype(jnp.float32)
+
+    da = dtr * a[None, None, None, :]           # (B,nc,Q,H)
+    a_cum = jnp.cumsum(da, axis=2)              # within-chunk cumulative decay
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), dtype=jnp.float32)
+
+    def chunk_step(state, inputs):
+        xc, dtc, bc, cc, a_cumc = inputs        # (B,Q,H,P),(B,Q,H),(B,Q,H,N)x2,(B,Q,H)
+        lmat = _segsum_exp(a_cumc.transpose(0, 2, 1))          # (B,H,Q,Q)
+        # intra-chunk: scores[i,j] = C_i·B_j * L[i,j] * dt_j
+        scores = jnp.einsum("bihn,bjhn->bhij", cc, bc) * lmat
+        scores = scores * dtc.transpose(0, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhij,bjhp->bihp", scores, xc)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bihn,bhpn->bihp", cc, state) \
+            * jnp.exp(a_cumc)[..., None]
+        # state update: S' = exp(a_sum)·S + Σ_j exp(a_sum - a_cum[j])·dt_j·B_j x_j^T
+        a_sum = a_cumc[:, -1]                   # (B,H)
+        decay = jnp.exp(a_sum[:, None] - a_cumc) * dtc          # (B,Q,H)
+        ds = jnp.einsum("bjh,bjhn,bjhp->bhpn", decay, bc, xc)
+        state = jnp.exp(a_sum)[..., None, None] * state + ds
+        return state, y_intra + y_inter
+
+    # scan over chunks (moveaxis chunk dim to front for xs)
+    xs = (jnp.moveaxis(xr, 1, 0), jnp.moveaxis(dtr, 1, 0),
+          jnp.moveaxis(br, 1, 0), jnp.moveaxis(cr, 1, 0),
+          jnp.moveaxis(a_cum, 1, 0))
+    final_state, ys = jax.lax.scan(chunk_step, init_state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, l, h, p)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y[:, :l_orig], final_state
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SSMState:
+    """Decode-time recurrent state, layers stacked on the leading axis."""
+
+    conv: Array   # (L, B, K-1, conv_dim) conv ring
+    ssd: Array    # (L, B, H, P, N) SSD state
+
+
+def init_ssm_state(config: ModelConfig, batch: int) -> SSMState:
+    dims = ssm_dims(config)
+    l = config.n_layers
+    return SSMState(
+        conv=jnp.zeros((l, batch, config.ssm_conv - 1, dims["conv_dim"]),
+                       dtype=jnp.float32),
+        ssd=jnp.zeros((l, batch, dims["nheads"], dims["headdim"],
+                       dims["state"]), dtype=jnp.float32),
+    )
+
+
+def ssm_forward(params: dict, x: Array, config: ModelConfig,
+                return_state: bool = False):
+    """Full-sequence forward of one SSM layer. x (B, L, d_model).
+
+    With ``return_state`` also returns (conv_state (B, K-1, conv_dim),
+    ssd_state (B, H, P, N)) — the decode-continuation states after the
+    last position (prefill -> decode handoff).
+    """
+    dims = ssm_dims(config)
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    z, xbc_raw, dt = _split_proj(zxbcdt, dims)
+    xbc = jax.nn.silu(causal_conv1d(xbc_raw, params["conv_w"], params["conv_b"]))
+    d_inner, g, n = dims["d_inner"], dims["ngroups"], dims["state"]
+    h, p = dims["nheads"], dims["headdim"]
+    x_ssm = xbc[..., :d_inner].reshape(*xbc.shape[:2], h, p)
+    b_mat = xbc[..., d_inner:d_inner + g * n].reshape(*xbc.shape[:2], g, n)
+    c_mat = xbc[..., d_inner + g * n:].reshape(*xbc.shape[:2], g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    y, final_state = ssd_scan(x_ssm, dt, a, b_mat, c_mat, params["d_skip"],
+                              config.ssm_chunk)
+    y = y.reshape(*x.shape[:2], d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), params["norm_w"])
+    out = jnp.einsum("ble,ed->bld", y.astype(x.dtype), params["out_proj"])
+    if not return_state:
+        return out
+    km1 = config.ssm_conv - 1
+    conv_state = xbc_raw[:, -km1:, :].astype(jnp.float32)
+    if xbc_raw.shape[1] < km1:   # shorter-than-window prefill: left-pad zeros
+        pad = km1 - xbc_raw.shape[1]
+        conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
+    return out, conv_state, final_state
+
+
+def ssm_decode_step(params: dict, x: Array, conv_state: Array, ssd_state: Array,
+                    config: ModelConfig) -> tuple[Array, Array, Array]:
+    """One-token recurrent step. x (B, 1, d_model).
+
+    Returns (y (B, 1, d_model), new_conv_state, new_ssd_state).
+    """
+    dims = ssm_dims(config)
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    z, xbc_new, dt = _split_proj(zxbcdt, dims)
+    # conv ring: window = [conv_state, xbc_new]
+    window = jnp.concatenate([conv_state, xbc_new.astype(jnp.float32)], axis=1)
+    w = params["conv_w"]                           # (K, C)
+    xbc = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"]
+    xbc = jax.nn.silu(xbc)[:, None, :]             # (B, 1, C)
+    new_conv = window[:, 1:, :]
+
+    d_inner, g, n = dims["d_inner"], dims["ngroups"], dims["state"]
+    h, p = dims["nheads"], dims["headdim"]
+    rep = h // g
+    x_ssm = xbc[..., :d_inner].reshape(-1, h, p).astype(jnp.float32)
+    b_mat = xbc[..., d_inner:d_inner + g * n].reshape(-1, g, n)
+    c_mat = xbc[..., d_inner + g * n:].reshape(-1, g, n)
+    b_h = jnp.repeat(b_mat, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    c_h = jnp.repeat(c_mat, rep, axis=1).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a[None, :])                           # (B,H)
+    ds = jnp.einsum("bh,bhn,bhp->bhpn", dt1, b_h, x_ssm)
+    new_ssd = decay[..., None, None] * ssd_state + ds
+    y = jnp.einsum("bhn,bhpn->bhp", c_h, new_ssd)
+    y = y + x_ssm * params["d_skip"][None, :, None]
+    y = y.reshape(x.shape[0], 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), params["norm_w"])
+    out = jnp.einsum("ble,ed->bld", y.astype(x.dtype), params["out_proj"])
+    return out, new_conv, new_ssd
+
+
+def init_ssm_params(rng: Array, config: ModelConfig, dtype) -> dict:
+    dims = ssm_dims(config)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d = config.d_model
+    scale = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(k1, (d, dims["in_dim"])) * scale).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (config.ssm_conv, dims["conv_dim"]))
+                   * (config.ssm_conv ** -0.5)).astype(jnp.float32),
+        "conv_b": jnp.zeros((dims["conv_dim"],), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((dims["nheads"],), dtype=jnp.float32),
+        "a_log": jnp.zeros((dims["nheads"],), dtype=jnp.float32),
+        "d_skip": jnp.ones((dims["nheads"],), dtype=jnp.float32),
+        "norm_w": jnp.ones((dims["d_inner"],), dtype=jnp.float32),
+        "out_proj": (jax.random.normal(k3, (dims["d_inner"], d))
+                     * (dims["d_inner"] ** -0.5)).astype(dtype),
+    }

@@ -1,0 +1,9 @@
+"""Serving runtime: the paper's cached query-handling system."""
+from repro.serving.engine import Batcher, CachedEngine, Request, Response
+from repro.serving.llm_backend import (BackendResult, ModelBackend,
+                                       SimulatedLLMBackend)
+from repro.serving.metrics import CategoryMetrics, ServingMetrics
+
+__all__ = ["Batcher", "CachedEngine", "Request", "Response", "BackendResult",
+           "ModelBackend", "SimulatedLLMBackend", "CategoryMetrics",
+           "ServingMetrics"]

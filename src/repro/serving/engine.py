@@ -1,0 +1,233 @@
+"""CachedEngine — the paper's full query-handling workflow (§2.5, §2.8)
+wired together: embed -> semantic-cache lookup -> hit? serve cached :
+call LLM backend -> insert -> respond.
+
+The engine is batched (requests are grouped by the ``Batcher``), functional
+on the device side (one jitted lookup+insert step with a donated slab) and
+keeps host-side bookkeeping (detokenization table, metrics) minimal. A
+ground-truth judge callback replaces the paper's GPT-4o-mini validation
+(DESIGN.md §9): judge(query, matched_source_id) -> bool.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import SemanticCache
+from repro.core.types import CacheConfig
+from repro.data.tokenizer import HashTokenizer
+from repro.embedding.hash_embedder import HashEmbedder
+from repro.serving.metrics import ServingMetrics
+
+
+@dataclasses.dataclass
+class Request:
+    query: str
+    category: str = "default"
+    source_id: int = -1          # ground-truth provenance (evaluation only)
+    semantic_key: str = ""
+
+
+@dataclasses.dataclass
+class Response:
+    answer: str
+    cached: bool
+    score: float
+    latency_s: float
+
+
+class Batcher:
+    """Fixed-size batching with padding (sync analogue of a request queue)."""
+
+    def __init__(self, batch_size: int = 32):
+        self.batch_size = batch_size
+
+    def batches(self, requests: Sequence[Request]):
+        for i in range(0, len(requests), self.batch_size):
+            yield list(requests[i:i + self.batch_size])
+
+
+class CachedEngine:
+    def __init__(self, cache_config: CacheConfig, backend, *,
+                 embedder: HashEmbedder | None = None,
+                 tokenizer: HashTokenizer | None = None,
+                 judge: Callable[[Request, int], bool] | None = None,
+                 batch_size: int = 32,
+                 policy=None,
+                 index=None,
+                 rebuild_every: int = 2048,
+                 use_fused_step: bool = True):
+        # ``policy``: optional threshold policy (e.g. AdaptiveThreshold —
+        # paper §2.10 future work). With an adaptive policy the engine feeds
+        # judged hit outcomes back after every batch, closing the paper's
+        # proposed precision-tracking control loop.
+        # ``index``: optional ANN index (e.g. IVFIndex). IVF is rebuilt every
+        # ``rebuild_every`` inserts — the analogue of the paper's periodic
+        # HNSW rebalancing (§2.4).
+        self.cache = SemanticCache(cache_config, policy=policy, index=index)
+        self.policy_state = self.cache.init_policy()
+        self.ivf_state = None
+        self.rebuild_every = rebuild_every
+        self._inserts_since_rebuild = 0
+        self._rebuild_rng = jax.random.PRNGKey(17)
+        self.backend = backend
+        self.embedder = embedder or HashEmbedder(dim=cache_config.dim)
+        self.tokenizer = tokenizer or HashTokenizer()
+        self.judge = judge
+        self.batcher = Batcher(batch_size)
+        self.metrics = ServingMetrics()
+        self.state, self.stats = self.cache.init()
+        self._now = 0.0
+        from repro.core.index import IVFIndex
+        self._is_ivf = isinstance(self.cache.index, IVFIndex)
+        if self._is_ivf:
+            self._lookup_jit = jax.jit(
+                lambda st, s, q, t, ps, ivf: self.cache.lookup(
+                    st, s, q, t, policy_state=ps, ivf_state=ivf))
+        else:
+            self._lookup_jit = jax.jit(
+                lambda st, s, q, t, ps: self.cache.lookup(
+                    st, s, q, t, policy_state=ps))
+        self._insert_jit = jax.jit(
+            lambda st, s, q, v, vl, t, sid, m: self.cache.insert(
+                st, s, q, v, vl, t, source_id=sid, mask=m))
+
+    # ------------------------------------------------------------------ #
+    def save_cache(self, path: str) -> None:
+        """Persist the slab + counters (the Redis RDB-snapshot analogue):
+        a restarted engine resumes serving hits immediately."""
+        from repro.training.checkpoint import save_checkpoint
+        save_checkpoint(path, {"state": self.state, "stats": self.stats},
+                        metadata={"now": self._now,
+                                  "dim": self.cache.config.dim,
+                                  "capacity": self.cache.config.capacity})
+
+    def load_cache(self, path: str) -> None:
+        from repro.training.checkpoint import load_checkpoint
+        template = {"state": self.state, "stats": self.stats}
+        restored = load_checkpoint(path, template)
+        self.state, self.stats = restored["state"], restored["stats"]
+        self.ivf_state = None   # force a rebuild on the next IVF lookup
+
+    def _maybe_rebuild_index(self) -> None:
+        if self.ivf_state is None or \
+                self._inserts_since_rebuild >= self.rebuild_every:
+            self._rebuild_rng, k = jax.random.split(self._rebuild_rng)
+            self.ivf_state = self.cache.rebuild_index(
+                self.state, jnp.float32(self._now), k)
+            self._inserts_since_rebuild = 0
+
+    def tick(self, seconds: float) -> None:
+        """Advance the TTL clock (tests drive expiry deterministically)."""
+        self._now += seconds
+
+    def warm(self, pairs) -> None:
+        """Cache population phase (paper §3.1): embed+insert the corpus."""
+        cfg = self.cache.config
+        bs = 256
+        for i in range(0, len(pairs), bs):
+            chunk = pairs[i:i + bs]
+            emb = jnp.asarray(self.embedder.embed_batch(
+                [p.question for p in chunk]))
+            toks, lens = self.tokenizer.encode_batch(
+                [p.answer for p in chunk], cfg.value_len)
+            sid = jnp.asarray([p.qa_id for p in chunk], dtype=jnp.int32)
+            self.state, self.stats = self._insert_jit(
+                self.state, self.stats, emb, jnp.asarray(toks),
+                jnp.asarray(lens), jnp.float32(self._now), sid,
+                jnp.ones((len(chunk),), dtype=bool))
+            self._inserts_since_rebuild += len(chunk)
+
+    # ------------------------------------------------------------------ #
+    def process(self, requests: Sequence[Request]) -> list[Response]:
+        out: list[Response] = []
+        for batch in self.batcher.batches(requests):
+            out.extend(self._process_batch(batch))
+        return out
+
+    def _process_batch(self, batch: list[Request]) -> list[Response]:
+        cfg = self.cache.config
+        t0 = time.perf_counter()
+        emb = jnp.asarray(self.embedder.embed_batch([r.query for r in batch]))
+        if self._is_ivf:
+            self._maybe_rebuild_index()
+            result, self.state, self.stats = self._lookup_jit(
+                self.state, self.stats, emb, jnp.float32(self._now),
+                self.policy_state, self.ivf_state)
+        else:
+            result, self.state, self.stats = self._lookup_jit(
+                self.state, self.stats, emb, jnp.float32(self._now),
+                self.policy_state)
+        hit = np.asarray(result.hit)
+        scores = np.asarray(result.score)
+        matched_sid = np.asarray(result.source_id)
+        cache_time = time.perf_counter() - t0
+
+        # miss path: one LLM call for the missed rows (paper §2.5 step 2)
+        miss_idx = [i for i in range(len(batch)) if not hit[i]]
+        llm_time = 0.0
+        llm_cost = 0.0
+        answers: dict[int, str] = {}
+        if miss_idx:
+            res = self.backend.generate(
+                [batch[i].query for i in miss_idx],
+                [batch[i].semantic_key for i in miss_idx])
+            llm_time += res.latency_s
+            llm_cost += res.cost_usd
+            # insert misses (store answer tokens + provenance); responses are
+            # returned tokenizer-normalized so the hit and miss paths emit
+            # byte-identical text for the same cache entry
+            toks, lens = self.tokenizer.encode_batch(
+                [res.answers[j] for j in range(len(miss_idx))], cfg.value_len)
+            for j, i in enumerate(miss_idx):
+                answers[i] = self.tokenizer.decode(toks[j])
+            memb = emb[jnp.asarray(miss_idx)]
+            sid = jnp.asarray([batch[i].source_id for i in miss_idx],
+                              dtype=jnp.int32)
+            self.state, self.stats = self._insert_jit(
+                self.state, self.stats, memb, jnp.asarray(toks),
+                jnp.asarray(lens), jnp.float32(self._now), sid,
+                jnp.ones((len(miss_idx),), dtype=bool))
+            self._inserts_since_rebuild += len(miss_idx)
+
+        # hit path: detokenize cached responses
+        vals = np.asarray(result.values)
+        for i in range(len(batch)):
+            if hit[i]:
+                answers[i] = self.tokenizer.decode(vals[i])
+
+        # judge hits (ground-truth oracle replaces GPT-4o-mini)
+        positives = np.zeros((len(batch),), dtype=bool)
+        if self.judge is not None:
+            for i in range(len(batch)):
+                if hit[i]:
+                    positives[i] = self.judge(batch[i], int(matched_sid[i]))
+            # adaptive-threshold feedback (paper §2.10): judged precision
+            # nudges the threshold toward the target
+            if hasattr(self.cache.policy, "update"):
+                self.policy_state = self.cache.policy.update(
+                    self.policy_state,
+                    was_positive=jnp.asarray(positives),
+                    was_hit=jnp.asarray(hit))
+
+        # metrics: baseline = every query pays the LLM call
+        n = len(batch)
+        per_call = getattr(self.backend, "latency_per_call_s", None)
+        baseline_time = (per_call or (llm_time / max(len(miss_idx), 1))) * n
+        per_cost = getattr(self.backend, "cost_per_call_usd", 0.0)
+        self.metrics.record_batch(
+            [r.category for r in batch], hit, positives,
+            judged=[self.judge is not None and bool(h) for h in hit],
+            cache_time_s=cache_time, llm_time_s=llm_time,
+            llm_cost=llm_cost, baseline_cost=per_cost * n,
+            baseline_time=baseline_time)
+
+        per_q_latency = (cache_time + llm_time) / n
+        return [Response(answer=answers[i], cached=bool(hit[i]),
+                         score=float(scores[i]), latency_s=per_q_latency)
+                for i in range(len(batch))]

@@ -1,0 +1,94 @@
+"""Serving metrics: the paper's evaluation quantities (Figures 2–4, Table 1).
+
+Per-category counters for lookups / hits / positive hits plus latency and
+cost accumulators for the cached and uncached paths. ``summary()`` emits
+exactly the rows the paper reports: cache-hit rate, API-call reduction,
+positive-hit rate, average response time with/without cache, cost saved.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+
+@dataclasses.dataclass
+class CategoryMetrics:
+    lookups: int = 0
+    hits: int = 0
+    positive_hits: int = 0
+    judged_hits: int = 0
+    cache_latency_s: float = 0.0
+    llm_latency_s: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    @property
+    def positive_rate(self) -> float:
+        return self.positive_hits / self.judged_hits if self.judged_hits else 0.0
+
+    @property
+    def api_call_fraction(self) -> float:
+        return 1.0 - self.hit_rate
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    per_category: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(CategoryMetrics))
+    total_cost_usd: float = 0.0
+    baseline_cost_usd: float = 0.0          # what 100% API calls would cost
+    cache_path_time_s: float = 0.0          # embed + lookup wall time
+    llm_path_time_s: float = 0.0            # miss-path LLM latency
+    baseline_time_s: float = 0.0            # all-queries-to-LLM latency
+    queries: int = 0
+
+    def record_batch(self, categories, hits, positives, *, judged,
+                     cache_time_s: float, llm_time_s: float,
+                     llm_cost: float, baseline_cost: float,
+                     baseline_time: float) -> None:
+        for i, cat in enumerate(categories):
+            m = self.per_category[cat]
+            m.lookups += 1
+            if bool(hits[i]):
+                m.hits += 1
+                if judged is None or judged[i]:
+                    m.judged_hits += 1
+                    if bool(positives[i]):
+                        m.positive_hits += 1
+            m.cache_latency_s += cache_time_s / max(len(categories), 1)
+            m.llm_latency_s += llm_time_s / max(len(categories), 1)
+        self.total_cost_usd += llm_cost
+        self.baseline_cost_usd += baseline_cost
+        self.cache_path_time_s += cache_time_s
+        self.llm_path_time_s += llm_time_s
+        self.baseline_time_s += baseline_time
+        self.queries += len(categories)
+
+    # ------------------------------------------------------------------ #
+    def summary(self) -> dict:
+        cats = {}
+        for cat, m in sorted(self.per_category.items()):
+            cats[cat] = {
+                "lookups": m.lookups,
+                "cache_hits": m.hits,
+                "hit_rate": round(m.hit_rate, 4),
+                "positive_hits": m.positive_hits,
+                "positive_rate": round(m.positive_rate, 4),
+                "api_call_fraction": round(m.api_call_fraction, 4),
+            }
+        avg_with = ((self.cache_path_time_s + self.llm_path_time_s)
+                    / max(self.queries, 1))
+        avg_without = self.baseline_time_s / max(self.queries, 1)
+        return {
+            "categories": cats,
+            "queries": self.queries,
+            "total_cost_usd": round(self.total_cost_usd, 4),
+            "baseline_cost_usd": round(self.baseline_cost_usd, 4),
+            "cost_saving_pct": round(
+                100 * (1 - self.total_cost_usd
+                       / max(self.baseline_cost_usd, 1e-9)), 2),
+            "avg_latency_with_cache_s": round(avg_with, 4),
+            "avg_latency_without_cache_s": round(avg_without, 4),
+        }

@@ -1,0 +1,9 @@
+"""Training substrate: AdamW, schedules, checkpointing, train loop."""
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                      init_adamw, lr_at, make_train_step,
+                                      global_norm)
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_update", "init_adamw",
+           "lr_at", "make_train_step", "global_norm", "load_checkpoint",
+           "save_checkpoint"]

@@ -1,0 +1,251 @@
+"""Unit + property tests for the slab store: insert / TTL / eviction.
+
+The hypothesis suite drives random operation sequences against the store
+and asserts the Redis-analogue invariants: capacity is never exceeded,
+expired entries never serve lookups, FIFO/LRU/LFU eviction picks the right
+victims, inserted entries are immediately retrievable.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CacheConfig, SemanticCache, init_cache_state)
+from repro.core import store
+
+
+def mk(capacity=16, dim=8, ttl=100.0, eviction="ring", threshold=0.8):
+    return CacheConfig(dim=dim, capacity=capacity, value_len=4, ttl=ttl,
+                       threshold=threshold, eviction=eviction)
+
+
+def rand_batch(rng, b, dim):
+    k1, k2 = jax.random.split(rng)
+    emb = jax.random.normal(k1, (b, dim))
+    vals = jax.random.randint(k2, (b, 4), 0, 100)
+    return emb, vals, jnp.full((b,), 4)
+
+
+class TestInsert:
+    def test_insert_then_lookup_hits(self):
+        cfg = mk()
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        emb, vals, lens = rand_batch(jax.random.PRNGKey(0), 4, cfg.dim)
+        state, stats = c.insert(state, stats, emb, vals, lens, 0.0)
+        res, state, stats = c.lookup(state, stats, emb, 1.0)
+        assert bool(jnp.all(res.hit))
+        np.testing.assert_allclose(np.asarray(res.score), 1.0, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(res.values),
+                                      np.asarray(vals))
+
+    def test_empty_cache_never_hits(self):
+        cfg = mk()
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        emb, _, _ = rand_batch(jax.random.PRNGKey(1), 3, cfg.dim)
+        res, *_ = c.lookup(state, stats, emb, 0.0)
+        assert not bool(jnp.any(res.hit))
+        assert bool(jnp.all(res.score == -jnp.inf))
+
+    def test_masked_insert_skips_rows(self):
+        cfg = mk()
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        emb, vals, lens = rand_batch(jax.random.PRNGKey(2), 4, cfg.dim)
+        mask = jnp.asarray([True, False, True, False])
+        state, stats = c.insert(state, stats, emb, vals, lens, 0.0, mask=mask)
+        res, *_ = c.lookup(state, stats, emb, 1.0)
+        assert bool(res.hit[0]) and bool(res.hit[2])
+        assert not bool(res.hit[1]) and not bool(res.hit[3])
+
+    def test_value_roundtrip_dtype(self):
+        cfg = mk()
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        emb, vals, lens = rand_batch(jax.random.PRNGKey(3), 2, cfg.dim)
+        state, _ = c.insert(state, stats, emb, vals, lens, 0.0)
+        assert state.values.dtype == jnp.int32
+
+
+class TestTTL:
+    def test_expiry_blocks_hits(self):
+        cfg = mk(ttl=10.0)
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        emb, vals, lens = rand_batch(jax.random.PRNGKey(0), 2, cfg.dim)
+        state, stats = c.insert(state, stats, emb, vals, lens, 0.0)
+        res, *_ = c.lookup(state, stats, emb, 9.9)
+        assert bool(jnp.all(res.hit))
+        res, *_ = c.lookup(state, stats, emb, 10.1)
+        assert not bool(jnp.any(res.hit))
+
+    def test_eager_expire_counts(self):
+        cfg = mk(ttl=10.0)
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        emb, vals, lens = rand_batch(jax.random.PRNGKey(0), 4, cfg.dim)
+        state, stats = c.insert(state, stats, emb, vals, lens, 0.0)
+        state, stats = c.expire(state, stats, 11.0)
+        assert int(stats.expired_evictions) == 4
+        assert not bool(jnp.any(state.valid))
+
+    def test_no_ttl_never_expires(self):
+        cfg = mk(ttl=None)
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        emb, vals, lens = rand_batch(jax.random.PRNGKey(0), 2, cfg.dim)
+        state, stats = c.insert(state, stats, emb, vals, lens, 0.0)
+        res, *_ = c.lookup(state, stats, emb, 1e12)
+        assert bool(jnp.all(res.hit))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.floats(0.1, 1e5), st.floats(0.0, 2.0))
+    def test_alive_monotone_in_time(self, ttl, frac):
+        """Property: aliveness is monotone non-increasing in time."""
+        cfg = mk(ttl=ttl)
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        emb, vals, lens = rand_batch(jax.random.PRNGKey(0), 4, cfg.dim)
+        state, _ = c.insert(state, stats, emb, vals, lens, 0.0)
+        t = ttl * frac
+        alive_t = int(jnp.sum(store.alive_mask(state, t)))
+        alive_later = int(jnp.sum(store.alive_mask(state, t + 1.0)))
+        assert alive_later <= alive_t
+
+
+class TestEviction:
+    @pytest.mark.parametrize("eviction", ["ring", "lru", "lfu"])
+    def test_capacity_never_exceeded(self, eviction):
+        cfg = mk(capacity=8, eviction=eviction, ttl=None)
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        for i in range(5):
+            emb, vals, lens = rand_batch(jax.random.PRNGKey(i), 4, cfg.dim)
+            state, stats = c.insert(state, stats, emb, vals, lens, float(i))
+        assert int(jnp.sum(state.valid)) <= cfg.capacity
+
+    def test_ring_overwrites_oldest(self):
+        cfg = mk(capacity=4, eviction="ring", ttl=None)
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        e1, v1, l1 = rand_batch(jax.random.PRNGKey(0), 4, cfg.dim)
+        state, stats = c.insert(state, stats, e1, v1, l1, 0.0)
+        e2, v2, l2 = rand_batch(jax.random.PRNGKey(1), 2, cfg.dim)
+        state, stats = c.insert(state, stats, e2, v2, l2, 1.0)
+        # the first two of e1 were overwritten
+        res, *_ = c.lookup(state, stats, e1, 2.0)
+        hits = np.asarray(res.hit)
+        assert not hits[0] and not hits[1] and hits[2] and hits[3]
+
+    def test_lru_evicts_least_recently_used(self):
+        cfg = mk(capacity=4, eviction="lru", ttl=None)
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        e1, v1, l1 = rand_batch(jax.random.PRNGKey(0), 4, cfg.dim)
+        state, stats = c.insert(state, stats, e1, v1, l1, 0.0)
+        # touch rows 0 and 1 (lookup hits bump last_used)
+        res, state, stats = c.lookup(state, stats, e1[:2], 5.0)
+        assert bool(jnp.all(res.hit))
+        e2, v2, l2 = rand_batch(jax.random.PRNGKey(1), 2, cfg.dim)
+        state, stats = c.insert(state, stats, e2, v2, l2, 6.0)
+        res, *_ = c.lookup(state, stats, e1, 7.0)
+        hits = np.asarray(res.hit)
+        assert hits[0] and hits[1]          # recently used survived
+        assert not hits[2] and not hits[3]  # LRU victims
+
+    def test_lfu_evicts_least_frequent(self):
+        cfg = mk(capacity=4, eviction="lfu", ttl=None)
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        e1, v1, l1 = rand_batch(jax.random.PRNGKey(0), 4, cfg.dim)
+        state, stats = c.insert(state, stats, e1, v1, l1, 0.0)
+        for _ in range(3):   # rows 2,3 get frequent hits
+            _, state, stats = c.lookup(state, stats, e1[2:], 1.0)
+        e2, v2, l2 = rand_batch(jax.random.PRNGKey(1), 2, cfg.dim)
+        state, stats = c.insert(state, stats, e2, v2, l2, 2.0)
+        res, *_ = c.lookup(state, stats, e1, 3.0)
+        hits = np.asarray(res.hit)
+        assert hits[2] and hits[3]
+        assert not hits[0] and not hits[1]
+
+    def test_expired_slots_preferred_over_live(self):
+        cfg = mk(capacity=4, eviction="lru", ttl=10.0)
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        e1, v1, l1 = rand_batch(jax.random.PRNGKey(0), 2, cfg.dim)
+        state, stats = c.insert(state, stats, e1, v1, l1, 0.0)   # expire at 10
+        e2, v2, l2 = rand_batch(jax.random.PRNGKey(1), 2, cfg.dim)
+        state, stats = c.insert(state, stats, e2, v2, l2, 50.0)  # fresh
+        e3, v3, l3 = rand_batch(jax.random.PRNGKey(2), 2, cfg.dim)
+        state, stats = c.insert(state, stats, e3, v3, l3, 51.0)
+        res, *_ = c.lookup(state, stats, e2, 52.0)
+        assert bool(jnp.all(res.hit)), "live entries must not be evicted " \
+                                       "while expired slots exist"
+
+
+class TestPropertyOps:
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(["insert", "lookup", "expire"]),
+                              st.integers(1, 4)), min_size=1, max_size=12))
+    def test_random_op_sequences_keep_invariants(self, ops):
+        cfg = mk(capacity=8, ttl=5.0)
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        now = 0.0
+        rng = jax.random.PRNGKey(0)
+        for i, (op, b) in enumerate(ops):
+            rng, k = jax.random.split(rng)
+            now += 1.0
+            if op == "insert":
+                emb, vals, lens = rand_batch(k, b, cfg.dim)
+                state, stats = c.insert(state, stats, emb, vals, lens, now)
+            elif op == "lookup":
+                emb, _, _ = rand_batch(k, b, cfg.dim)
+                _, state, stats = c.lookup(state, stats, emb, now)
+            else:
+                state, stats = c.expire(state, stats, now)
+            # invariants
+            assert int(jnp.sum(state.valid)) <= cfg.capacity
+            assert 0 <= int(state.ptr) < cfg.capacity
+            assert int(stats.hits) + int(stats.misses) == int(stats.lookups)
+            alive = store.alive_mask(state, now)
+            assert bool(jnp.all(state.expiry[alive] > now))
+
+
+class TestSoak:
+    """Sustained-traffic churn: TTL expiry + eviction + lookups interleaved
+    over many batches must hold every invariant (the long-running-service
+    regime the paper's TTL design targets)."""
+
+    def test_churn_with_ttl_and_eviction(self):
+        import jax
+        cfg = mk(capacity=64, dim=32, ttl=8.0, eviction="lru")
+        c = SemanticCache(cfg)
+        state, stats = c.init()
+        rng = jax.random.PRNGKey(0)
+        hits_total = 0
+        for step_i in range(60):
+            now = float(step_i)
+            rng, k1, k2 = jax.random.split(rng, 3)
+            # mixed workload: re-query recent inserts + novel inserts
+            recent, _, _ = rand_batch(jax.random.PRNGKey(step_i - 1), 4,
+                                      cfg.dim)
+            res, state, stats = c.lookup(state, stats, recent, now)
+            hits_total += int(jnp.sum(res.hit))
+            fresh, vals, lens = rand_batch(jax.random.PRNGKey(step_i), 4,
+                                           cfg.dim)
+            state, stats = c.insert(state, stats, fresh, vals, lens, now,
+                                    mask=~res.hit[:4])
+            if step_i % 7 == 0:
+                state, stats = c.expire(state, stats, now)
+            # invariants
+            assert int(jnp.sum(state.valid)) <= cfg.capacity
+            alive = store.alive_mask(state, now)
+            assert bool(jnp.all(state.expiry[alive] > now))
+            assert int(stats.hits) + int(stats.misses) == int(stats.lookups)
+        # queries one step after insert are inside TTL -> mostly hits
+        assert hits_total >= 100, hits_total

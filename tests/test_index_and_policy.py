@@ -1,0 +1,130 @@
+"""ANN indexes (exact / IVF / HNSW reference) and threshold policies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hnsw import HNSWIndex
+from repro.core.index import ExactIndex, IVFIndex
+from repro.core.policy import (AdaptiveThreshold, FixedThreshold,
+                               PerCategoryThreshold, make_policy)
+from repro.core.similarity import l2_normalize
+
+
+def _unit(rng, shape):
+    x = jax.random.normal(rng, shape)
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+class TestExactIndex:
+    def test_self_retrieval(self):
+        keys = _unit(jax.random.PRNGKey(0), (128, 32))
+        idx = ExactIndex(topk=1, backend="jnp")
+        s, i = idx.search(keys[:8], keys, jnp.ones((128,), bool))
+        np.testing.assert_array_equal(np.asarray(i[:, 0]), np.arange(8))
+        np.testing.assert_allclose(np.asarray(s[:, 0]), 1.0, atol=1e-5)
+
+
+class TestIVF:
+    def test_recall_vs_exact(self):
+        """IVF with enough probes must recover most exact-NN results."""
+        rng = jax.random.PRNGKey(0)
+        keys = _unit(rng, (512, 32))
+        valid = jnp.ones((512,), bool)
+        queries = keys[:64] + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(1), (64, 32))
+        ivf = IVFIndex(ncentroids=16, nprobe=8, bucket_cap=128, topk=1)
+        st = ivf.fit(keys, valid, jax.random.PRNGKey(2))
+        s_ivf, i_ivf = ivf.search(st, queries, keys, valid)
+        ex = ExactIndex(topk=1, backend="jnp")
+        s_ex, i_ex = ex.search(queries, keys, valid)
+        recall = float(jnp.mean((i_ivf[:, 0] == i_ex[:, 0]).astype(jnp.float32)))
+        assert recall >= 0.9, f"IVF recall {recall}"
+
+    def test_respects_validity(self):
+        keys = _unit(jax.random.PRNGKey(0), (64, 16))
+        valid = jnp.zeros((64,), bool).at[10].set(True)
+        ivf = IVFIndex(ncentroids=4, nprobe=4, bucket_cap=64, topk=1)
+        st = ivf.fit(keys, valid, jax.random.PRNGKey(1))
+        s, i = ivf.search(st, keys[10:11], keys, valid)
+        assert int(i[0, 0]) == 10
+
+
+class TestHNSW:
+    def test_exact_on_small_sets(self):
+        """Paper-faithful HNSW: high recall vs brute force."""
+        rng = np.random.default_rng(0)
+        vecs = rng.normal(size=(400, 32)).astype(np.float32)
+        vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+        idx = HNSWIndex(dim=32, max_elements=512, m=8, ef_construction=64,
+                        ef_search=48, seed=0)
+        for v in vecs:
+            idx.add(v)
+        hits = 0
+        queries = vecs[:50] + 0.02 * rng.normal(size=(50, 32)).astype(np.float32)
+        gt = (queries / np.linalg.norm(queries, axis=1, keepdims=True)) @ vecs.T
+        for qi, q in enumerate(queries):
+            ids, sims = idx.search(q, k=1)
+            if ids[0] == int(np.argmax(gt[qi])):
+                hits += 1
+        assert hits / 50 >= 0.9, f"HNSW recall {hits / 50}"
+
+    def test_dynamic_resize(self):
+        idx = HNSWIndex(dim=8, max_elements=4, m=4, seed=0)
+        rng = np.random.default_rng(1)
+        for _ in range(10):    # beyond initial max_elements
+            idx.add(rng.normal(size=8).astype(np.float32))
+        assert idx.count == 10
+        assert idx.max_elements >= 10
+
+    def test_empty_search(self):
+        idx = HNSWIndex(dim=8)
+        ids, sims = idx.search(np.ones(8, dtype=np.float32), k=2)
+        assert (ids == -1).all()
+
+
+class TestPolicies:
+    def test_fixed(self):
+        p = FixedThreshold(0.8)
+        st = p.init_state()
+        hit, _ = p.decide(jnp.asarray([0.79, 0.8, 0.95]), st)
+        np.testing.assert_array_equal(np.asarray(hit), [False, True, True])
+
+    def test_per_category(self):
+        p = PerCategoryThreshold(thresholds=(0.7, 0.9))
+        st = p.init_state()
+        scores = jnp.asarray([0.8, 0.8])
+        cats = jnp.asarray([0, 1])
+        hit, _ = p.decide(scores, st, cats)
+        np.testing.assert_array_equal(np.asarray(hit), [True, False])
+
+    def test_adaptive_raises_threshold_on_false_hits(self):
+        p = AdaptiveThreshold(init=0.8, target_precision=0.97, lr=0.05)
+        st = p.init_state()
+        for _ in range(20):   # every hit judged wrong -> precision collapses
+            was_hit = jnp.asarray([True, True, True, True])
+            was_pos = jnp.asarray([False, False, False, False])
+            st = p.update(st, was_positive=was_pos, was_hit=was_hit)
+        assert float(st[0]) > 0.8
+
+    def test_adaptive_lowers_threshold_when_precise(self):
+        p = AdaptiveThreshold(init=0.9, target_precision=0.9, lr=0.05)
+        st = p.init_state()
+        for _ in range(30):   # perfect precision -> harvest more hits
+            st = p.update(st, was_positive=jnp.ones(4, bool),
+                          was_hit=jnp.ones(4, bool))
+        assert float(st[0]) < 0.9
+
+    def test_adaptive_bounded(self):
+        p = AdaptiveThreshold(init=0.8, lr=0.5, lo=0.6, hi=0.95)
+        st = p.init_state()
+        for _ in range(50):
+            st = p.update(st, was_positive=jnp.zeros(4, bool),
+                          was_hit=jnp.ones(4, bool))
+        assert 0.6 <= float(st[0]) <= 0.95
+
+    def test_factory(self):
+        assert isinstance(make_policy("fixed"), FixedThreshold)
+        assert isinstance(make_policy("adaptive"), AdaptiveThreshold)
+        with pytest.raises(ValueError):
+            make_policy("nope")

@@ -1,0 +1,207 @@
+"""Pallas kernel validation: shape/dtype sweeps in interpret mode against
+the pure-jnp oracles in ``repro.kernels.ref`` (assert_allclose)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.cosine_topk import (cosine_topk_pallas,
+                                       quant_cosine_topk_pallas,
+                                       quantize_keys)
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _unit(rng, shape):
+    x = jax.random.normal(rng, shape)
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+class TestCosineTopK:
+    @pytest.mark.parametrize("b,n,d,k", [
+        (1, 64, 16, 1),
+        (4, 100, 32, 4),      # non-multiple N
+        (16, 1024, 384, 4),   # MiniLM dim
+        (3, 517, 64, 2),      # awkward everything
+        (8, 256, 1536, 4),    # ada-002 dim
+        (33, 128, 128, 8),    # B > block
+    ])
+    def test_matches_oracle(self, b, n, d, k):
+        r = jax.random.PRNGKey(b * 1000 + n)
+        kq, kk, kv = jax.random.split(r, 3)
+        q = _unit(kq, (b, d))
+        keys = _unit(kk, (n, d))
+        valid = jax.random.bernoulli(kv, 0.8, (n,))
+        rs, ri = ref.cosine_topk_ref(q, keys, valid, k)
+        ps, pi = cosine_topk_pallas(q, keys, valid, k=k, block_b=8,
+                                    block_n=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(rs), np.asarray(ps),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(ri), np.asarray(pi))
+
+    def test_all_invalid(self):
+        q = _unit(jax.random.PRNGKey(0), (2, 16))
+        keys = _unit(jax.random.PRNGKey(1), (32, 16))
+        valid = jnp.zeros((32,), dtype=bool)
+        ps, pi = cosine_topk_pallas(q, keys, valid, k=2, block_b=8,
+                                    block_n=16, interpret=True)
+        assert bool(jnp.all(pi == -1))
+        assert bool(jnp.all(ps == -jnp.inf))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_key_dtypes(self, dtype):
+        q = _unit(jax.random.PRNGKey(0), (4, 64))
+        keys = _unit(jax.random.PRNGKey(1), (128, 64)).astype(dtype)
+        valid = jnp.ones((128,), dtype=bool)
+        rs, ri = ref.cosine_topk_ref(q, keys, valid, 2)
+        ps, pi = cosine_topk_pallas(q, keys, valid, k=2, block_b=8,
+                                    block_n=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(rs), np.asarray(ps),
+                                   rtol=2e-3, atol=2e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 9), st.integers(8, 200), st.integers(8, 64),
+           st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+    def test_property_sweep(self, b, n, d, k, seed):
+        r = jax.random.PRNGKey(seed)
+        kq, kk, kv = jax.random.split(r, 3)
+        q = _unit(kq, (b, d))
+        keys = _unit(kk, (n, d))
+        valid = jax.random.bernoulli(kv, 0.7, (n,))
+        rs, ri = ref.cosine_topk_ref(q, keys, valid, k)
+        ps, pi = cosine_topk_pallas(q, keys, valid, k=k, block_b=8,
+                                    block_n=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(rs), np.asarray(ps),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestQuantCosineTopK:
+    @pytest.mark.parametrize("b,n,d,k", [(4, 128, 64, 4), (8, 300, 384, 2)])
+    def test_matches_oracle(self, b, n, d, k):
+        r = jax.random.PRNGKey(7)
+        kq, kk, kv = jax.random.split(r, 3)
+        q = _unit(kq, (b, d))
+        keys = _unit(kk, (n, d))
+        kq8, sc = quantize_keys(keys)
+        valid = jax.random.bernoulli(kv, 0.9, (n,))
+        rs, ri = ref.quant_cosine_topk_ref(q, kq8, sc, valid, k)
+        ps, pi = quant_cosine_topk_pallas(q, kq8, sc, valid, k=k, block_b=8,
+                                          block_n=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(rs), np.asarray(ps),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_quantization_error_bounded(self):
+        keys = _unit(jax.random.PRNGKey(0), (256, 384))
+        kq8, sc = quantize_keys(keys)
+        deq = kq8.astype(jnp.float32) * sc[:, None]
+        err = jnp.max(jnp.abs(deq - keys))
+        assert float(err) < 1.0 / 127.0  # symmetric int8 bound on unit rows
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,lq,lk,h,hkv,d,causal,window", [
+        (2, 128, 128, 4, 2, 64, True, None),
+        (1, 64, 256, 8, 4, 32, True, None),    # decode-ish lq < lk
+        (2, 128, 128, 4, 1, 64, True, 64),     # sliding window, MQA
+        (1, 128, 128, 2, 2, 64, False, None),  # bidirectional
+        (1, 256, 256, 4, 4, 128, True, 128),
+    ])
+    def test_matches_oracle(self, b, lq, lk, h, hkv, d, causal, window):
+        ks = jax.random.split(jax.random.PRNGKey(lq * lk + h), 3)
+        q = jax.random.normal(ks[0], (b, lq, h, d)) * 0.3
+        k = jax.random.normal(ks[1], (b, lk, hkv, d)) * 0.3
+        v = jax.random.normal(ks[2], (b, lk, hkv, d))
+        g = h // hkv
+        r = ref.flash_attention_ref(q, jnp.repeat(k, g, axis=2),
+                                    jnp.repeat(v, g, axis=2),
+                                    causal=causal, window=window)
+        p = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                   block_q=64, block_k=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(p),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_bf16(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = (jax.random.normal(ks[0], (1, 128, 2, 64)) * 0.3).astype(jnp.bfloat16)
+        k = (jax.random.normal(ks[1], (1, 128, 2, 64)) * 0.3).astype(jnp.bfloat16)
+        v = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(jnp.bfloat16)
+        r = ref.flash_attention_ref(q, k, v, causal=True)
+        p = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                   block_k=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(r, dtype=np.float32),
+                                   np.asarray(p, dtype=np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
+class TestBlockwiseAttentionVsKernel:
+    """The jnp blockwise path (models/attention.py) must agree with the
+    Pallas kernel contract — they are interchangeable backends."""
+
+    def test_agreement(self):
+        from repro.models.attention import blockwise_attention
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (2, 128, 4, 64)) * 0.3
+        k = jax.random.normal(ks[1], (2, 128, 2, 64)) * 0.3
+        v = jax.random.normal(ks[2], (2, 128, 2, 64))
+        a = blockwise_attention(q, k, v, causal=True, block_q=32, block_k=32)
+        p = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                   block_k=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(p),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestDecodeAttentionKernel:
+    """Single-token decode kernel vs the model's decode_attention path,
+    across GQA / window / sink / int8 configurations."""
+
+    @pytest.mark.parametrize("b,s,h,hkv,d,window,sink,quant", [
+        (2, 128, 4, 2, 64, None, 0, False),
+        (1, 256, 8, 8, 64, 64, 0, False),
+        (2, 128, 4, 1, 128, None, 0, True),
+        (1, 256, 6, 2, 64, 32, 8, True),
+        (3, 64, 2, 2, 64, None, 0, True),
+    ])
+    def test_matches_model_path(self, b, s, h, hkv, d, window, sink, quant):
+        from repro.kernels.decode_attention import decode_attention_pallas
+        from repro.models.attention import decode_attention, quantize_kv
+        ks = jax.random.split(jax.random.PRNGKey(b * s + h), 3)
+        q = jax.random.normal(ks[0], (b, 1, h, d)) * 0.3
+        kc = jax.random.normal(ks[1], (b, s, hkv, d)) * 0.3
+        vc = jax.random.normal(ks[2], (b, s, hkv, d))
+        pos = jnp.asarray(s - 1, jnp.int32)
+        slot_pos = jnp.arange(s, dtype=jnp.int32)
+        if quant:
+            kq, kscale = quantize_kv(kc)
+            vq, vscale = quantize_kv(vc)
+            ref_out = decode_attention(
+                q, kq, vq, slot_pos, pos, window=window, n_sink=sink,
+                k_scale=kscale, v_scale=vscale)
+            out = decode_attention_pallas(
+                q, kq, vq, slot_pos, pos, k_scale=kscale, v_scale=vscale,
+                window=window, n_sink=sink, block_s=64, interpret=True)
+        else:
+            ref_out = decode_attention(q, kc, vc, slot_pos, pos,
+                                       window=window, n_sink=sink)
+            out = decode_attention_pallas(q, kc, vc, slot_pos, pos,
+                                          window=window, n_sink=sink,
+                                          block_s=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(ref_out), np.asarray(out),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_ring_cache_with_empty_slots(self):
+        from repro.kernels.decode_attention import decode_attention_pallas
+        from repro.models.attention import decode_attention
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        b, s, h, d = 1, 64, 2, 64
+        q = jax.random.normal(ks[0], (b, 1, h, d)) * 0.3
+        kc = jax.random.normal(ks[1], (b, s, h, d)) * 0.3
+        vc = jax.random.normal(ks[2], (b, s, h, d))
+        # half-full ring: slots 0..31 hold positions 0..31, rest empty
+        slot_pos = jnp.where(jnp.arange(s) < 32, jnp.arange(s), -1)
+        pos = jnp.asarray(31, jnp.int32)
+        ref_out = decode_attention(q, kc, vc, slot_pos, pos)
+        out = decode_attention_pallas(q, kc, vc, slot_pos, pos, block_s=32,
+                                      interpret=True)
+        np.testing.assert_allclose(np.asarray(ref_out), np.asarray(out),
+                                   rtol=3e-4, atol=3e-4)

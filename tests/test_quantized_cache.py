@@ -1,0 +1,63 @@
+"""int8-slab cache (§Perf iteration 3.1): ranking and hit behaviour must
+match the f32 slab within quantization tolerance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CacheConfig, SemanticCache
+from repro.data.qa_dataset import build_corpus, build_test_queries
+from repro.embedding.hash_embedder import HashEmbedder
+
+
+def test_int8_scores_close_to_f32():
+    kq, kk = jax.random.split(jax.random.PRNGKey(0))
+    q = jax.random.normal(kq, (8, 64))
+    emb = jax.random.normal(kk, (32, 64))
+    vals = jnp.zeros((32, 4), jnp.int32)
+    lens = jnp.full((32,), 4)
+
+    res = {}
+    for dtype in (jnp.float32, jnp.int8):
+        c = SemanticCache(CacheConfig(dim=64, capacity=64, value_len=4,
+                                      ttl=None, key_dtype=dtype))
+        state, stats = c.init()
+        state, stats = c.insert(state, stats, emb, vals, lens, 0.0)
+        r, *_ = c.lookup(state, stats, q, 1.0)
+        res[str(dtype)] = (np.asarray(r.score), np.asarray(r.index))
+
+    s32, i32 = res[str(jnp.float32)]
+    s8, i8 = res[str(jnp.int8)]
+    np.testing.assert_allclose(s8, s32, atol=0.01)     # ~0.4% quant error
+    assert (i8 == i32).mean() >= 0.9                   # rankings preserved
+
+
+def test_int8_hit_rate_parity_on_corpus():
+    pairs = build_corpus(200, seed=0)
+    queries = build_test_queries(pairs, n_per_category=40, seed=1)
+    emb = HashEmbedder()
+    e = jnp.asarray(emb.embed_batch([p.question for p in pairs]))
+    q = jnp.asarray(emb.embed_batch([x.query for x in queries]))
+    vals = jnp.zeros((len(pairs), 4), jnp.int32)
+    lens = jnp.full((len(pairs),), 4)
+
+    hits = {}
+    for dtype in (jnp.float32, jnp.int8):
+        c = SemanticCache(CacheConfig(dim=384, capacity=1024, value_len=4,
+                                      ttl=None, key_dtype=dtype))
+        state, stats = c.init()
+        state, stats = c.insert(state, stats, e, vals, lens, 0.0)
+        r, *_ = c.lookup(state, stats, q, 1.0)
+        hits[str(dtype)] = np.asarray(r.hit)
+
+    h32 = hits[str(jnp.float32)]
+    h8 = hits[str(jnp.int8)]
+    # int8 may flip only borderline (score ~ threshold) decisions
+    assert (h32 == h8).mean() >= 0.97, (h32.sum(), h8.sum())
+
+
+def test_int8_memory_is_quarter():
+    c8 = SemanticCache(CacheConfig(dim=384, capacity=256, value_len=4,
+                                   key_dtype=jnp.int8))
+    state, _ = c8.init()
+    assert state.keys.dtype == jnp.int8
+    assert state.keys.nbytes * 4 == 256 * 384 * 4

@@ -1,0 +1,217 @@
+"""End-to-end serving tests: the paper's workflow (§2.5, §3) in miniature,
+plus the reproduction-band assertion against the paper's own numbers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import CacheConfig
+from repro.data.qa_dataset import (CATEGORIES, build_corpus,
+                                   build_test_queries)
+from repro.data.tokenizer import HashTokenizer
+from repro.embedding.hash_embedder import HashEmbedder
+from repro.serving import CachedEngine, Request, SimulatedLLMBackend
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    pairs = build_corpus(300, seed=0)
+    queries = build_test_queries(pairs, n_per_category=60, seed=1)
+    return pairs, queries
+
+
+def make_engine(pairs, **kw):
+    by_id = {p.qa_id: p for p in pairs}
+
+    def judge(req, sid):
+        return sid >= 0 and sid in by_id and \
+            by_id[sid].semantic_key == req.semantic_key
+
+    cfg = kw.pop("config", CacheConfig(dim=384, capacity=4096, value_len=48,
+                                       ttl=None, threshold=0.8))
+    return CachedEngine(cfg, SimulatedLLMBackend(pairs), judge=judge,
+                        batch_size=32, **kw), judge
+
+
+class TestWorkflow:
+    def test_repeat_query_becomes_hit(self, small_world):
+        pairs, _ = small_world
+        eng, _ = make_engine(pairs)
+        r = Request(query="how do i print the current time in python",
+                    category="python_basics")
+        first = eng.process([r])[0]
+        assert not first.cached
+        second = eng.process([r])[0]      # identical query -> cache hit
+        assert second.cached
+        assert second.score > 0.999
+        assert second.answer == first.answer
+
+    def test_warm_cache_serves_paraphrases(self, small_world):
+        pairs, queries = small_world
+        eng, _ = make_engine(pairs)
+        eng.warm(pairs)
+        para = [q for q in queries if q.source_id >= 0][:20]
+        resp = eng.process([Request(query=q.query, category=q.category,
+                                    source_id=q.source_id,
+                                    semantic_key=q.semantic_key)
+                            for q in para])
+        hit_rate = sum(r.cached for r in resp) / len(resp)
+        assert hit_rate >= 0.5
+
+    def test_miss_inserts_and_next_hit(self, small_world):
+        pairs, _ = small_world
+        eng, _ = make_engine(pairs)
+        novel = Request(query="what is the airspeed velocity of a laden swallow")
+        r1 = eng.process([novel])[0]
+        assert not r1.cached
+        r2 = eng.process([novel])[0]
+        assert r2.cached and r2.answer == r1.answer
+
+    def test_ttl_expiry_in_serving(self, small_world):
+        pairs, _ = small_world
+        cfg = CacheConfig(dim=384, capacity=1024, value_len=48, ttl=60.0,
+                          threshold=0.8)
+        eng, _ = make_engine(pairs, config=cfg)
+        q = Request(query="does the blender come with a warranty")
+        eng.process([q])
+        assert eng.process([q])[0].cached
+        eng.tick(61.0)                      # advance past TTL
+        assert not eng.process([q])[0].cached
+
+    def test_cost_accounting(self, small_world):
+        pairs, _ = small_world
+        eng, _ = make_engine(pairs)
+        qs = [Request(query=f"completely unique question number {i} about {i}")
+              for i in range(10)]
+        eng.process(qs)            # all miss
+        eng.process(qs)            # all hit
+        s = eng.metrics.summary()
+        assert s["queries"] == 20
+        assert s["total_cost_usd"] == pytest.approx(
+            10 * eng.backend.cost_per_call_usd)
+        assert s["baseline_cost_usd"] == pytest.approx(
+            20 * eng.backend.cost_per_call_usd)
+        assert s["cost_saving_pct"] == pytest.approx(50.0)
+        assert s["avg_latency_with_cache_s"] < s["avg_latency_without_cache_s"]
+
+
+@pytest.mark.slow
+class TestPaperReproduction:
+    """The headline claim: hit rates in the paper's band with >88% accuracy."""
+
+    def test_paper_band(self):
+        pairs = build_corpus(2000, seed=0)          # 8,000 QA pairs (§3.1)
+        queries = build_test_queries(pairs, n_per_category=500, seed=1)
+        eng, _ = make_engine(pairs, config=CacheConfig(
+            dim=384, capacity=16384, value_len=48, ttl=None, threshold=0.8))
+        eng.warm(pairs)
+        eng.process([Request(query=q.query, category=q.category,
+                             source_id=q.source_id,
+                             semantic_key=q.semantic_key) for q in queries])
+        s = eng.metrics.summary()
+        for cat in CATEGORIES:
+            m = s["categories"][cat]
+            # paper band (Table 1): 61.6%..68.8% hits, positive > 92.5%;
+            # assert a tolerant envelope around it
+            assert 0.55 <= m["hit_rate"] <= 0.78, (cat, m)
+            assert m["positive_rate"] >= 0.85, (cat, m)
+        assert s["cost_saving_pct"] >= 55.0
+
+
+class TestEngineInternals:
+    def test_stats_consistency(self, small_world):
+        pairs, queries = small_world
+        eng, _ = make_engine(pairs)
+        eng.warm(pairs[:100])
+        reqs = [Request(query=q.query, category=q.category,
+                        source_id=q.source_id, semantic_key=q.semantic_key)
+                for q in queries[:64]]
+        resp = eng.process(reqs)
+        assert int(eng.stats.lookups) == 64
+        assert int(eng.stats.hits) == sum(r.cached for r in resp)
+        # every miss called the backend exactly once
+        assert eng.backend.calls == sum(not r.cached for r in resp)
+
+    def test_batcher_splits(self):
+        from repro.serving.engine import Batcher
+        b = Batcher(batch_size=8)
+        reqs = [Request(query=str(i)) for i in range(20)]
+        sizes = [len(x) for x in b.batches(reqs)]
+        assert sizes == [8, 8, 4]
+
+
+class TestAdaptiveThresholdEngine:
+    """Paper §2.10 'Dynamic Threshold Adjustment' — closed control loop."""
+
+    def test_threshold_rises_when_precision_low(self, small_world):
+        from repro.core.policy import AdaptiveThreshold
+        import numpy as np
+        pairs, queries = small_world
+        by_id = {p.qa_id: p for p in pairs}
+
+        def judge(req, sid):
+            return sid >= 0 and sid in by_id and \
+                by_id[sid].semantic_key == req.semantic_key
+
+        from repro.core.types import CacheConfig
+        cfg = CacheConfig(dim=384, capacity=4096, value_len=48, ttl=None,
+                          threshold=0.6)
+        eng = CachedEngine(cfg, SimulatedLLMBackend(pairs), judge=judge,
+                           batch_size=32,
+                           policy=AdaptiveThreshold(
+                               init=0.6, target_precision=0.99, lr=0.1,
+                               ema=0.5))
+        eng.warm(pairs)
+        reqs = [Request(query=q.query, category=q.category,
+                        source_id=q.source_id, semantic_key=q.semantic_key)
+                for q in queries]
+        eng.process(reqs * 2)   # enough batches for the controller to move
+        final_thr = float(np.asarray(eng.policy_state)[0])
+        # at 0.6 the cache over-hits with imperfect precision; the controller
+        # must push the threshold up toward the paper's knee
+        assert final_thr > 0.62, final_thr
+
+
+class TestIVFEngine:
+    """IVF-indexed engine (TPU-native sub-linear ANN + periodic rebuild —
+    the paper's HNSW rebalancing analogue) must track the exact engine."""
+
+    def test_ivf_hits_match_exact(self, small_world):
+        from repro.core.index import IVFIndex
+        pairs, queries = small_world
+        reqs = [Request(query=q.query, category=q.category,
+                        source_id=q.source_id, semantic_key=q.semantic_key)
+                for q in queries]
+        hits = {}
+        for name, idx in [("exact", None),
+                          ("ivf", IVFIndex(ncentroids=32, nprobe=8,
+                                           bucket_cap=128, topk=4))]:
+            eng, _ = make_engine(pairs, index=idx)
+            eng.warm(pairs)
+            resp = eng.process(reqs)
+            hits[name] = sum(r.cached for r in resp)
+        assert hits["ivf"] >= 0.85 * hits["exact"], hits
+
+
+class TestCachePersistence:
+    """Redis-persistence analogue: slab snapshot + warm restart."""
+
+    def test_save_load_roundtrip(self, small_world, tmp_path):
+        import os
+        pairs, queries = small_world
+        eng, _ = make_engine(pairs)
+        eng.warm(pairs)
+        path = os.path.join(str(tmp_path), "slab.npz")
+        eng.save_cache(path)
+
+        eng2, _ = make_engine(pairs)        # fresh engine, empty slab
+        para = [q for q in queries if q.source_id >= 0][:16]
+        reqs = [Request(query=q.query, category=q.category,
+                        source_id=q.source_id, semantic_key=q.semantic_key)
+                for q in para]
+        cold = sum(r.cached for r in eng2.process(reqs))
+        eng3, _ = make_engine(pairs)
+        eng3.load_cache(path)               # warm restart from the snapshot
+        warm = sum(r.cached for r in eng3.process(reqs))
+        assert warm > cold
+        assert warm >= 8

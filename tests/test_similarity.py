@@ -1,0 +1,71 @@
+"""Unit + property tests for the similarity primitives (paper §2.6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.similarity import (best_match, cosine_scores,
+                                   cosine_similarity, l2_normalize,
+                                   masked_topk)
+
+
+def test_cosine_identical():
+    v = jnp.asarray([[1.0, 2.0, 3.0]])
+    assert float(cosine_similarity(v, v)[0]) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_cosine_orthogonal():
+    u = jnp.asarray([1.0, 0.0])
+    v = jnp.asarray([0.0, 1.0])
+    assert float(cosine_similarity(u, v)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_cosine_opposite():
+    u = jnp.asarray([1.0, 2.0])
+    assert float(cosine_similarity(u, -u)) == pytest.approx(-1.0, abs=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 32), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_cosine_bounded(dim, n, seed):
+    """Property: cosine similarity always lies in [-1, 1]."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    u = jax.random.normal(k1, (n, dim))
+    v = jax.random.normal(k2, (n, dim))
+    sims = cosine_similarity(u, v)
+    assert bool(jnp.all(sims <= 1.0 + 1e-5)) and bool(jnp.all(sims >= -1.0 - 1e-5))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 16), st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+def test_normalize_unit_norm(b, d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, d))
+    n = jnp.linalg.norm(l2_normalize(x), axis=-1)
+    np.testing.assert_allclose(np.asarray(n), 1.0, rtol=1e-5)
+
+
+def test_scores_mask():
+    q = l2_normalize(jnp.ones((1, 4)))
+    keys = l2_normalize(jnp.ones((3, 4)))
+    valid = jnp.asarray([True, False, True])
+    s = cosine_scores(q, keys, valid)
+    assert s[0, 1] == -jnp.inf
+    assert float(s[0, 0]) == pytest.approx(1.0, abs=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(4, 64), st.integers(1, 4),
+       st.integers(0, 2 ** 31 - 1))
+def test_topk_matches_sort(b, n, k, seed):
+    """Property: masked_topk == full sort's top-k."""
+    s = jax.random.normal(jax.random.PRNGKey(seed), (b, n))
+    vals, idx = masked_topk(s, k)
+    ref = jnp.sort(s, axis=-1)[:, ::-1][:, :k]
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(ref), rtol=1e-6)
+
+
+def test_best_match():
+    s = jnp.asarray([[0.1, 0.9, 0.5]])
+    idx, val = best_match(s)
+    assert int(idx[0]) == 1 and float(val[0]) == pytest.approx(0.9)

@@ -1,0 +1,130 @@
+"""Optimizer, schedule, checkpointing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import (AdamWConfig, adamw_update, global_norm,
+                            init_adamw, load_checkpoint, lr_at,
+                            save_checkpoint)
+
+
+def quad_loss(params, target):
+    return jnp.sum(jnp.square(params["w"] - target)) + \
+        jnp.sum(jnp.square(params["b"]))
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                          weight_decay=0.0)
+        params = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+        target = jnp.ones((4, 4)) * 3.0
+        opt = init_adamw(params)
+        for _ in range(150):
+            loss, grads = jax.value_and_grad(quad_loss)(params, target)
+            params, opt, _ = adamw_update(cfg, params, grads, opt)
+        assert float(quad_loss(params, target)) < 0.1
+
+    def test_grad_clipping(self):
+        cfg = AdamWConfig(lr=1e-3, grad_clip=1.0, warmup_steps=0)
+        params = {"w": jnp.zeros((2, 2))}
+        grads = {"w": jnp.full((2, 2), 1e6)}
+        opt = init_adamw(params)
+        _, _, metrics = adamw_update(cfg, params, grads, opt)
+        assert float(metrics["grad_norm"]) > 1e5  # reported pre-clip
+
+    def test_weight_decay_only_on_matrices(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=1.0, warmup_steps=0)
+        params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+        grads = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+        opt = init_adamw(params)
+        new, _, _ = adamw_update(cfg, params, grads, opt)
+        assert float(jnp.max(jnp.abs(new["w"]))) < 1.0   # decayed
+        np.testing.assert_allclose(np.asarray(new["b"]), 1.0)  # not decayed
+
+    def test_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+        lrs = [float(lr_at(cfg, jnp.asarray(s))) for s in range(0, 101, 10)]
+        assert lrs[0] == 0.0
+        assert lrs[1] == pytest.approx(1.0, abs=0.05)
+        assert lrs[-1] == pytest.approx(0.1, abs=0.02)
+        assert all(a >= b - 1e-6 for a, b in zip(lrs[1:], lrs[2:]))
+
+    def test_global_norm(self):
+        t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+        assert float(global_norm(t)) == pytest.approx(5.0)
+
+
+class TestCheckpoint:
+    def test_roundtrip_nested(self):
+        tree = {"layer": {"w": jnp.arange(6.0).reshape(2, 3),
+                          "b": jnp.ones((3,))},
+                "step": jnp.asarray(7)}
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck.npz")
+            save_checkpoint(p, tree, metadata={"note": "test"})
+            restored = load_checkpoint(p, jax.tree_util.tree_map(
+                jnp.zeros_like, tree))
+        np.testing.assert_array_equal(np.asarray(restored["layer"]["w"]),
+                                      np.asarray(tree["layer"]["w"]))
+        assert int(restored["step"]) == 7
+
+    def test_shape_mismatch_raises(self):
+        tree = {"w": jnp.ones((2, 2))}
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck.npz")
+            save_checkpoint(p, tree)
+            bad = {"w": jnp.ones((3, 3))}
+            with pytest.raises(ValueError):
+                load_checkpoint(p, bad)
+
+    def test_cache_state_checkpoint(self):
+        """The Redis-persistence analogue: slab state round-trips."""
+        from repro.core import CacheConfig, SemanticCache
+        import jax.random as jr
+        c = SemanticCache(CacheConfig(dim=8, capacity=16, value_len=4))
+        state, stats = c.init()
+        emb = jr.normal(jr.PRNGKey(0), (4, 8))
+        vals = jnp.arange(16).reshape(4, 4)
+        state, stats = c.insert(state, stats, emb, vals, jnp.full((4,), 4), 0.0)
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "cache.npz")
+            save_checkpoint(p, state)
+            restored = load_checkpoint(p, jax.tree_util.tree_map(
+                jnp.zeros_like, state))
+        res, *_ = c.lookup(restored, stats, emb, 1.0)
+        assert bool(jnp.all(res.hit))
+
+
+class TestTrainSmallModel:
+    @pytest.mark.slow
+    def test_loss_decreases_100m_scale_family(self):
+        """A few steps of real training on a reduced arch: loss must drop."""
+        from repro.configs import get_arch
+        from repro.models.model import Model
+        cfg = get_arch("deepseek-7b").reduced()
+        m = Model(cfg)
+        params = m.init_params(jax.random.PRNGKey(0))
+        opt = init_adamw(params)
+        ocfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=50)
+        data_rng = jax.random.PRNGKey(42)
+
+        @jax.jit
+        def step(params, opt, tokens):
+            loss, grads = jax.value_and_grad(
+                lambda p: m.loss_fn(p, tokens, remat=False))(params)
+            params, opt, _ = adamw_update(ocfg, params, grads, opt)
+            return params, opt, loss
+
+        # memorize a tiny corpus: loss must drop substantially
+        tokens = jax.random.randint(data_rng, (4, 64), 0, cfg.vocab)
+        losses = []
+        for _ in range(30):
+            params, opt, loss = step(params, opt, tokens)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 1.0, losses[::10]
