@@ -93,7 +93,7 @@ def hnsw_vs_exact():
 
 
 def ivf_bench():
-    from repro.core.index import ExactIndex, IVFIndex
+    from repro.core.index import ExactIndex, ExactState, IVFIndex
     d, n, nq = 384, 65536, 64
     rng = jax.random.PRNGKey(0)
     keys = jax.random.normal(rng, (n, d))
@@ -105,7 +105,7 @@ def ivf_bench():
     st = ivf.fit(keys, valid, jax.random.PRNGKey(2))
     fs = jax.jit(lambda q: ivf.search(st, q, keys, valid))
     fe = jax.jit(lambda q: ExactIndex(topk=1, backend="jnp").search(
-        q, keys, valid))
+        ExactState(), q, keys, valid))
     t_ivf = _time(fs, queries)
     t_ex = _time(fe, queries)
     _, i_ivf = fs(queries)
@@ -116,5 +116,48 @@ def ivf_bench():
         "us_per_call": t_ivf * 1e6,
         "derived": (f"ivf_us={t_ivf*1e6:.0f} exact_us={t_ex*1e6:.0f} "
                     f"speedup={t_ex/t_ivf:.2f}x recall@1={recall:.3f}"),
+    }]
+    return rows, {}
+
+
+def fused_step_bench():
+    """Fused ``SemanticCache.step`` (one compiled dispatch) vs the real
+    separate path — two jitted dispatches, lookup then masked insert, with
+    the hit mask crossing the dispatch boundary — on a hot mixed hit/miss
+    batch (DESIGN.md §7)."""
+    from repro.core import CacheConfig, SemanticCache
+    d, n, b, vlen = 384, 32768, 64, 32
+    cfg = CacheConfig(dim=d, capacity=n, value_len=vlen, ttl=None,
+                      threshold=0.8)
+    cache = SemanticCache(cfg)
+    runtime = cache.init()
+    rng = jax.random.PRNGKey(0)
+    warm_q = jax.random.normal(rng, (n // 2, d))
+    vals = jnp.zeros((n // 2, vlen), jnp.int32)
+    runtime = cache.insert(runtime, warm_q, vals,
+                           jnp.full((n // 2,), vlen), 0.0)
+    # half the batch paraphrases cached entries (hits), half is novel
+    queries = jnp.concatenate([
+        warm_q[:b // 2] + 0.01 * jax.random.normal(rng, (b // 2, d)),
+        jax.random.normal(jax.random.PRNGKey(1), (b // 2, d))])
+    mv = jnp.zeros((b, vlen), jnp.int32)
+    ml = jnp.full((b,), vlen)
+
+    fused = jax.jit(lambda rt, q, t: cache.step(rt, q, mv, ml, t))
+    lookup_j = jax.jit(lambda rt, q, t: cache.lookup(rt, q, t))
+    insert_j = jax.jit(lambda rt, q, m, t: cache.insert(
+        rt, q, mv, ml, t, mask=m))
+
+    def sep(q):
+        res, rt = lookup_j(runtime, q, jnp.float32(1.0))
+        return insert_j(rt, q, ~res.hit, jnp.float32(1.0))
+
+    t_fused = _time(lambda q: fused(runtime, q, jnp.float32(1.0)), queries)
+    t_sep = _time(sep, queries)
+    rows = [{
+        "name": "beyond/fused_step_n32768_b64",
+        "us_per_call": t_fused * 1e6,
+        "derived": (f"fused_us={t_fused*1e6:.0f} separate_us={t_sep*1e6:.0f} "
+                    f"speedup={t_sep/max(t_fused, 1e-9):.2f}x"),
     }]
     return rows, {}

@@ -8,7 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   sec2.7/*        — TTL behaviour
   kernel/*        — scoring-kernel scaling (slab 4k..512k)
   design3/*       — HNSW (paper algorithm) vs exact MXU scoring
-  beyond/*        — IVF index (beyond-paper ANN)
+  beyond/*        — IVF index (beyond-paper ANN); fused runtime step()
   roofline/*      — per (arch x shape) dominant roofline terms (from dry-run)
   dryrun/*        — dry-run coverage counters
 
@@ -56,6 +56,7 @@ def main() -> None:
         ("kernel", kernel_bench.cosine_topk_scaling),
         ("design3", kernel_bench.hnsw_vs_exact),
         ("beyond", kernel_bench.ivf_bench),
+        ("beyond-fused", kernel_bench.fused_step_bench),
         ("roofline", roofline_report.rows_for_run),
         ("dryrun", roofline_report.dryrun_summary_rows),
     ]

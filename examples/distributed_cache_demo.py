@@ -5,7 +5,8 @@
 Runs the sharded cache on 8 forced host devices: the slab shards over the
 ``data`` mesh axis, lookups fan out with a pmax combine, inserts route
 round-robin — a query cached on one shard is served to a query landing
-anywhere on the mesh.
+anywhere on the mesh. State is one ``CacheRuntime`` pytree: slab sharded,
+stats/policy replicated, threaded through the fused step.
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -24,7 +25,7 @@ print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
 cache = SemanticCache(CacheConfig(dim=384, capacity=1024, value_len=24,
                                   ttl=3600.0, threshold=0.8))
 dc = DistributedCache(cache, mesh, cache_axes=("data",))
-state, _ = dc.init()
+runtime = dc.init()
 step = dc.make_lookup_insert()
 embedder = HashEmbedder()
 tok = HashTokenizer()
@@ -43,11 +44,11 @@ q_emb = jnp.asarray(embedder.embed_batch([q for q, _ in faqs]))
 vals, lens = tok.encode_batch([a for _, a in faqs], 24)
 
 # pass 1: cold — every query misses and the responses are inserted (sharded)
-state, (slot, score, hit, v, vl, src) = step(
-    state, q_emb, jnp.asarray(vals), jnp.asarray(lens),
+runtime, (slot, score, hit, v, vl, src) = step(
+    runtime, q_emb, jnp.asarray(vals), jnp.asarray(lens),
     jnp.arange(len(faqs)), jnp.float32(0.0))
 print(f"cold pass: hits={int(np.asarray(hit).sum())}/4")
-per_shard = np.asarray(state.valid).reshape(4, -1).sum(axis=1)
+per_shard = np.asarray(runtime.state.valid).reshape(4, -1).sum(axis=1)
 print(f"entries per cache shard (round-robin): {per_shard.tolist()}")
 
 # pass 2: paraphrased traffic — served from whichever shard owns the entry
@@ -58,9 +59,11 @@ paraphrases = [
     "how do i order a new debit card today",
 ]
 p_emb = jnp.asarray(embedder.embed_batch(paraphrases))
-state, (slot, score, hit, v, vl, src) = step(
-    state, p_emb, jnp.asarray(vals), jnp.asarray(lens),
+runtime, (slot, score, hit, v, vl, src) = step(
+    runtime, p_emb, jnp.asarray(vals), jnp.asarray(lens),
     jnp.arange(len(faqs)), jnp.float32(1.0))
 for i, p in enumerate(paraphrases):
     print(f"[hit={bool(np.asarray(hit)[i])} score={float(np.asarray(score)[i]):.2f} "
           f"shard={int(np.asarray(slot)[i]) // dc.local_config.capacity}] {p}")
+print(f"global stats: lookups={int(runtime.stats.lookups)} "
+      f"hits={int(runtime.stats.hits)} inserts={int(runtime.stats.inserts)}")

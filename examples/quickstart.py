@@ -3,7 +3,9 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Embeds queries, caches responses, and shows a paraphrase being served from
-the cache without an LLM call (the paper's core loop, §2.5).
+the cache without an LLM call (the paper's core loop, §2.5). All cache
+state — slab, counters, policy and index state — lives in one
+``CacheRuntime`` pytree threaded through the pure lookup/insert calls.
 """
 import jax.numpy as jnp
 
@@ -14,7 +16,7 @@ from repro.data.tokenizer import HashTokenizer
 # 1. a semantic cache: 384-dim embeddings, cosine threshold 0.8, 1h TTL
 cache = SemanticCache(CacheConfig(dim=384, capacity=1024, value_len=32,
                                   ttl=3600.0, threshold=0.8))
-state, stats = cache.init()
+runtime = cache.init()           # one pytree: slab + stats + policy + index
 embedder = HashEmbedder(dim=384)
 tok = HashTokenizer()
 
@@ -23,13 +25,13 @@ question = "How do I reset my online banking password?"
 answer = "Go to Settings -> Security -> Reset password, then follow the email link."
 emb = jnp.asarray(embedder.embed_batch([question]))
 toks, lens = tok.encode_batch([answer], 32)
-state, stats = cache.insert(state, stats, emb, jnp.asarray(toks),
-                            jnp.asarray(lens), now=0.0)
+runtime = cache.insert(runtime, emb, jnp.asarray(toks),
+                       jnp.asarray(lens), now=0.0)
 
 # 3. a semantically similar query arrives
 paraphrase = "please how do I reset my online banking password"
 q = jnp.asarray(embedder.embed_batch([paraphrase]))
-result, state, stats = cache.lookup(state, stats, q, now=10.0)
+result, runtime = cache.lookup(runtime, q, now=10.0)
 
 print(f"query      : {paraphrase}")
 print(f"cosine     : {float(result.score[0]):.3f}")
@@ -38,7 +40,8 @@ print(f"answer     : {tok.decode(result.values[0])}")
 
 # 4. an unrelated query misses -> would go to the LLM
 other = jnp.asarray(embedder.embed_batch(["what's the best pizza topping"]))
-result, state, stats = cache.lookup(state, stats, other, now=11.0)
+result, runtime = cache.lookup(runtime, other, now=11.0)
 print(f"unrelated  : hit={bool(result.hit[0])} "
       f"(score {float(result.score[0]):.3f}) -> call the LLM")
-print(f"stats      : lookups={int(stats.lookups)} hits={int(stats.hits)}")
+print(f"stats      : lookups={int(runtime.stats.lookups)} "
+      f"hits={int(runtime.stats.hits)}")

@@ -1,0 +1,27 @@
+"""Small jax version-compatibility shims (single source of truth).
+
+The repo targets the latest stable jax API but must run on the pinned CI
+jax[cpu] as well; the two differences that matter here:
+
+* ``shard_map`` moved from ``jax.experimental.shard_map`` to top-level
+  ``jax.shard_map``;
+* its replication-check kwarg was renamed ``check_rep`` -> ``check_vma``.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.5 exports it at top level
+    from jax import shard_map as _shard_map_fn
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_fn
+
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map_fn).parameters
+             else "check_rep")
+
+
+def shard_map_nocheck(f, mesh, in_specs, out_specs):
+    """shard_map with replication checking disabled, any jax version."""
+    return _shard_map_fn(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, **{_CHECK_KW: False})

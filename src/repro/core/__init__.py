@@ -2,6 +2,7 @@
 
 Public API:
   CacheConfig, CacheState, CacheStats, LookupResult  (types)
+  CacheRuntime, Index, Policy                         (runtime pytree + seams)
   SemanticCache                                       (orchestration)
   ExactIndex, IVFIndex, HNSWIndex                     (ANN indexes)
   FixedThreshold, PerCategoryThreshold, AdaptiveThreshold (policies)
@@ -9,8 +10,9 @@ Public API:
 """
 from repro.core.types import (CacheConfig, CacheState, CacheStats,
                               LookupResult, init_cache_state)
+from repro.core.runtime import CacheRuntime, Index, Policy
 from repro.core.cache import SemanticCache
-from repro.core.index import ExactIndex, IVFIndex, IVFState
+from repro.core.index import ExactIndex, ExactState, IVFIndex, IVFState
 from repro.core.hnsw import HNSWIndex
 from repro.core.policy import (AdaptiveThreshold, FixedThreshold,
                                PerCategoryThreshold, make_policy)
@@ -18,7 +20,8 @@ from repro.core.distributed import DistributedCache
 
 __all__ = [
     "CacheConfig", "CacheState", "CacheStats", "LookupResult",
-    "init_cache_state", "SemanticCache", "ExactIndex", "IVFIndex", "IVFState",
-    "HNSWIndex", "AdaptiveThreshold", "FixedThreshold", "PerCategoryThreshold",
+    "init_cache_state", "CacheRuntime", "Index", "Policy", "SemanticCache",
+    "ExactIndex", "ExactState", "IVFIndex", "IVFState", "HNSWIndex",
+    "AdaptiveThreshold", "FixedThreshold", "PerCategoryThreshold",
     "make_policy", "DistributedCache",
 ]

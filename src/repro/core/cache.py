@@ -10,8 +10,21 @@ Workflow per batch of queries:
 
 Everything is batched (beyond-paper: the paper scores one query at a time;
 batching turns scoring into a GEMM — see DESIGN.md §11.5) and functional:
-``(state, stats)`` thread through, so the whole serve step can live inside
-one ``jax.jit`` with donated buffers.
+*all* mutable state — slab, counters, policy state, index state — lives in
+one ``CacheRuntime`` pytree (DESIGN.md §2), so every method is a pure
+``runtime -> runtime`` function and the whole serve step can live inside
+one ``jax.jit`` with donated buffers:
+
+    cache = SemanticCache(config, index=IVFIndex(), policy=AdaptiveThreshold())
+    runtime = cache.init()
+    result, runtime = cache.lookup(runtime, queries, now)
+    runtime = cache.insert(runtime, queries, values, lens, now, mask=~result.hit)
+    # ... or both at once, shape-static (DESIGN.md §7):
+    result, runtime = cache.step(runtime, queries, miss_values, miss_lens, now)
+
+The index and policy are protocol plugins (``repro.core.runtime.Index`` /
+``Policy``): Exact and IVF — and any future structure — are interchangeable
+with no ``isinstance`` branches and no out-of-band ``fit`` calls.
 """
 from __future__ import annotations
 
@@ -22,21 +35,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import store
-from repro.core.index import ExactIndex, IVFIndex, IVFState
+from repro.core.index import ExactIndex
 from repro.core.policy import FixedThreshold
-from repro.core.types import (CacheConfig, CacheState, CacheStats,
-                              LookupResult, init_cache_state)
+from repro.core.runtime import CacheRuntime
+from repro.core.types import (CacheConfig, CacheStats, LookupResult,
+                              init_cache_state)
 
 Array = jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
 class SemanticCache:
-    """Stateless orchestrator; all state lives in (CacheState, CacheStats)."""
+    """Stateless orchestrator; all state lives in one CacheRuntime pytree."""
 
     config: CacheConfig
-    index: Any = None          # ExactIndex | IVFIndex (None -> Exact)
-    policy: Any = None         # threshold policy (None -> Fixed(config.threshold))
+    index: Any = None          # Index protocol plugin (None -> ExactIndex)
+    policy: Any = None         # Policy protocol plugin (None -> FixedThreshold)
 
     def __post_init__(self):
         if self.index is None:
@@ -46,42 +60,41 @@ class SemanticCache:
                 self, "policy", FixedThreshold(threshold=self.config.threshold))
 
     # -- state ------------------------------------------------------------
-    def init(self) -> tuple[CacheState, CacheStats]:
-        return init_cache_state(self.config), CacheStats.zeros()
-
-    def init_policy(self) -> Array:
-        return self.policy.init_state()
+    def init(self) -> CacheRuntime:
+        """Fresh runtime: empty slab, zero counters, init policy/index state."""
+        return CacheRuntime(
+            state=init_cache_state(self.config),
+            stats=CacheStats.zeros(),
+            policy_state=self.policy.init_state(),
+            index_state=self.index.init(self.config),
+        )
 
     # -- lookup (paper §2.5 step 1) ----------------------------------------
     def lookup(
         self,
-        state: CacheState,
-        stats: CacheStats,
+        runtime: CacheRuntime,
         queries: Array,                 # (B, d) embeddings (normalized or not)
         now: Array | float,
         *,
-        policy_state: Array | None = None,
-        ivf_state: IVFState | None = None,
         update_counters: bool = True,
-    ) -> tuple[LookupResult, CacheState, CacheStats]:
+    ) -> tuple[LookupResult, CacheRuntime]:
+        """ANN search + threshold decision. ``update_counters=False`` gives a
+        pure peek (no LRU touch, no stats, no policy-state commit) — the
+        engine uses it to learn the miss set before the fused ``step``."""
+        state, stats = runtime.state, runtime.stats
         b = queries.shape[0]
         now = jnp.asarray(now, dtype=jnp.float32)
         alive = store.alive_mask(state, now)
 
-        if isinstance(self.index, IVFIndex):
-            if ivf_state is None:
-                raise ValueError("IVFIndex requires ivf_state (call index.fit)")
-            top_s, top_i = self.index.search(ivf_state, queries, state.keys, alive)
-        else:
-            top_s, top_i = self.index.search(queries, state.keys, alive)
+        top_s, top_i = self.index.search(
+            runtime.index_state, queries, state.keys, alive)
 
         best_score = top_s[:, 0]
         best_idx = jnp.maximum(top_i[:, 0], 0)  # -1 guard when cache empty
         any_alive = jnp.any(alive)
         best_score = jnp.where(any_alive & (top_i[:, 0] >= 0), best_score, -jnp.inf)
 
-        pstate = policy_state if policy_state is not None else self.init_policy()
-        hit, pstate = self.policy.decide(best_score, pstate)
+        hit, pstate = self.policy.decide(best_score, runtime.policy_state)
         hit = hit & (best_score > -jnp.inf)
 
         result = LookupResult(
@@ -94,23 +107,17 @@ class SemanticCache:
             topk_index=top_i,
             topk_score=top_s,
         )
-        if update_counters:
-            state = store.touch(state, best_idx, now, hit)
-            nhit = jnp.sum(hit).astype(jnp.int32)
-            stats = CacheStats(
-                lookups=stats.lookups + b,
-                hits=stats.hits + nhit,
-                misses=stats.misses + (b - nhit),
-                expired_evictions=stats.expired_evictions,
-                inserts=stats.inserts,
-            )
-        return result, state, stats
+        if not update_counters:
+            return result, runtime
+        state = store.touch(state, best_idx, now, hit)
+        stats = stats.record_lookups(b, jnp.sum(hit).astype(jnp.int32))
+        return result, runtime.replace(state=state, stats=stats,
+                                       policy_state=pstate)
 
     # -- insert (paper §2.5 step 3) -----------------------------------------
     def insert(
         self,
-        state: CacheState,
-        stats: CacheStats,
+        runtime: CacheRuntime,
         queries: Array,
         values: Array,
         value_lens: Array,
@@ -118,52 +125,89 @@ class SemanticCache:
         *,
         source_id: Array | None = None,
         mask: Array | None = None,     # typically = ~hit from the lookup
-    ) -> tuple[CacheState, CacheStats]:
-        state = store.insert(
-            self.config, state, queries, values, value_lens, now,
+    ) -> CacheRuntime:
+        state, slots = store.insert(
+            self.config, runtime.state, queries, values, value_lens, now,
             source_id=source_id, mask=mask)
-        n = jnp.sum(mask).astype(jnp.int32) if mask is not None else queries.shape[0]
-        stats = dataclasses.replace(stats, inserts=stats.inserts + n)
-        return state, stats
+        if mask is None:
+            mask = jnp.ones((queries.shape[0],), dtype=bool)
+        # the index absorbs the new rows so they are findable before the
+        # next periodic refit (DESIGN.md §8.2)
+        istate = self.index.absorb(runtime.index_state, slots, queries, mask)
+        n = jnp.sum(mask).astype(jnp.int32)
+        stats = dataclasses.replace(
+            runtime.stats, inserts=runtime.stats.inserts + n)
+        return runtime.replace(state=state, stats=stats, index_state=istate)
 
     # -- maintenance (paper §2.7 TTL; §2.4 rebalancing) ----------------------
-    def expire(self, state: CacheState, stats: CacheStats, now: Array | float
-               ) -> tuple[CacheState, CacheStats]:
-        state, n = store.expire(state, now)
+    def expire(self, runtime: CacheRuntime, now: Array | float) -> CacheRuntime:
+        state, n = store.expire(runtime.state, now)
         stats = dataclasses.replace(
-            stats, expired_evictions=stats.expired_evictions + n)
-        return state, stats
+            runtime.stats,
+            expired_evictions=runtime.stats.expired_evictions + n)
+        return runtime.replace(state=state, stats=stats)
 
-    def rebuild_index(self, state: CacheState, now: Array | float, rng: Array
-                      ) -> IVFState | None:
-        """Periodic IVF rebuild — the analogue of HNSW rebalancing (§2.4)."""
-        if isinstance(self.index, IVFIndex):
-            return self.index.fit(state.keys, store.alive_mask(state, now), rng)
-        return None
+    def refit(self, runtime: CacheRuntime, now: Array | float, rng: Array
+              ) -> CacheRuntime:
+        """Periodic index rebuild — the analogue of HNSW rebalancing (§2.4).
+        Uniform across index types: a no-op for stateless indexes."""
+        alive = store.alive_mask(runtime.state, jnp.asarray(now, jnp.float32))
+        istate = self.index.refit(
+            runtime.index_state, runtime.state.keys, alive, rng)
+        return runtime.replace(index_state=istate)
 
-    # -- fused serve-side step (beyond-paper: single jit) --------------------
-    def lookup_insert(
+    def update_policy(self, runtime: CacheRuntime, *, was_positive: Array,
+                      was_hit: Array) -> CacheRuntime:
+        """Judged-outcome feedback into the policy (paper §2.10 loop)."""
+        pstate = self.policy.update(
+            runtime.policy_state, was_positive=was_positive, was_hit=was_hit)
+        return runtime.replace(policy_state=pstate)
+
+    # -- fused serve-side step (beyond-paper: single jit — DESIGN.md §7) -----
+    def commit(self, runtime: CacheRuntime, peeked: LookupResult,
+               now: Array | float) -> tuple[LookupResult, CacheRuntime]:
+        """Commit a previously peeked lookup (counters, LRU touch, policy
+        state) *without* re-searching the slab. The hit mask is re-derived
+        from the peeked scores against the current policy state, so
+        ``peek -> commit`` is bit-identical to a counted ``lookup``."""
+        now = jnp.asarray(now, dtype=jnp.float32)
+        hit, pstate = self.policy.decide(peeked.score, runtime.policy_state)
+        hit = hit & (peeked.score > -jnp.inf)
+        result = dataclasses.replace(peeked, hit=hit)
+        state = store.touch(runtime.state, peeked.index, now, hit)
+        stats = runtime.stats.record_lookups(
+            peeked.score.shape[0], jnp.sum(hit).astype(jnp.int32))
+        return result, runtime.replace(state=state, stats=stats,
+                                       policy_state=pstate)
+
+    def step(
         self,
-        state: CacheState,
-        stats: CacheStats,
+        runtime: CacheRuntime,
         queries: Array,
         miss_values: Array,
         miss_value_lens: Array,
         now: Array | float,
         *,
         source_id: Array | None = None,
-        policy_state: Array | None = None,
-    ) -> tuple[LookupResult, CacheState, CacheStats]:
+        peeked: LookupResult | None = None,
+    ) -> tuple[LookupResult, CacheRuntime]:
         """Lookup, then insert exactly the missed queries' fresh responses.
 
-        ``miss_values`` are the responses the LLM backend produced for every
-        query (rows for hits are ignored via the insert mask) — this is the
-        shape-static formulation that lets the whole hit/miss branch live in
-        one compiled step (no host round-trip for the branch).
+        ``miss_values`` carries a response row for every query (rows for hits
+        are ignored via the insert mask) — the shape-static formulation that
+        lets the whole hit/miss branch live in one compiled step: no host
+        round-trip for the branch, no per-miss-count retraces, donated slab.
+
+        ``peeked`` (a result from ``lookup(update_counters=False)``) skips
+        the internal re-search: the engine peeks once to learn the miss set,
+        then commits + inserts here, so the slab is searched exactly once
+        per batch (DESIGN.md §7).
         """
-        result, state, stats = self.lookup(
-            state, stats, queries, now, policy_state=policy_state)
-        state, stats = self.insert(
-            state, stats, queries, miss_values, miss_value_lens, now,
+        if peeked is None:
+            result, runtime = self.lookup(runtime, queries, now)
+        else:
+            result, runtime = self.commit(runtime, peeked, now)
+        runtime = self.insert(
+            runtime, queries, miss_values, miss_value_lens, now,
             source_id=source_id, mask=~result.hit)
-        return result, state, stats
+        return result, runtime

@@ -18,22 +18,29 @@ Sharding scheme (DESIGN.md §5):
     ``pod`` axis joins the same combine, so a response cached in pod 0
     serves a query landing on pod 1.
 
+State is one ``CacheRuntime`` (DESIGN.md §2): the slab shards over the
+cache axes; stats, policy state and index state are replicated. The fused
+``make_lookup_insert`` step is ``runtime -> runtime`` like the local
+``SemanticCache.step``. Sharding a *stateful* index (IVF bucket tables hold
+shard-local slot ids) is future work — the step requires an index whose
+state pytree is leafless (e.g. ``ExactIndex``) and says so at build time.
+
 Everything is ``shard_map`` + ``jax.lax`` collectives — no host round trips.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map_nocheck
 from repro.core import store
 from repro.core.cache import SemanticCache
-from repro.core.types import CacheConfig, CacheState, CacheStats, LookupResult
+from repro.core.runtime import CacheRuntime
+from repro.core.types import CacheConfig, CacheState, CacheStats
 
 Array = jax.Array
 
@@ -80,25 +87,37 @@ class DistributedCache:
         cfg = self.cache.config
         return dataclasses.replace(cfg, capacity=cfg.capacity // self.num_shards)
 
-    def init(self) -> tuple[CacheState, CacheStats]:
-        state, stats = self.cache.init()
-        return place_cache_state(state, self.mesh, self.cache_axes), stats
+    def init(self) -> CacheRuntime:
+        """Full runtime: slab sharded over ``cache_axes``, rest replicated."""
+        runtime = self.cache.init()
+        rep = NamedSharding(self.mesh, P())
+        return runtime.replace(
+            state=place_cache_state(runtime.state, self.mesh, self.cache_axes),
+            stats=jax.device_put(runtime.stats, rep),
+            policy_state=jax.device_put(runtime.policy_state, rep),
+        )
 
     # ------------------------------------------------------------------ #
-    def _local_lookup(self, state: CacheState, queries: Array, now: Array):
-        """Runs per-shard inside shard_map. Returns packed global winners."""
-        axes = self.cache_axes
+    def _shard_id(self):
         shard_id = jnp.zeros((), jnp.int32)
         mult = 1
-        for a in reversed(axes):
+        for a in reversed(self.cache_axes):
             shard_id = shard_id + jax.lax.axis_index(a) * mult
-            mult *= jax.lax.axis_size(a)
+            mult *= self.mesh.shape[a]  # static; axis_size needs newer jax
+        return shard_id
+
+    def _local_lookup(self, state: CacheState, stats: CacheStats,
+                      pstate: Array, queries: Array, now: Array):
+        """Runs per-shard inside shard_map. Returns packed global winners."""
+        axes = self.cache_axes
+        shard_id = self._shard_id()
         local_cap = state.keys.shape[0]
+        b = queries.shape[0]
 
         alive = store.alive_mask(state, now)
-        local_cache = SemanticCache(self.local_config, index=self.cache.index,
-                                    policy=self.cache.policy)
-        top_s, top_i = local_cache.index.search(queries, state.keys, alive)
+        istate = self.cache.index.init(self.local_config)  # leafless (checked)
+        top_s, top_i = self.cache.index.search(
+            istate, queries, state.keys, alive)
         best_s, best_i = top_s[:, 0], jnp.maximum(top_i[:, 0], 0)
         best_s = jnp.where(top_i[:, 0] >= 0, best_s, -jnp.inf)
         global_slot = shard_id * local_cap + best_i
@@ -137,39 +156,61 @@ class DistributedCache:
         vlen = packed[:, -2]
         src = packed[:, -1]
 
-        pstate = self.cache.init_policy()
-        hit, _ = self.cache.policy.decide(g_score, pstate)
+        hit, pstate = self.cache.policy.decide(g_score, pstate)
         hit = hit & (g_score > -jnp.inf)
 
         # touch local LRU/LFU where this shard owns the hit
         state = store.touch(state, local_idx, now, hit & mine)
-        return state, (g_slot, g_score, hit, vals, vlen, src)
+        stats = stats.record_lookups(b, jnp.sum(hit).astype(jnp.int32))
+        return state, stats, pstate, (g_slot, g_score, hit, vals, vlen, src)
 
-    def _local_insert(self, state: CacheState, queries, values, value_lens,
-                      source_id, mask, now):
-        axes = self.cache_axes
-        shard_id = jnp.zeros((), jnp.int32)
-        mult = 1
-        for a in reversed(axes):
-            shard_id = shard_id + jax.lax.axis_index(a) * mult
-            mult *= jax.lax.axis_size(a)
-        b = queries.shape[0]
-        # round-robin routing by (global insert clock + row index)
-        owner = (state.n_inserts + jnp.arange(b, dtype=jnp.int32)) % self.num_shards
+    def _local_insert(self, state: CacheState, stats: CacheStats, queries,
+                      values, value_lens, source_id, mask, now):
+        shard_id = self._shard_id()
+        nshards = self.num_shards
+        local_cap = state.keys.shape[0]
+        # round-robin routing by (global insert clock + rank among *written*
+        # rows) — masked-out rows must not consume round-robin positions
+        mi = mask.astype(jnp.int32)
+        rank = jnp.cumsum(mi) - mi
+        owner = (state.n_inserts + rank) % nshards
         take = mask & (owner == shard_id)
-        new_state = store.insert(self.local_config, state, queries, values,
-                                 value_lens, now, source_id=source_id, mask=take)
-        # keep the *global* insert clock in sync on every shard
+        # Per-shard ring position is a pure function of the *replicated*
+        # global clock: shard s has received ceil((n_inserts - s) / S)
+        # rows so far. Deriving it here (instead of trusting state.ptr,
+        # which would advance by a shard-dependent sum(take) and then be
+        # forced through a replicated out-spec) keeps every shard's ring
+        # consistent for any miss pattern.
+        state = jax.tree_util.tree_map(lambda x: x, state)  # shallow copy
+        state.ptr = ((state.n_inserts + nshards - 1 - shard_id)
+                     // nshards) % local_cap
+        new_state, _slots = store.insert(
+            self.local_config, state, queries, values,
+            value_lens, now, source_id=source_id, mask=take)
+        # keep the *global* insert clock in sync on every shard; park ptr on
+        # a replicated constant (it is recomputed from n_inserts on entry)
         n_global = state.n_inserts + jnp.sum(mask).astype(jnp.int32)
         new_state.n_inserts = n_global
-        new_state.ptr = jnp.where(
-            jnp.asarray(self.cache.config.eviction == "ring"),
-            new_state.ptr, new_state.ptr)
-        return new_state
+        new_state.ptr = jnp.zeros_like(new_state.ptr)
+        stats = dataclasses.replace(
+            stats, inserts=stats.inserts + jnp.sum(mask).astype(jnp.int32))
+        return new_state, stats
 
     # ------------------------------------------------------------------ #
     def make_lookup_insert(self):
-        """Build the jit-able fused sharded step (state donated)."""
+        """Build the jit-able fused sharded step (runtime donated).
+
+        Signature mirrors ``SemanticCache.step``::
+
+            runtime, (slot, score, hit, values, value_lens, source_id) =
+                step(runtime, queries, miss_values, miss_value_lens,
+                     source_id, now)
+        """
+        if jax.tree_util.tree_leaves(self.cache.index.init(self.local_config)):
+            raise NotImplementedError(
+                "DistributedCache requires an index with leafless state "
+                "(e.g. ExactIndex): sharding stateful index pytrees (IVF "
+                "bucket tables hold shard-local slot ids) is future work")
         axes = self.cache_axes
         mesh = self.mesh
         row = P(tuple(axes))
@@ -178,19 +219,32 @@ class DistributedCache:
             keys=mat, values=mat, value_lens=row, expiry=row, valid=row,
             freq=row, last_used=row, inserted_at=row, source_id=row,
             ptr=P(), n_inserts=P())
+        stats_spec = CacheStats(lookups=P(), hits=P(), misses=P(),
+                                expired_evictions=P(), inserts=P())
         rep = P()
 
-        def step(state, queries, miss_values, miss_value_lens, source_id, now):
-            state, (slot, score, hit, vals, vlen, src) = self._local_lookup(
-                state, queries, now)
-            state = self._local_insert(
-                state, queries, miss_values, miss_value_lens, source_id,
-                ~hit, now)
-            return state, (slot, score, hit, vals, vlen, src)
+        def local_step(state, stats, pstate, queries, miss_values,
+                       miss_value_lens, source_id, now):
+            state, stats, pstate, out = self._local_lookup(
+                state, stats, pstate, queries, now)
+            (slot, score, hit, vals, vlen, src) = out
+            state, stats = self._local_insert(
+                state, stats, queries, miss_values, miss_value_lens,
+                source_id, ~hit, now)
+            return state, stats, pstate, (slot, score, hit, vals, vlen, src)
 
-        sharded = shard_map(
-            step, mesh=mesh,
-            in_specs=(state_spec, rep, rep, rep, rep, rep),
-            out_specs=(state_spec, (rep, rep, rep, rep, rep, rep)),
-            check_vma=False)
-        return jax.jit(sharded, donate_argnums=(0,))
+        sharded = shard_map_nocheck(
+            local_step, mesh,
+            in_specs=(state_spec, stats_spec, rep, rep, rep, rep, rep, rep),
+            out_specs=(state_spec, stats_spec, rep,
+                       (rep, rep, rep, rep, rep, rep)))
+
+        def step(runtime: CacheRuntime, queries, miss_values, miss_value_lens,
+                 source_id, now):
+            state, stats, pstate, out = sharded(
+                runtime.state, runtime.stats, runtime.policy_state, queries,
+                miss_values, miss_value_lens, source_id, now)
+            return runtime.replace(state=state, stats=stats,
+                                   policy_state=pstate), out
+
+        return jax.jit(step, donate_argnums=(0,))

@@ -1,18 +1,24 @@
-"""ANN indexes over the cache slab (paper §2.4, TPU-adapted — DESIGN.md §3).
+"""ANN indexes over the cache slab (paper §2.4, TPU-adapted — DESIGN.md §8).
 
 Two TPU-native index structures replace the paper's HNSW graph:
 
 * ``ExactIndex`` — blocked brute-force cosine top-k on the MXU. Exact
   (recall = 1.0), one GEMM; dispatches to the Pallas fused kernel on TPU
-  and to the jnp reference elsewhere.
+  and to the jnp reference elsewhere. Stateless: its index state is an
+  empty pytree.
 * ``IVFIndex`` — inverted-file index: k-means centroids over the slab;
   search probes the top-``nprobe`` clusters only. This recovers HNSW's
   sub-linear scaling with *static shapes and dense matmuls*: both the
   centroid scoring and the in-cluster scoring are GEMMs. Cluster membership
-  is a padded (ncentroids, bucket_cap) table rebuilt by ``fit`` —
-  the analogue of the paper's periodic HNSW "rebalancing" (§2.4).
+  is a padded (ncentroids, bucket_cap) table rebuilt by ``refit`` —
+  the analogue of the paper's periodic HNSW "rebalancing" (§2.4) — and kept
+  fresh between rebuilds by ``absorb`` (incremental assignment of new rows).
 
-The paper-faithful HNSW itself lives in ``repro.core.hnsw`` (CPU reference).
+Both conform to the ``repro.core.runtime.Index`` protocol — uniform
+``init(config) / search(istate, ...) / absorb(istate, ...) /
+refit(istate, ...)`` signatures so callers never branch on the index type
+(DESIGN.md §8.1). The paper-faithful HNSW itself lives in
+``repro.core.hnsw`` (CPU reference).
 """
 from __future__ import annotations
 
@@ -23,8 +29,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.similarity import cosine_scores, masked_topk, l2_normalize, NEG_INF
+from repro.core.types import CacheConfig
 
 Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ExactState:
+    """Empty index state: brute-force scoring reads the slab directly."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,8 +47,14 @@ class ExactIndex:
     topk: int = 4
     backend: str = "auto"
 
-    def search(self, queries: Array, keys: Array, valid: Array) -> tuple[Array, Array]:
+    def init(self, config: CacheConfig) -> ExactState:
+        del config
+        return ExactState()
+
+    def search(self, istate: ExactState, queries: Array, keys: Array,
+               alive: Array) -> tuple[Array, Array]:
         """(B,d) x (N,d) -> (scores (B,k), indices (B,k))."""
+        del istate
         backend = self.backend
         if backend == "auto":
             backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
@@ -43,10 +62,20 @@ class ExactIndex:
         if backend == "pallas":
             from repro.kernels import ops  # deferred: kernels are optional deps
 
-            return ops.cosine_topk(queries, keys, valid, k=self.topk)
-        scores = cosine_scores(queries, keys, valid)
+            return ops.cosine_topk(queries, keys, alive, k=self.topk)
+        scores = cosine_scores(queries, keys, alive)
         vals, idx = masked_topk(scores, self.topk)
         return vals, idx.astype(jnp.int32)
+
+    def absorb(self, istate: ExactState, slots: Array, keys: Array,
+               mask: Array) -> ExactState:
+        del slots, keys, mask
+        return istate
+
+    def refit(self, istate: ExactState, keys: Array, alive: Array,
+              rng: Array) -> ExactState:
+        del keys, alive, rng
+        return istate
 
 
 @jax.tree_util.register_dataclass
@@ -59,7 +88,7 @@ class IVFState:
 
 @dataclasses.dataclass(frozen=True)
 class IVFIndex:
-    """Inverted-file ANN. ``fit`` = k-means rebuild; ``search`` = 2 GEMMs."""
+    """Inverted-file ANN. ``refit`` = k-means rebuild; ``search`` = 2 GEMMs."""
 
     ncentroids: int = 64
     nprobe: int = 8
@@ -67,13 +96,33 @@ class IVFIndex:
     topk: int = 4
     kmeans_iters: int = 10
 
-    def fit(self, keys: Array, valid: Array, rng: Array) -> IVFState:
+    def init(self, config: CacheConfig) -> IVFState:
+        """Empty index: deterministic random unit centroids, all-invalid
+        buckets. Shape-identical to a fitted state, so the whole runtime has
+        one static treedef from birth (DESIGN.md §2.1). The centroids are
+        random rather than zero so that pre-refit ``absorb`` spreads new
+        entries across all buckets (zero centroids would argmax every row
+        into bucket 0, losing entries past one bucket's capacity); ``refit``
+        replaces them with real k-means centroids."""
+        c, cap = self.ncentroids, self.bucket_cap
+        centroids = l2_normalize(jax.random.normal(
+            jax.random.PRNGKey(0), (c, config.dim), dtype=jnp.float32))
+        return IVFState(
+            centroids=centroids,
+            buckets=jnp.full((c, cap), -1, dtype=jnp.int32),
+            bucket_valid=jnp.zeros((c, cap), dtype=bool),
+        )
+
+    def refit(self, istate: IVFState, keys: Array, alive: Array, rng: Array
+              ) -> IVFState:
         """K-means over live keys; bucket table with static capacity.
 
         Overflowing buckets drop the farthest members (recall loss is
         measured in tests against the exact index) — the static-shape price
         of TPU-friendliness, and the analogue of HNSW's bounded degree M.
         """
+        del istate  # full rebuild from the slab; prior state irrelevant
+        valid = alive
         n, d = keys.shape
         c = self.ncentroids
         # init: random valid rows (fall back to arbitrary rows if few valid)
@@ -113,9 +162,46 @@ class IVFIndex:
         buckets = jnp.where(bucket_valid, top_idx, -1).astype(jnp.int32)
         return IVFState(centroids=centroids, buckets=buckets, bucket_valid=bucket_valid)
 
-    def search(self, ivf: IVFState, queries: Array, keys: Array, valid: Array
+    def fit(self, keys: Array, valid: Array, rng: Array) -> IVFState:
+        """From-scratch build (refit with a throwaway empty state)."""
+        return self.refit(None, keys, valid, rng)
+
+    def absorb(self, istate: IVFState, slots: Array, keys: Array, mask: Array
+               ) -> IVFState:
+        """Incrementally index freshly inserted slab rows (DESIGN.md §8.2).
+
+        Each new key is appended to its nearest centroid's bucket (overwriting
+        the bucket tail when full — those entries are the farthest members,
+        restored at the next ``refit``). Stale references to a recycled slot
+        elsewhere in the table are harmless: search always scores against the
+        *live* slab key, so a stale pointer can at worst duplicate a
+        candidate, never return a wrong score.
+        """
+        q = l2_normalize(keys)
+        assign = jnp.argmax(jnp.einsum("bd,cd->bc", q, istate.centroids), axis=-1)
+        cap = self.bucket_cap
+
+        def body(i, carry):
+            buckets, bucket_valid = carry
+            c = assign[i]
+            fill = jnp.sum(bucket_valid[c]).astype(jnp.int32)
+            pos = jnp.minimum(fill, cap - 1)
+            do = mask[i]
+            buckets = buckets.at[c, pos].set(
+                jnp.where(do, slots[i].astype(jnp.int32), buckets[c, pos]))
+            bucket_valid = bucket_valid.at[c, pos].set(
+                jnp.where(do, True, bucket_valid[c, pos]))
+            return buckets, bucket_valid
+
+        buckets, bucket_valid = jax.lax.fori_loop(
+            0, slots.shape[0], body, (istate.buckets, istate.bucket_valid))
+        return IVFState(centroids=istate.centroids, buckets=buckets,
+                        bucket_valid=bucket_valid)
+
+    def search(self, istate: IVFState, queries: Array, keys: Array, valid: Array
                ) -> tuple[Array, Array]:
         """(B,d) -> (scores (B,k), slot indices (B,k)). Probes nprobe buckets."""
+        ivf = istate
         q = l2_normalize(queries)
         csims = jnp.einsum("bd,cd->bc", q, ivf.centroids)      # (B, C)
         _, probe = jax.lax.top_k(csims, min(self.nprobe, self.ncentroids))  # (B, P)
@@ -138,4 +224,4 @@ class IVFIndex:
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def exact_search_jit(index: ExactIndex, queries, keys, valid):
-    return index.search(queries, keys, valid)
+    return index.search(ExactState(), queries, keys, valid)

@@ -11,7 +11,10 @@ faithful baseline, plus two extensions the paper names as future work:
     track a target precision using observed positive-hit feedback
     (the paper's judge signal), i.e. threshold ← threshold + lr·(target − precision).
 
-All policies are functional: ``decide(scores, state) -> (hit_mask, state)``.
+All policies are functional: ``decide(scores, state) -> (hit_mask, state)``
+and conform to the ``repro.core.runtime.Policy`` protocol (uniform
+``init_state`` / ``decide`` / ``update`` — DESIGN.md §10), so the engine and
+distributed step never branch on the policy type.
 """
 from __future__ import annotations
 
@@ -48,9 +51,21 @@ class PerCategoryThreshold:
     def init_state(self) -> Array:
         return jnp.asarray(self.thresholds, dtype=jnp.float32)
 
-    def decide(self, scores: Array, state: Array, category: Array) -> tuple[Array, Array]:
-        thr = state[category]
-        return scores >= thr, state
+    def decide(self, scores: Array, state: Array, category: Array | None = None
+               ) -> tuple[Array, Array]:
+        if category is None:
+            # The uniform Policy-protocol call cannot supply per-query
+            # categories; failing loudly beats silently judging every query
+            # at one threshold.
+            raise ValueError(
+                "PerCategoryThreshold needs per-query categories; the "
+                "uniform SemanticCache path does not thread them — call "
+                "decide(scores, state, category) directly, or use "
+                "FixedThreshold/AdaptiveThreshold with SemanticCache")
+        return scores >= state[category], state
+
+    def update(self, state: Array, *, was_positive: Array, was_hit: Array) -> Array:
+        return state  # static
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,100 @@
+"""CacheRuntime — the single pytree that holds *all* semantic-cache state
+(DESIGN.md §2), plus the typed plugin seams (§8, §10).
+
+Before this module existed, the cache's state was spread across four
+separately-threaded objects: a slab ``CacheState``, a ``CacheStats`` counter
+bundle, a raw ``policy_state`` array and an optional out-of-band
+``IVFState``. Every caller (engine, distributed step, checkpointing) had to
+know which pieces its index/policy combination needed, which forced
+``isinstance`` branches and silently dropped state on checkpoint restore.
+
+``CacheRuntime`` bundles the four into one registered-dataclass pytree so
+
+* the whole serve step is a pure function ``runtime -> runtime`` that jits,
+  donates and shards as a unit;
+* checkpointing the cache is ``save(runtime)`` — adaptive-threshold and
+  ANN-index state survive restarts for free;
+* index and policy implementations are interchangeable behind the
+  ``Index`` / ``Policy`` protocols with *uniform* signatures: a stateless
+  index (ExactIndex) simply carries an empty state pytree.
+
+The protocols are ``typing.Protocol``s rather than ABCs: plugins need no
+import of this module to conform (structural typing), which keeps kernels
+and third-party index structures decoupled from core.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+
+from repro.core.types import CacheConfig, CacheState, CacheStats
+
+Array = jax.Array
+
+
+@runtime_checkable
+class Index(Protocol):
+    """ANN index plugin seam (DESIGN.md §8).
+
+    An index is a *static* (hashable, frozen-dataclass) strategy object; all
+    its mutable state lives in an ``IndexState`` pytree threaded through the
+    runtime. Implementations: ``ExactIndex`` (empty state), ``IVFIndex``
+    (centroids + bucket table); future: HNSW.
+    """
+
+    def init(self, config: CacheConfig) -> Any:
+        """Fresh index state with static shapes derived from ``config``."""
+        ...
+
+    def search(self, istate: Any, queries: Array, keys: Array, alive: Array
+               ) -> tuple[Array, Array]:
+        """(B,d) queries vs the slab -> (scores (B,k), slot ids (B,k))."""
+        ...
+
+    def absorb(self, istate: Any, slots: Array, keys: Array, mask: Array) -> Any:
+        """Incrementally index freshly inserted slab rows (no rebuild)."""
+        ...
+
+    def refit(self, istate: Any, keys: Array, alive: Array, rng: Array) -> Any:
+        """Full periodic rebuild (the paper's §2.4 HNSW rebalancing)."""
+        ...
+
+
+@runtime_checkable
+class Policy(Protocol):
+    """Hit-threshold policy plugin seam (DESIGN.md §10)."""
+
+    def init_state(self) -> Array:
+        ...
+
+    def decide(self, scores: Array, state: Array) -> tuple[Array, Array]:
+        """Best-match scores -> (hit mask, updated policy state)."""
+        ...
+
+    def update(self, state: Array, *, was_positive: Array, was_hit: Array
+               ) -> Array:
+        """Judged-outcome feedback (paper §2.10 control loop)."""
+        ...
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CacheRuntime:
+    """Everything a semantic cache mutates, as one jit-able pytree.
+
+    Leaves:
+      state        — the slab (keys/values/TTL/LRU bookkeeping),
+      stats        — running hit/miss/insert counters,
+      policy_state — threshold-policy state (e.g. adaptive (thr, ema) pair),
+      index_state  — ANN-index state (empty for ExactIndex, IVFState for IVF).
+    """
+
+    state: CacheState
+    stats: CacheStats
+    policy_state: Array
+    index_state: Any
+
+    def replace(self, **kw) -> "CacheRuntime":
+        return dataclasses.replace(self, **kw)

@@ -59,11 +59,28 @@ def _eviction_scores(config: CacheConfig, state: CacheState, now: Array) -> Arra
     return jnp.where(dead, -_BIG, score)
 
 
-def select_slots(config: CacheConfig, state: CacheState, now: Array, m: int) -> Array:
-    """Pick ``m`` distinct slots to (over)write, per the eviction policy."""
+def select_slots(config: CacheConfig, state: CacheState, now: Array, m: int,
+                 mask: Array | None = None) -> Array:
+    """Pick ``m`` distinct slots to (over)write, per the eviction policy.
+
+    For the ring, masked batches pack the *written* rows contiguously from
+    ``ptr`` (masked-out rows are parked on the distinct slots just past the
+    written block, where their keep-old write is a no-op). Without packing,
+    written rows would land at scattered offsets while ``ptr`` advances only
+    by ``sum(mask)`` — the next batch would then overwrite entries inserted
+    one batch earlier and leave permanent holes in the slab.
+    """
     if config.eviction == "ring":
         # Pure ring: pointer arithmetic, O(1), exactly a circular Redis stream.
-        return (state.ptr + jnp.arange(m, dtype=jnp.int32)) % config.capacity
+        if mask is None:
+            off = jnp.arange(m, dtype=jnp.int32)
+        else:
+            mi = mask.astype(jnp.int32)
+            written_rank = jnp.cumsum(mi) - mi          # rank among written
+            skipped_rank = jnp.cumsum(1 - mi) - (1 - mi)
+            off = jnp.where(mask, written_rank,
+                            jnp.sum(mi) + skipped_rank)
+        return (state.ptr + off) % config.capacity
     scores = _eviction_scores(config, state, now)
     # m smallest scores == top-k of negated scores.
     _, idx = jax.lax.top_k(-scores, m)
@@ -80,12 +97,17 @@ def insert(
     *,
     source_id: Array | None = None,  # (B,) provenance
     mask: Array | None = None,       # (B,) bool: only insert where True
-) -> CacheState:
+) -> tuple[CacheState, Array]:
     """Insert a batch of (embedding, response) pairs (paper §2.5 step 3).
 
     Masked-out rows are written to a scratch slot pattern and immediately
     neutralized, keeping the op fully static-shaped (jit/pjit friendly):
     rows with ``mask=False`` do not modify any live slot.
+
+    Returns ``(state, slots)`` where ``slots`` is the (B,) int32 slot id each
+    row was (or, for masked rows, would have been) written to — the ANN
+    index's ``absorb`` hook consumes these to stay fresh between refits
+    (DESIGN.md §8.2).
     """
     b = embeddings.shape[0]
     now = jnp.asarray(now, dtype=jnp.float32)
@@ -101,7 +123,7 @@ def insert(
         # traffic in the lookup — EXPERIMENTS.md §Perf)
         keys = jnp.clip(jnp.round(keys * 127.0), -127, 127)
     keys = keys.astype(config.key_dtype)
-    slots = select_slots(config, state, now, b)  # (B,) distinct
+    slots = select_slots(config, state, now, b, mask=mask)  # (B,) distinct
 
     # For masked-out rows keep the previous slot contents: gather-then-where.
     def upd(dst, src_new, slot_axis0=True):
@@ -132,7 +154,7 @@ def insert(
         else state.ptr,
         n_inserts=state.n_inserts + jnp.sum(mask).astype(jnp.int32),
     )
-    return new
+    return new, slots
 
 
 def touch(state: CacheState, slot: Array, now: Array | float, hit: Array) -> CacheState:

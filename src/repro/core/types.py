@@ -120,10 +120,25 @@ class CacheStats:
     expired_evictions: Array  # () int32
     inserts: Array  # () int32
 
+    def record_lookups(self, n: Array | int, n_hit: Array) -> "CacheStats":
+        """Counters after a batch of ``n`` lookups with ``n_hit`` hits —
+        the single definition shared by the local and distributed paths."""
+        return CacheStats(
+            lookups=self.lookups + n,
+            hits=self.hits + n_hit,
+            misses=self.misses + (n - n_hit),
+            expired_evictions=self.expired_evictions,
+            inserts=self.inserts,
+        )
+
     @staticmethod
     def zeros() -> "CacheStats":
-        z = jnp.zeros((), dtype=jnp.int32)
-        return CacheStats(lookups=z, hits=z, misses=z, expired_evictions=z, inserts=z)
+        # distinct buffers per field: the runtime pytree is donated as a
+        # unit, and donating one aliased buffer N times is an XLA error
+        def z():
+            return jnp.zeros((), dtype=jnp.int32)
+        return CacheStats(lookups=z(), hits=z(), misses=z(),
+                          expired_evictions=z(), inserts=z())
 
     def hit_rate(self) -> Array:
         return jnp.where(self.lookups > 0, self.hits / jnp.maximum(self.lookups, 1), 0.0)

@@ -153,9 +153,9 @@ def build_cache_fn(mesh, *, capacity: int = 1_048_576, batch: int = 256,
                       key_dtype=jnp.int8 if "int8" in variant else jnp.float32)
     dc = DistributedCache(SemanticCache(cfg), mesh,
                           cache_axes=data_axes_of(mesh))
-    state_sds = jax.eval_shape(lambda: dc.cache.init()[0])
+    runtime_sds = jax.eval_shape(dc.cache.init)  # full CacheRuntime pytree
     fn = dc.make_lookup_insert()
-    args = (state_sds,
+    args = (runtime_sds,
             jax.ShapeDtypeStruct((batch, dim), jnp.float32),
             jax.ShapeDtypeStruct((batch, 64), jnp.int32),
             jax.ShapeDtypeStruct((batch,), jnp.int32),

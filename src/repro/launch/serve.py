@@ -12,6 +12,8 @@ import argparse
 import json
 
 from repro.configs import get_arch
+from repro.core.index import IVFIndex
+from repro.core.policy import AdaptiveThreshold
 from repro.core.types import CacheConfig
 from repro.data.qa_dataset import build_corpus, build_test_queries
 from repro.data.tokenizer import HashTokenizer
@@ -31,6 +33,16 @@ def main():
     ap.add_argument("--threshold", type=float, default=0.8)
     ap.add_argument("--ttl", type=float, default=None)
     ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--index", choices=("exact", "ivf"), default="exact",
+                    help="ANN index plugin behind the cache")
+    ap.add_argument("--policy", choices=("fixed", "adaptive"), default="fixed",
+                    help="threshold policy plugin")
+    ap.add_argument("--no-fused", dest="fused", action="store_false",
+                    help="use separate lookup+insert instead of the fused "
+                         "single-jit step()")
+    ap.add_argument("--snapshot", default=None,
+                    help="save the full CacheRuntime (slab + policy + index "
+                         "state) here after serving")
     args = ap.parse_args()
 
     pairs = build_corpus(args.corpus, seed=0)
@@ -54,7 +66,13 @@ def main():
 
     cfg = CacheConfig(dim=384, capacity=max(16384, 8 * args.corpus),
                       value_len=48, ttl=args.ttl, threshold=args.threshold)
-    engine = CachedEngine(cfg, backend, judge=judge, batch_size=args.batch)
+    index = IVFIndex(ncentroids=128, nprobe=16, bucket_cap=1024) \
+        if args.index == "ivf" else None
+    policy = AdaptiveThreshold(init=args.threshold) \
+        if args.policy == "adaptive" else None
+    engine = CachedEngine(cfg, backend, judge=judge, batch_size=args.batch,
+                          index=index, policy=policy,
+                          use_fused_step=args.fused)
 
     print(f"warming cache with {len(pairs)} QA pairs ...")
     engine.warm(pairs)
@@ -63,6 +81,9 @@ def main():
                             source_id=q.source_id,
                             semantic_key=q.semantic_key) for q in queries])
     print(json.dumps(engine.metrics.summary(), indent=1))
+    if args.snapshot:
+        engine.save_cache(args.snapshot)
+        print(f"runtime snapshot (slab+policy+index state) -> {args.snapshot}")
 
 
 if __name__ == "__main__":

@@ -3,9 +3,20 @@ wired together: embed -> semantic-cache lookup -> hit? serve cached :
 call LLM backend -> insert -> respond.
 
 The engine is batched (requests are grouped by the ``Batcher``), functional
-on the device side (one jitted lookup+insert step with a donated slab) and
-keeps host-side bookkeeping (detokenization table, metrics) minimal. A
-ground-truth judge callback replaces the paper's GPT-4o-mini validation
+on the device side and keeps host-side bookkeeping (detokenization table,
+metrics) minimal. All device state lives in one ``CacheRuntime`` pytree
+(DESIGN.md §2) — the engine holds exactly one mutable reference,
+``self.runtime``, and never branches on index or policy type.
+
+Two serve paths (DESIGN.md §7):
+  * fused (``use_fused_step=True``, default): a pure *peek* lookup learns
+    the miss set, the backend answers the misses, then one compiled
+    ``SemanticCache.step`` does lookup + masked full-batch insert — static
+    shapes at every batch size, so no per-miss-count retraces;
+  * separate: mutating lookup, then an insert of just the missed rows
+    (retraces per distinct miss count; kept as the reference path).
+
+A ground-truth judge callback replaces the paper's GPT-4o-mini validation
 (DESIGN.md §9): judge(query, matched_source_id) -> bool.
 """
 from __future__ import annotations
@@ -19,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import SemanticCache
+from repro.core.runtime import CacheRuntime
 from repro.core.types import CacheConfig
 from repro.data.tokenizer import HashTokenizer
 from repro.embedding.hash_embedder import HashEmbedder
@@ -66,14 +78,15 @@ class CachedEngine:
         # paper §2.10 future work). With an adaptive policy the engine feeds
         # judged hit outcomes back after every batch, closing the paper's
         # proposed precision-tracking control loop.
-        # ``index``: optional ANN index (e.g. IVFIndex). IVF is rebuilt every
-        # ``rebuild_every`` inserts — the analogue of the paper's periodic
-        # HNSW rebalancing (§2.4).
+        # ``index``: optional ANN index (e.g. IVFIndex). The index is refit
+        # every ``rebuild_every`` inserts — the analogue of the paper's
+        # periodic HNSW rebalancing (§2.4); a no-op for stateless indexes.
         self.cache = SemanticCache(cache_config, policy=policy, index=index)
-        self.policy_state = self.cache.init_policy()
-        self.ivf_state = None
+        self.runtime: CacheRuntime = self.cache.init()
+        self.use_fused_step = use_fused_step
         self.rebuild_every = rebuild_every
         self._inserts_since_rebuild = 0
+        self._needs_refit = True
         self._rebuild_rng = jax.random.PRNGKey(17)
         self.backend = backend
         self.embedder = embedder or HashEmbedder(dim=cache_config.dim)
@@ -81,45 +94,85 @@ class CachedEngine:
         self.judge = judge
         self.batcher = Batcher(batch_size)
         self.metrics = ServingMetrics()
-        self.state, self.stats = self.cache.init()
         self._now = 0.0
-        from repro.core.index import IVFIndex
-        self._is_ivf = isinstance(self.cache.index, IVFIndex)
-        if self._is_ivf:
-            self._lookup_jit = jax.jit(
-                lambda st, s, q, t, ps, ivf: self.cache.lookup(
-                    st, s, q, t, policy_state=ps, ivf_state=ivf))
-        else:
-            self._lookup_jit = jax.jit(
-                lambda st, s, q, t, ps: self.cache.lookup(
-                    st, s, q, t, policy_state=ps))
+        # One uniform set of jitted pure functions — no index/policy
+        # branches. The runtime is owned linearly (each call's output
+        # replaces self.runtime), so its buffers are donated: slab updates
+        # are in-place at the XLA level instead of copying the slab per
+        # batch. The peek must NOT donate — the same runtime is fed to the
+        # fused step right after.
+        self._lookup_jit = jax.jit(
+            lambda rt, q, t: self.cache.lookup(rt, q, t),
+            donate_argnums=(0,))
+        self._peek_jit = jax.jit(
+            lambda rt, q, t: self.cache.lookup(
+                rt, q, t, update_counters=False)[0])
         self._insert_jit = jax.jit(
-            lambda st, s, q, v, vl, t, sid, m: self.cache.insert(
-                st, s, q, v, vl, t, source_id=sid, mask=m))
+            lambda rt, q, v, vl, t, sid, m: self.cache.insert(
+                rt, q, v, vl, t, source_id=sid, mask=m),
+            donate_argnums=(0,))
+        self._step_jit = jax.jit(
+            lambda rt, q, mv, mvl, t, sid, peek: self.cache.step(
+                rt, q, mv, mvl, t, source_id=sid, peeked=peek),
+            donate_argnums=(0,))
+        self._refit_jit = jax.jit(
+            lambda rt, t, k: self.cache.refit(rt, t, k),
+            donate_argnums=(0,))
+
+    # -- runtime views (read-only conveniences) ------------------------- #
+    @property
+    def state(self):
+        return self.runtime.state
+
+    @property
+    def stats(self):
+        return self.runtime.stats
+
+    @property
+    def policy_state(self):
+        return self.runtime.policy_state
 
     # ------------------------------------------------------------------ #
     def save_cache(self, path: str) -> None:
-        """Persist the slab + counters (the Redis RDB-snapshot analogue):
-        a restarted engine resumes serving hits immediately."""
+        """Persist the *entire* runtime (the Redis RDB-snapshot analogue):
+        slab, counters, policy state and index state — a restarted engine
+        resumes serving hits immediately, keeps its adapted threshold and
+        pays no forced index rebuild."""
         from repro.training.checkpoint import save_checkpoint
-        save_checkpoint(path, {"state": self.state, "stats": self.stats},
+        save_checkpoint(path, {"runtime": self.runtime},
                         metadata={"now": self._now,
                                   "dim": self.cache.config.dim,
-                                  "capacity": self.cache.config.capacity})
+                                  "capacity": self.cache.config.capacity,
+                                  "index": type(self.cache.index).__name__,
+                                  "policy": type(self.cache.policy).__name__})
 
     def load_cache(self, path: str) -> None:
+        import json
+        import os
         from repro.training.checkpoint import load_checkpoint
-        template = {"state": self.state, "stats": self.stats}
+        template = {"runtime": self.runtime}
         restored = load_checkpoint(path, template)
-        self.state, self.stats = restored["state"], restored["stats"]
-        self.ivf_state = None   # force a rebuild on the next IVF lookup
+        self.runtime = restored["runtime"]
+        # restore the TTL clock: slab expiries are *absolute* deadlines, so
+        # resuming at now=0 would extend every entry's remaining lifetime.
+        # save_checkpoint names the manifest after the path it was *given*
+        # (np.savez appends .npz to the data file only), so mirror that.
+        manifest = path + ".manifest.json"
+        if os.path.exists(manifest):
+            with open(manifest) as f:
+                self._now = float(
+                    json.load(f).get("metadata", {}).get("now", self._now))
+        # index state was checkpointed with the slab — no forced rebuild
+        self._needs_refit = False
+        self._inserts_since_rebuild = 0
 
-    def _maybe_rebuild_index(self) -> None:
-        if self.ivf_state is None or \
+    def _maybe_refit(self) -> None:
+        if self._needs_refit or \
                 self._inserts_since_rebuild >= self.rebuild_every:
             self._rebuild_rng, k = jax.random.split(self._rebuild_rng)
-            self.ivf_state = self.cache.rebuild_index(
-                self.state, jnp.float32(self._now), k)
+            self.runtime = self._refit_jit(
+                self.runtime, jnp.float32(self._now), k)
+            self._needs_refit = False
             self._inserts_since_rebuild = 0
 
     def tick(self, seconds: float) -> None:
@@ -137,8 +190,8 @@ class CachedEngine:
             toks, lens = self.tokenizer.encode_batch(
                 [p.answer for p in chunk], cfg.value_len)
             sid = jnp.asarray([p.qa_id for p in chunk], dtype=jnp.int32)
-            self.state, self.stats = self._insert_jit(
-                self.state, self.stats, emb, jnp.asarray(toks),
+            self.runtime = self._insert_jit(
+                self.runtime, emb, jnp.asarray(toks),
                 jnp.asarray(lens), jnp.float32(self._now), sid,
                 jnp.ones((len(chunk),), dtype=bool))
             self._inserts_since_rebuild += len(chunk)
@@ -150,73 +203,100 @@ class CachedEngine:
             out.extend(self._process_batch(batch))
         return out
 
+    def _generate_misses(self, batch, miss_idx):
+        """Backend call + tokenizer round-trip for the missed rows.
+
+        Returns (token rows, lens, decoded answers, llm_time, llm_cost).
+        Responses are tokenizer-normalized so the hit and miss paths emit
+        byte-identical text for the same cache entry.
+        """
+        cfg = self.cache.config
+        res = self.backend.generate(
+            [batch[i].query for i in miss_idx],
+            [batch[i].semantic_key for i in miss_idx])
+        toks, lens = self.tokenizer.encode_batch(
+            [res.answers[j] for j in range(len(miss_idx))], cfg.value_len)
+        answers = {i: self.tokenizer.decode(toks[j])
+                   for j, i in enumerate(miss_idx)}
+        return toks, lens, answers, res.latency_s, res.cost_usd
+
     def _process_batch(self, batch: list[Request]) -> list[Response]:
         cfg = self.cache.config
+        n = len(batch)
         t0 = time.perf_counter()
         emb = jnp.asarray(self.embedder.embed_batch([r.query for r in batch]))
-        if self._is_ivf:
-            self._maybe_rebuild_index()
-            result, self.state, self.stats = self._lookup_jit(
-                self.state, self.stats, emb, jnp.float32(self._now),
-                self.policy_state, self.ivf_state)
-        else:
-            result, self.state, self.stats = self._lookup_jit(
-                self.state, self.stats, emb, jnp.float32(self._now),
-                self.policy_state)
-        hit = np.asarray(result.hit)
-        scores = np.asarray(result.score)
-        matched_sid = np.asarray(result.source_id)
-        cache_time = time.perf_counter() - t0
+        now = jnp.float32(self._now)
+        self._maybe_refit()
 
-        # miss path: one LLM call for the missed rows (paper §2.5 step 2)
-        miss_idx = [i for i in range(len(batch)) if not hit[i]]
         llm_time = 0.0
         llm_cost = 0.0
         answers: dict[int, str] = {}
-        if miss_idx:
-            res = self.backend.generate(
-                [batch[i].query for i in miss_idx],
-                [batch[i].semantic_key for i in miss_idx])
-            llm_time += res.latency_s
-            llm_cost += res.cost_usd
-            # insert misses (store answer tokens + provenance); responses are
-            # returned tokenizer-normalized so the hit and miss paths emit
-            # byte-identical text for the same cache entry
-            toks, lens = self.tokenizer.encode_batch(
-                [res.answers[j] for j in range(len(miss_idx))], cfg.value_len)
-            for j, i in enumerate(miss_idx):
-                answers[i] = self.tokenizer.decode(toks[j])
-            memb = emb[jnp.asarray(miss_idx)]
-            sid = jnp.asarray([batch[i].source_id for i in miss_idx],
-                              dtype=jnp.int32)
-            self.state, self.stats = self._insert_jit(
-                self.state, self.stats, memb, jnp.asarray(toks),
-                jnp.asarray(lens), jnp.float32(self._now), sid,
-                jnp.ones((len(miss_idx),), dtype=bool))
+
+        if self.use_fused_step:
+            # 1. pure peek: learn the miss set without committing any state
+            #    (the only slab search this batch — step commits it, §7)
+            peek = self._peek_jit(self.runtime, emb, now)
+            peek_hit = np.asarray(peek.hit)
+            miss_idx = [i for i in range(n) if not peek_hit[i]]
+            cache_time = time.perf_counter() - t0
+            # 2. backend answers the misses (paper §2.5 step 2)
+            miss_values = np.zeros((n, cfg.value_len), dtype=np.int32)
+            miss_lens = np.zeros((n,), dtype=np.int32)
+            if miss_idx:
+                toks, lens, answers, llm_time, llm_cost = \
+                    self._generate_misses(batch, miss_idx)
+                miss_values[miss_idx] = np.asarray(toks)
+                miss_lens[miss_idx] = np.asarray(lens)
+            sid = jnp.asarray([r.source_id for r in batch], dtype=jnp.int32)
+            # 3. one fused compiled step: commit the peek + masked insert
+            t1 = time.perf_counter()
+            result, self.runtime = self._step_jit(
+                self.runtime, emb, jnp.asarray(miss_values),
+                jnp.asarray(miss_lens), now, sid, peek)
+            jax.block_until_ready(result.hit)  # count the commit in cache_time
+            cache_time += time.perf_counter() - t1
             self._inserts_since_rebuild += len(miss_idx)
+        else:
+            result, self.runtime = self._lookup_jit(self.runtime, emb, now)
+            lookup_hit = np.asarray(result.hit)
+            miss_idx = [i for i in range(n) if not lookup_hit[i]]
+            cache_time = time.perf_counter() - t0
+            if miss_idx:
+                toks, lens, answers, llm_time, llm_cost = \
+                    self._generate_misses(batch, miss_idx)
+                memb = emb[jnp.asarray(miss_idx)]
+                sid = jnp.asarray([batch[i].source_id for i in miss_idx],
+                                  dtype=jnp.int32)
+                self.runtime = self._insert_jit(
+                    self.runtime, memb, jnp.asarray(toks),
+                    jnp.asarray(lens), now, sid,
+                    jnp.ones((len(miss_idx),), dtype=bool))
+                self._inserts_since_rebuild += len(miss_idx)
+
+        hit = np.asarray(result.hit)
+        scores = np.asarray(result.score)
+        matched_sid = np.asarray(result.source_id)
 
         # hit path: detokenize cached responses
         vals = np.asarray(result.values)
-        for i in range(len(batch)):
+        for i in range(n):
             if hit[i]:
                 answers[i] = self.tokenizer.decode(vals[i])
 
         # judge hits (ground-truth oracle replaces GPT-4o-mini)
-        positives = np.zeros((len(batch),), dtype=bool)
+        positives = np.zeros((n,), dtype=bool)
         if self.judge is not None:
-            for i in range(len(batch)):
+            for i in range(n):
                 if hit[i]:
                     positives[i] = self.judge(batch[i], int(matched_sid[i]))
             # adaptive-threshold feedback (paper §2.10): judged precision
             # nudges the threshold toward the target
-            if hasattr(self.cache.policy, "update"):
-                self.policy_state = self.cache.policy.update(
-                    self.policy_state,
-                    was_positive=jnp.asarray(positives),
-                    was_hit=jnp.asarray(hit))
+            self.runtime = self.cache.update_policy(
+                self.runtime,
+                was_positive=jnp.asarray(positives),
+                was_hit=jnp.asarray(hit))
 
         # metrics: baseline = every query pays the LLM call
-        n = len(batch)
         per_call = getattr(self.backend, "latency_per_call_s", None)
         baseline_time = (per_call or (llm_time / max(len(miss_idx), 1))) * n
         per_cost = getattr(self.backend, "cost_per_call_usd", 0.0)
@@ -230,4 +310,4 @@ class CachedEngine:
         per_q_latency = (cache_time + llm_time) / n
         return [Response(answer=answers[i], cached=bool(hit[i]),
                          score=float(scores[i]), latency_s=per_q_latency)
-                for i in range(len(batch))]
+                for i in range(n)]

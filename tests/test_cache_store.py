@@ -1,19 +1,19 @@
 """Unit + property tests for the slab store: insert / TTL / eviction.
 
-The hypothesis suite drives random operation sequences against the store
+The hypothesis suite (skipped gracefully when hypothesis is absent — see
+``_hypothesis_compat``) drives random operation sequences against the store
 and asserts the Redis-analogue invariants: capacity is never exceeded,
 expired entries never serve lookups, FIFO/LRU/LFU eviction picks the right
-victims, inserted entries are immediately retrievable.
+victims, inserted entries are immediately retrievable. All cache state is
+one ``CacheRuntime`` pytree threaded through the pure API.
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
-from repro.core import (CacheConfig, SemanticCache, init_cache_state)
+from repro.core import CacheConfig, SemanticCache
 from repro.core import store
 
 
@@ -33,10 +33,10 @@ class TestInsert:
     def test_insert_then_lookup_hits(self):
         cfg = mk()
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         emb, vals, lens = rand_batch(jax.random.PRNGKey(0), 4, cfg.dim)
-        state, stats = c.insert(state, stats, emb, vals, lens, 0.0)
-        res, state, stats = c.lookup(state, stats, emb, 1.0)
+        rt = c.insert(rt, emb, vals, lens, 0.0)
+        res, rt = c.lookup(rt, emb, 1.0)
         assert bool(jnp.all(res.hit))
         np.testing.assert_allclose(np.asarray(res.score), 1.0, atol=1e-5)
         np.testing.assert_array_equal(np.asarray(res.values),
@@ -45,61 +45,61 @@ class TestInsert:
     def test_empty_cache_never_hits(self):
         cfg = mk()
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         emb, _, _ = rand_batch(jax.random.PRNGKey(1), 3, cfg.dim)
-        res, *_ = c.lookup(state, stats, emb, 0.0)
+        res, _ = c.lookup(rt, emb, 0.0)
         assert not bool(jnp.any(res.hit))
         assert bool(jnp.all(res.score == -jnp.inf))
 
     def test_masked_insert_skips_rows(self):
         cfg = mk()
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         emb, vals, lens = rand_batch(jax.random.PRNGKey(2), 4, cfg.dim)
         mask = jnp.asarray([True, False, True, False])
-        state, stats = c.insert(state, stats, emb, vals, lens, 0.0, mask=mask)
-        res, *_ = c.lookup(state, stats, emb, 1.0)
+        rt = c.insert(rt, emb, vals, lens, 0.0, mask=mask)
+        res, _ = c.lookup(rt, emb, 1.0)
         assert bool(res.hit[0]) and bool(res.hit[2])
         assert not bool(res.hit[1]) and not bool(res.hit[3])
 
     def test_value_roundtrip_dtype(self):
         cfg = mk()
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         emb, vals, lens = rand_batch(jax.random.PRNGKey(3), 2, cfg.dim)
-        state, _ = c.insert(state, stats, emb, vals, lens, 0.0)
-        assert state.values.dtype == jnp.int32
+        rt = c.insert(rt, emb, vals, lens, 0.0)
+        assert rt.state.values.dtype == jnp.int32
 
 
 class TestTTL:
     def test_expiry_blocks_hits(self):
         cfg = mk(ttl=10.0)
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         emb, vals, lens = rand_batch(jax.random.PRNGKey(0), 2, cfg.dim)
-        state, stats = c.insert(state, stats, emb, vals, lens, 0.0)
-        res, *_ = c.lookup(state, stats, emb, 9.9)
+        rt = c.insert(rt, emb, vals, lens, 0.0)
+        res, _ = c.lookup(rt, emb, 9.9)
         assert bool(jnp.all(res.hit))
-        res, *_ = c.lookup(state, stats, emb, 10.1)
+        res, _ = c.lookup(rt, emb, 10.1)
         assert not bool(jnp.any(res.hit))
 
     def test_eager_expire_counts(self):
         cfg = mk(ttl=10.0)
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         emb, vals, lens = rand_batch(jax.random.PRNGKey(0), 4, cfg.dim)
-        state, stats = c.insert(state, stats, emb, vals, lens, 0.0)
-        state, stats = c.expire(state, stats, 11.0)
-        assert int(stats.expired_evictions) == 4
-        assert not bool(jnp.any(state.valid))
+        rt = c.insert(rt, emb, vals, lens, 0.0)
+        rt = c.expire(rt, 11.0)
+        assert int(rt.stats.expired_evictions) == 4
+        assert not bool(jnp.any(rt.state.valid))
 
     def test_no_ttl_never_expires(self):
         cfg = mk(ttl=None)
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         emb, vals, lens = rand_batch(jax.random.PRNGKey(0), 2, cfg.dim)
-        state, stats = c.insert(state, stats, emb, vals, lens, 0.0)
-        res, *_ = c.lookup(state, stats, emb, 1e12)
+        rt = c.insert(rt, emb, vals, lens, 0.0)
+        res, _ = c.lookup(rt, emb, 1e12)
         assert bool(jnp.all(res.hit))
 
     @settings(max_examples=25, deadline=None)
@@ -108,12 +108,12 @@ class TestTTL:
         """Property: aliveness is monotone non-increasing in time."""
         cfg = mk(ttl=ttl)
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         emb, vals, lens = rand_batch(jax.random.PRNGKey(0), 4, cfg.dim)
-        state, _ = c.insert(state, stats, emb, vals, lens, 0.0)
+        rt = c.insert(rt, emb, vals, lens, 0.0)
         t = ttl * frac
-        alive_t = int(jnp.sum(store.alive_mask(state, t)))
-        alive_later = int(jnp.sum(store.alive_mask(state, t + 1.0)))
+        alive_t = int(jnp.sum(store.alive_mask(rt.state, t)))
+        alive_later = int(jnp.sum(store.alive_mask(rt.state, t + 1.0)))
         assert alive_later <= alive_t
 
 
@@ -122,37 +122,37 @@ class TestEviction:
     def test_capacity_never_exceeded(self, eviction):
         cfg = mk(capacity=8, eviction=eviction, ttl=None)
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         for i in range(5):
             emb, vals, lens = rand_batch(jax.random.PRNGKey(i), 4, cfg.dim)
-            state, stats = c.insert(state, stats, emb, vals, lens, float(i))
-        assert int(jnp.sum(state.valid)) <= cfg.capacity
+            rt = c.insert(rt, emb, vals, lens, float(i))
+        assert int(jnp.sum(rt.state.valid)) <= cfg.capacity
 
     def test_ring_overwrites_oldest(self):
         cfg = mk(capacity=4, eviction="ring", ttl=None)
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         e1, v1, l1 = rand_batch(jax.random.PRNGKey(0), 4, cfg.dim)
-        state, stats = c.insert(state, stats, e1, v1, l1, 0.0)
+        rt = c.insert(rt, e1, v1, l1, 0.0)
         e2, v2, l2 = rand_batch(jax.random.PRNGKey(1), 2, cfg.dim)
-        state, stats = c.insert(state, stats, e2, v2, l2, 1.0)
+        rt = c.insert(rt, e2, v2, l2, 1.0)
         # the first two of e1 were overwritten
-        res, *_ = c.lookup(state, stats, e1, 2.0)
+        res, _ = c.lookup(rt, e1, 2.0)
         hits = np.asarray(res.hit)
         assert not hits[0] and not hits[1] and hits[2] and hits[3]
 
     def test_lru_evicts_least_recently_used(self):
         cfg = mk(capacity=4, eviction="lru", ttl=None)
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         e1, v1, l1 = rand_batch(jax.random.PRNGKey(0), 4, cfg.dim)
-        state, stats = c.insert(state, stats, e1, v1, l1, 0.0)
+        rt = c.insert(rt, e1, v1, l1, 0.0)
         # touch rows 0 and 1 (lookup hits bump last_used)
-        res, state, stats = c.lookup(state, stats, e1[:2], 5.0)
+        res, rt = c.lookup(rt, e1[:2], 5.0)
         assert bool(jnp.all(res.hit))
         e2, v2, l2 = rand_batch(jax.random.PRNGKey(1), 2, cfg.dim)
-        state, stats = c.insert(state, stats, e2, v2, l2, 6.0)
-        res, *_ = c.lookup(state, stats, e1, 7.0)
+        rt = c.insert(rt, e2, v2, l2, 6.0)
+        res, _ = c.lookup(rt, e1, 7.0)
         hits = np.asarray(res.hit)
         assert hits[0] and hits[1]          # recently used survived
         assert not hits[2] and not hits[3]  # LRU victims
@@ -160,29 +160,50 @@ class TestEviction:
     def test_lfu_evicts_least_frequent(self):
         cfg = mk(capacity=4, eviction="lfu", ttl=None)
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         e1, v1, l1 = rand_batch(jax.random.PRNGKey(0), 4, cfg.dim)
-        state, stats = c.insert(state, stats, e1, v1, l1, 0.0)
+        rt = c.insert(rt, e1, v1, l1, 0.0)
         for _ in range(3):   # rows 2,3 get frequent hits
-            _, state, stats = c.lookup(state, stats, e1[2:], 1.0)
+            _, rt = c.lookup(rt, e1[2:], 1.0)
         e2, v2, l2 = rand_batch(jax.random.PRNGKey(1), 2, cfg.dim)
-        state, stats = c.insert(state, stats, e2, v2, l2, 2.0)
-        res, *_ = c.lookup(state, stats, e1, 3.0)
+        rt = c.insert(rt, e2, v2, l2, 2.0)
+        res, _ = c.lookup(rt, e1, 3.0)
         hits = np.asarray(res.hit)
         assert hits[2] and hits[3]
         assert not hits[0] and not hits[1]
 
+    def test_masked_ring_insert_packs_written_rows(self):
+        """Regression: a masked ring insert (the fused step's mask=~hit)
+        must pack written rows contiguously from ptr — scattered slots let
+        the *next* batch clobber entries inserted one batch earlier."""
+        cfg = mk(capacity=16, eviction="ring", ttl=None)
+        c = SemanticCache(cfg)
+        rt = c.init()
+        e1, v1, l1 = rand_batch(jax.random.PRNGKey(0), 4, cfg.dim)
+        rt = c.insert(rt, e1, v1, l1, 0.0,
+                      mask=jnp.asarray([False, True, False, True]))
+        e2, v2, l2 = rand_batch(jax.random.PRNGKey(1), 4, cfg.dim)
+        rt = c.insert(rt, e2, v2, l2, 1.0)   # all-miss batch right after
+        res, _ = c.lookup(rt, e1, 2.0)       # batch-1 inserts must survive
+        hits = np.asarray(res.hit)
+        assert hits[1] and hits[3], hits
+        assert not hits[0] and not hits[2]
+        res2, _ = c.lookup(rt, e2, 2.0)
+        assert bool(jnp.all(res2.hit))
+        # no holes: 2 + 4 entries occupy exactly 6 slots
+        assert int(jnp.sum(rt.state.valid)) == 6
+
     def test_expired_slots_preferred_over_live(self):
         cfg = mk(capacity=4, eviction="lru", ttl=10.0)
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         e1, v1, l1 = rand_batch(jax.random.PRNGKey(0), 2, cfg.dim)
-        state, stats = c.insert(state, stats, e1, v1, l1, 0.0)   # expire at 10
+        rt = c.insert(rt, e1, v1, l1, 0.0)   # expire at 10
         e2, v2, l2 = rand_batch(jax.random.PRNGKey(1), 2, cfg.dim)
-        state, stats = c.insert(state, stats, e2, v2, l2, 50.0)  # fresh
+        rt = c.insert(rt, e2, v2, l2, 50.0)  # fresh
         e3, v3, l3 = rand_batch(jax.random.PRNGKey(2), 2, cfg.dim)
-        state, stats = c.insert(state, stats, e3, v3, l3, 51.0)
-        res, *_ = c.lookup(state, stats, e2, 52.0)
+        rt = c.insert(rt, e3, v3, l3, 51.0)
+        res, _ = c.lookup(rt, e2, 52.0)
         assert bool(jnp.all(res.hit)), "live entries must not be evicted " \
                                        "while expired slots exist"
 
@@ -194,7 +215,7 @@ class TestPropertyOps:
     def test_random_op_sequences_keep_invariants(self, ops):
         cfg = mk(capacity=8, ttl=5.0)
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         now = 0.0
         rng = jax.random.PRNGKey(0)
         for i, (op, b) in enumerate(ops):
@@ -202,18 +223,19 @@ class TestPropertyOps:
             now += 1.0
             if op == "insert":
                 emb, vals, lens = rand_batch(k, b, cfg.dim)
-                state, stats = c.insert(state, stats, emb, vals, lens, now)
+                rt = c.insert(rt, emb, vals, lens, now)
             elif op == "lookup":
                 emb, _, _ = rand_batch(k, b, cfg.dim)
-                _, state, stats = c.lookup(state, stats, emb, now)
+                _, rt = c.lookup(rt, emb, now)
             else:
-                state, stats = c.expire(state, stats, now)
+                rt = c.expire(rt, now)
             # invariants
-            assert int(jnp.sum(state.valid)) <= cfg.capacity
-            assert 0 <= int(state.ptr) < cfg.capacity
-            assert int(stats.hits) + int(stats.misses) == int(stats.lookups)
-            alive = store.alive_mask(state, now)
-            assert bool(jnp.all(state.expiry[alive] > now))
+            assert int(jnp.sum(rt.state.valid)) <= cfg.capacity
+            assert 0 <= int(rt.state.ptr) < cfg.capacity
+            assert int(rt.stats.hits) + int(rt.stats.misses) == \
+                int(rt.stats.lookups)
+            alive = store.alive_mask(rt.state, now)
+            assert bool(jnp.all(rt.state.expiry[alive] > now))
 
 
 class TestSoak:
@@ -222,10 +244,9 @@ class TestSoak:
     regime the paper's TTL design targets)."""
 
     def test_churn_with_ttl_and_eviction(self):
-        import jax
         cfg = mk(capacity=64, dim=32, ttl=8.0, eviction="lru")
         c = SemanticCache(cfg)
-        state, stats = c.init()
+        rt = c.init()
         rng = jax.random.PRNGKey(0)
         hits_total = 0
         for step_i in range(60):
@@ -234,18 +255,18 @@ class TestSoak:
             # mixed workload: re-query recent inserts + novel inserts
             recent, _, _ = rand_batch(jax.random.PRNGKey(step_i - 1), 4,
                                       cfg.dim)
-            res, state, stats = c.lookup(state, stats, recent, now)
+            res, rt = c.lookup(rt, recent, now)
             hits_total += int(jnp.sum(res.hit))
             fresh, vals, lens = rand_batch(jax.random.PRNGKey(step_i), 4,
                                            cfg.dim)
-            state, stats = c.insert(state, stats, fresh, vals, lens, now,
-                                    mask=~res.hit[:4])
+            rt = c.insert(rt, fresh, vals, lens, now, mask=~res.hit[:4])
             if step_i % 7 == 0:
-                state, stats = c.expire(state, stats, now)
+                rt = c.expire(rt, now)
             # invariants
-            assert int(jnp.sum(state.valid)) <= cfg.capacity
-            alive = store.alive_mask(state, now)
-            assert bool(jnp.all(state.expiry[alive] > now))
-            assert int(stats.hits) + int(stats.misses) == int(stats.lookups)
+            assert int(jnp.sum(rt.state.valid)) <= cfg.capacity
+            alive = store.alive_mask(rt.state, now)
+            assert bool(jnp.all(rt.state.expiry[alive] > now))
+            assert int(rt.stats.hits) + int(rt.stats.misses) == \
+                int(rt.stats.lookups)
         # queries one step after insert are inside TTL -> mostly hits
         assert hits_total >= 100, hits_total

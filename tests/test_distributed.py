@@ -32,22 +32,37 @@ class TestDistributedCache:
             mesh = jax.make_mesh((4, 2), ("data", "model"))
             cfg = CacheConfig(dim=32, capacity=256, value_len=8, ttl=1e9)
             dc = DistributedCache(SemanticCache(cfg), mesh)
-            state, _ = dc.init()
+            rt = dc.init()
             step = dc.make_lookup_insert()
             q = jax.random.normal(jax.random.PRNGKey(0), (16, 32))
             vals = jnp.arange(16*8).reshape(16, 8)
             vlens = jnp.full((16,), 8); sid = jnp.arange(16)
-            state, (slot, score, hit, v, vl, src) = step(
-                state, q, vals, vlens, sid, jnp.float32(0.0))
+            rt, (slot, score, hit, v, vl, src) = step(
+                rt, q, vals, vlens, sid, jnp.float32(0.0))
             assert int(np.asarray(hit).sum()) == 0
-            state, (slot, score, hit, v, vl, src) = step(
-                state, q + 0.01, vals, vlens, sid, jnp.float32(1.0))
+            rt, (slot, score, hit, v, vl, src) = step(
+                rt, q + 0.01, vals, vlens, sid, jnp.float32(1.0))
             assert int(np.asarray(hit).sum()) == 16, np.asarray(hit)
             assert np.array_equal(np.asarray(v), np.asarray(vals))
             assert np.array_equal(np.asarray(src), np.arange(16))
             # entries spread across shards (round-robin routing)
-            valid = np.asarray(state.valid).reshape(4, -1)
+            valid = np.asarray(rt.state.valid).reshape(4, -1)
             assert (valid.sum(axis=1) == 4).all(), valid.sum(axis=1)
+            # replicated stats counters track the global workload
+            assert int(rt.stats.lookups) == 32 and int(rt.stats.hits) == 16
+            assert int(rt.stats.inserts) == 16
+            # non-uniform insert counts (6 rows on 4 shards, repeatedly):
+            # per-shard ring pointers derive from the global clock, so
+            # earlier entries must survive later uneven batches
+            for rep in range(3):
+                qq = jax.random.normal(jax.random.PRNGKey(10 + rep), (6, 32))
+                rt, _out = step(rt, qq, vals[:6], vlens[:6], sid[:6],
+                                jnp.float32(2.0 + rep))
+            q0 = jax.random.normal(jax.random.PRNGKey(10), (6, 32))
+            rt, (s2, sc2, hit2, *_r) = step(
+                rt, q0 + 0.01, vals[:6], vlens[:6], sid[:6],
+                jnp.float32(9.0))
+            assert int(np.asarray(hit2).sum()) == 6, np.asarray(hit2)
             print("DISTRIBUTED-OK")
         """)
         assert "DISTRIBUTED-OK" in out
@@ -59,17 +74,17 @@ class TestDistributedCache:
             mesh = jax.make_mesh((4,), ("data",))
             cfg = CacheConfig(dim=16, capacity=64, value_len=4, ttl=10.0)
             dc = DistributedCache(SemanticCache(cfg), mesh)
-            state, _ = dc.init()
+            rt = dc.init()
             step = dc.make_lookup_insert()
             q = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
             vals = jnp.zeros((8, 4), jnp.int32); vl = jnp.full((8,), 4)
             sid = jnp.arange(8)
-            state, _out = step(state, q, vals, vl, sid, jnp.float32(0.0))
-            state, (s, sc, hit, *_rest) = step(state, q, vals, vl, sid,
-                                               jnp.float32(5.0))
+            rt, _out = step(rt, q, vals, vl, sid, jnp.float32(0.0))
+            rt, (s, sc, hit, *_rest) = step(rt, q, vals, vl, sid,
+                                            jnp.float32(5.0))
             assert int(np.asarray(hit).sum()) == 8
-            state, (s, sc, hit, *_rest) = step(state, q, vals, vl, sid,
-                                               jnp.float32(20.0))
+            rt, (s, sc, hit, *_rest) = step(rt, q, vals, vl, sid,
+                                            jnp.float32(20.0))
             assert int(np.asarray(hit).sum()) == 0   # expired everywhere
             print("TTL-OK")
         """)
@@ -170,24 +185,24 @@ class TestDistributedEquivalence:
                               threshold=0.8)
             # local reference
             local = SemanticCache(cfg)
-            lstate, lstats = local.init()
+            lrt = local.init()
             ks = jax.random.split(jax.random.PRNGKey(0), 4)
             emb = jax.random.normal(ks[0], (32, 48))
             vals = jax.random.randint(ks[1], (32, 6), 0, 99)
             lens = jnp.full((32,), 6)
-            lstate, lstats = local.insert(lstate, lstats, emb, vals, lens, 0.0)
+            lrt = local.insert(lrt, emb, vals, lens, 0.0)
             queries = emb[:16] + 0.02 * jax.random.normal(ks[2], (16, 48))
-            lres, *_ = local.lookup(lstate, lstats, queries, 1.0)
+            lres, _ = local.lookup(lrt, queries, 1.0)
 
             # distributed: same inserts via the sharded step
             mesh = jax.make_mesh((4, 2), ("data", "model"))
             dc = DistributedCache(SemanticCache(cfg), mesh)
-            dstate, _ = dc.init()
+            drt = dc.init()
             step = dc.make_lookup_insert()
-            dstate, _out = step(dstate, emb, vals, lens,
-                                jnp.arange(32), jnp.float32(0.0))
-            dstate, (slot, score, hit, v, vl, src) = step(
-                dstate, queries, jnp.zeros((16, 6), jnp.int32),
+            drt, _out = step(drt, emb, vals, lens,
+                             jnp.arange(32), jnp.float32(0.0))
+            drt, (slot, score, hit, v, vl, src) = step(
+                drt, queries, jnp.zeros((16, 6), jnp.int32),
                 jnp.zeros((16,), jnp.int32), jnp.full((16,), -1),
                 jnp.float32(1.0))
             np.testing.assert_array_equal(np.asarray(hit), np.asarray(lres.hit))

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core.hnsw import HNSWIndex
-from repro.core.index import ExactIndex, IVFIndex
+from repro.core.index import ExactIndex, ExactState, IVFIndex
 from repro.core.policy import (AdaptiveThreshold, FixedThreshold,
                                PerCategoryThreshold, make_policy)
 from repro.core.similarity import l2_normalize
@@ -20,7 +20,7 @@ class TestExactIndex:
     def test_self_retrieval(self):
         keys = _unit(jax.random.PRNGKey(0), (128, 32))
         idx = ExactIndex(topk=1, backend="jnp")
-        s, i = idx.search(keys[:8], keys, jnp.ones((128,), bool))
+        s, i = idx.search(ExactState(), keys[:8], keys, jnp.ones((128,), bool))
         np.testing.assert_array_equal(np.asarray(i[:, 0]), np.arange(8))
         np.testing.assert_allclose(np.asarray(s[:, 0]), 1.0, atol=1e-5)
 
@@ -37,7 +37,7 @@ class TestIVF:
         st = ivf.fit(keys, valid, jax.random.PRNGKey(2))
         s_ivf, i_ivf = ivf.search(st, queries, keys, valid)
         ex = ExactIndex(topk=1, backend="jnp")
-        s_ex, i_ex = ex.search(queries, keys, valid)
+        s_ex, i_ex = ex.search(ExactState(), queries, keys, valid)
         recall = float(jnp.mean((i_ivf[:, 0] == i_ex[:, 0]).astype(jnp.float32)))
         assert recall >= 0.9, f"IVF recall {recall}"
 
@@ -97,6 +97,13 @@ class TestPolicies:
         cats = jnp.asarray([0, 1])
         hit, _ = p.decide(scores, st, cats)
         np.testing.assert_array_equal(np.asarray(hit), [True, False])
+
+    def test_per_category_requires_categories(self):
+        """The uniform protocol call must fail loudly, not silently apply
+        one threshold to every query."""
+        p = PerCategoryThreshold(thresholds=(0.7, 0.9))
+        with pytest.raises(ValueError, match="per-query categories"):
+            p.decide(jnp.asarray([0.8]), p.init_state())
 
     def test_adaptive_raises_threshold_on_false_hits(self):
         p = AdaptiveThreshold(init=0.8, target_precision=0.97, lr=0.05)

@@ -20,9 +20,9 @@ def test_int8_scores_close_to_f32():
     for dtype in (jnp.float32, jnp.int8):
         c = SemanticCache(CacheConfig(dim=64, capacity=64, value_len=4,
                                       ttl=None, key_dtype=dtype))
-        state, stats = c.init()
-        state, stats = c.insert(state, stats, emb, vals, lens, 0.0)
-        r, *_ = c.lookup(state, stats, q, 1.0)
+        rt = c.init()
+        rt = c.insert(rt, emb, vals, lens, 0.0)
+        r, _ = c.lookup(rt, q, 1.0)
         res[str(dtype)] = (np.asarray(r.score), np.asarray(r.index))
 
     s32, i32 = res[str(jnp.float32)]
@@ -44,9 +44,9 @@ def test_int8_hit_rate_parity_on_corpus():
     for dtype in (jnp.float32, jnp.int8):
         c = SemanticCache(CacheConfig(dim=384, capacity=1024, value_len=4,
                                       ttl=None, key_dtype=dtype))
-        state, stats = c.init()
-        state, stats = c.insert(state, stats, e, vals, lens, 0.0)
-        r, *_ = c.lookup(state, stats, q, 1.0)
+        rt = c.init()
+        rt = c.insert(rt, e, vals, lens, 0.0)
+        r, _ = c.lookup(rt, q, 1.0)
         hits[str(dtype)] = np.asarray(r.hit)
 
     h32 = hits[str(jnp.float32)]
@@ -58,6 +58,6 @@ def test_int8_hit_rate_parity_on_corpus():
 def test_int8_memory_is_quarter():
     c8 = SemanticCache(CacheConfig(dim=384, capacity=256, value_len=4,
                                    key_dtype=jnp.int8))
-    state, _ = c8.init()
-    assert state.keys.dtype == jnp.int8
-    assert state.keys.nbytes * 4 == 256 * 384 * 4
+    rt = c8.init()
+    assert rt.state.keys.dtype == jnp.int8
+    assert rt.state.keys.nbytes * 4 == 256 * 384 * 4

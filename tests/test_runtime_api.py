@@ -1,0 +1,315 @@
+"""CacheRuntime API: protocol interchangeability, fused-step equivalence,
+and full-runtime checkpointing (the PR-1 redesign's acceptance surface).
+
+Covers:
+  * Exact and IVF indexes driven through the *identical* Index-protocol
+    call sequence — no isinstance branches anywhere in core/ or serving/
+    (enforced by a source scan below);
+  * ``SemanticCache.step`` (fused lookup+insert) vs separate lookup+insert:
+    identical hits, scores, stats and subsequent behaviour;
+  * ``CachedEngine(use_fused_step=...)``: both engine paths produce
+    identical responses and counters;
+  * checkpoint save/load round-trips the whole runtime — adaptive-threshold
+    state and IVF index state survive a restart (no forced rebuild).
+"""
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveThreshold, CacheConfig, CacheRuntime,
+                        ExactIndex, IVFIndex, Index, Policy, SemanticCache)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+
+
+def mk(dim=32, capacity=128, **kw):
+    kw.setdefault("ttl", None)
+    return CacheConfig(dim=dim, capacity=capacity, value_len=8, **kw)
+
+
+def corpus(rng, n, dim):
+    k1, k2 = jax.random.split(rng)
+    emb = jax.random.normal(k1, (n, dim))
+    vals = jax.random.randint(k2, (n, 8), 0, 100)
+    return emb, vals, jnp.full((n,), 8)
+
+
+INDEXES = [
+    ExactIndex(topk=4, backend="jnp"),
+    IVFIndex(ncentroids=8, nprobe=8, bucket_cap=64, topk=4),
+]
+
+
+class TestProtocolInterchangeability:
+    @pytest.mark.parametrize("index", INDEXES, ids=["exact", "ivf"])
+    def test_same_call_sequence_serves_hits(self, index):
+        """One code path — init / step / refit / step — for every index."""
+        cfg = mk()
+        c = SemanticCache(cfg, index=index)
+        assert isinstance(c.index, Index) and isinstance(c.policy, Policy)
+        rt = c.init()
+        emb, vals, lens = corpus(jax.random.PRNGKey(0), 16, cfg.dim)
+        res, rt = c.step(rt, emb, vals, lens, 0.0)
+        assert int(res.hit.sum()) == 0
+        # absorbed into the index at insert: hits before any refit
+        res, rt = c.step(rt, emb, vals, lens, 1.0)
+        assert int(res.hit.sum()) == 16
+        # refit is uniform (no-op for exact, k-means rebuild for IVF)
+        rt = c.refit(rt, 1.0, jax.random.PRNGKey(1))
+        res, rt = c.lookup(rt, emb, 2.0)
+        assert int(res.hit.sum()) == 16
+        np.testing.assert_allclose(np.asarray(res.score), 1.0, atol=1e-5)
+
+    def test_ivf_recall_tracks_exact_after_refit(self):
+        cfg = mk(dim=32, capacity=512)
+        emb, vals, lens = corpus(jax.random.PRNGKey(0), 512, cfg.dim)
+        queries = emb[:64] + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(1), (64, cfg.dim))
+        hits = {}
+        for name, index in [("exact", INDEXES[0]),
+                            ("ivf", IVFIndex(ncentroids=16, nprobe=8,
+                                             bucket_cap=128, topk=4))]:
+            c = SemanticCache(cfg, index=index)
+            rt = c.init()
+            rt = c.insert(rt, emb, vals, lens, 0.0)
+            rt = c.refit(rt, 0.0, jax.random.PRNGKey(2))
+            res, rt = c.lookup(rt, queries, 1.0)
+            hits[name] = int(res.hit.sum())
+        assert hits["ivf"] >= 0.85 * hits["exact"], hits
+
+    def test_ivf_absorb_scales_past_one_bucket_without_refit(self):
+        """Regression: plain init/insert/lookup (no refit ever) must keep
+        entries findable well past a single bucket's capacity — unfitted
+        centroids are random, not zero, so absorb spreads across buckets."""
+        cfg = mk(dim=32, capacity=256)
+        c = SemanticCache(cfg, index=IVFIndex(ncentroids=16, nprobe=16,
+                                              bucket_cap=16, topk=4))
+        rt = c.init()
+        emb, vals, lens = corpus(jax.random.PRNGKey(0), 128, cfg.dim)
+        for i in range(0, 128, 16):   # 128 inserts >> one bucket's 16 slots
+            rt = c.insert(rt, emb[i:i + 16], vals[i:i + 16],
+                          lens[i:i + 16], float(i))
+        res, rt = c.lookup(rt, emb, 200.0)
+        hit_rate = float(res.hit.mean())
+        assert hit_rate >= 0.9, hit_rate
+
+    def test_runtime_is_one_jitable_pytree(self):
+        cfg = mk()
+        c = SemanticCache(cfg, index=INDEXES[1], policy=AdaptiveThreshold())
+        rt = c.init()
+        assert isinstance(rt, CacheRuntime)
+        leaves, treedef = jax.tree_util.tree_flatten(rt)
+        assert all(hasattr(x, "shape") for x in leaves)
+        rt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        emb, vals, lens = corpus(jax.random.PRNGKey(0), 4, cfg.dim)
+        jitted = jax.jit(lambda r, q, v, l, t: c.step(r, q, v, l, t))
+        _, rt2 = jitted(rt2, emb, vals, lens, jnp.float32(0.0))
+        assert int(rt2.stats.inserts) == 4
+
+    def test_no_index_isinstance_branches_in_core_or_serving(self):
+        """Acceptance criterion: one signature for all index types."""
+        pat = re.compile(r"isinstance\([^)]*(IVFIndex|ExactIndex)")
+        for sub in ("core", "serving"):
+            for root, _dirs, files in os.walk(os.path.join(SRC, sub)):
+                for f in files:
+                    if not f.endswith(".py"):
+                        continue
+                    src = open(os.path.join(root, f)).read()
+                    assert not pat.search(src), \
+                        f"index isinstance branch in {sub}/{f}"
+
+
+class TestFusedStepEquivalence:
+    @pytest.mark.parametrize("index", INDEXES, ids=["exact", "ivf"])
+    def test_step_equals_lookup_then_insert(self, index):
+        cfg = mk()
+        c = SemanticCache(cfg, index=index)
+        emb, vals, lens = corpus(jax.random.PRNGKey(0), 16, cfg.dim)
+        warm, wvals, wlens = corpus(jax.random.PRNGKey(3), 8, cfg.dim)
+
+        def prime():
+            rt = c.init()
+            rt = c.insert(rt, warm, wvals, wlens, 0.0)
+            return rt
+
+        # half the queries paraphrase warm entries -> mixed hit/miss batch
+        queries = jnp.concatenate([
+            warm + 0.01 * jax.random.normal(jax.random.PRNGKey(4),
+                                            warm.shape),
+            emb[:8]])
+        mv = jnp.concatenate([wvals, vals[:8]])
+        ml = jnp.concatenate([wlens, lens[:8]])
+
+        res_f, rt_f = c.step(prime(), queries, mv, ml, 1.0)
+        res_s, rt_s = c.lookup(prime(), queries, 1.0)
+        rt_s = c.insert(rt_s, queries, mv, ml, 1.0, mask=~res_s.hit)
+
+        np.testing.assert_array_equal(np.asarray(res_f.hit),
+                                      np.asarray(res_s.hit))
+        np.testing.assert_allclose(np.asarray(res_f.score),
+                                   np.asarray(res_s.score), atol=1e-6)
+        for field in ("lookups", "hits", "misses", "inserts"):
+            assert int(getattr(rt_f.stats, field)) == \
+                int(getattr(rt_s.stats, field)), field
+        # both runtimes serve the same traffic identically afterwards
+        ra, _ = c.lookup(rt_f, queries, 2.0)
+        rb, _ = c.lookup(rt_s, queries, 2.0)
+        np.testing.assert_array_equal(np.asarray(ra.hit), np.asarray(rb.hit))
+        np.testing.assert_allclose(np.asarray(ra.score),
+                                   np.asarray(rb.score), atol=1e-6)
+
+    @pytest.mark.parametrize("index", INDEXES, ids=["exact", "ivf"])
+    def test_peeked_step_equals_plain_step(self, index):
+        """peek -> step(peeked=...) (the engine's single-search path) must
+        match the self-searching step bit for bit."""
+        cfg = mk()
+        c = SemanticCache(cfg, index=index)
+        warm, wvals, wlens = corpus(jax.random.PRNGKey(3), 8, cfg.dim)
+        queries = jnp.concatenate([
+            warm[:4] + 0.01 * jax.random.normal(jax.random.PRNGKey(4),
+                                                (4, cfg.dim)),
+            corpus(jax.random.PRNGKey(5), 4, cfg.dim)[0]])
+        mv = jnp.concatenate([wvals[:4], wvals[4:]])
+        ml = wlens
+
+        def prime():
+            rt = c.init()
+            return c.insert(rt, warm, wvals, wlens, 0.0)
+
+        res_a, rt_a = c.step(prime(), queries, mv, ml, 1.0)
+        rt = prime()
+        peek, _ = c.lookup(rt, queries, 1.0, update_counters=False)
+        res_b, rt_b = c.step(rt, queries, mv, ml, 1.0, peeked=peek)
+
+        np.testing.assert_array_equal(np.asarray(res_a.hit),
+                                      np.asarray(res_b.hit))
+        np.testing.assert_allclose(np.asarray(res_a.score),
+                                   np.asarray(res_b.score), atol=0)
+        for a, b in zip(jax.tree_util.tree_leaves(rt_a),
+                        jax.tree_util.tree_leaves(rt_b)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_engine_fused_and_separate_paths_identical(self):
+        """Satellite: use_fused_step is real — both paths give one answer."""
+        from repro.data.qa_dataset import build_corpus, build_test_queries
+        from repro.serving import CachedEngine, Request, SimulatedLLMBackend
+        pairs = build_corpus(100, seed=0)
+        queries = build_test_queries(pairs, n_per_category=20, seed=1)
+        reqs = [Request(query=q.query, category=q.category,
+                        source_id=q.source_id, semantic_key=q.semantic_key)
+                for q in queries]
+
+        results = {}
+        for fused in (True, False):
+            eng = CachedEngine(
+                mk(dim=384, capacity=2048), SimulatedLLMBackend(pairs),
+                batch_size=32, use_fused_step=fused)
+            eng.warm(pairs[:50])
+            resp = eng.process(reqs)
+            results[fused] = (
+                [(r.answer, r.cached, round(r.score, 5)) for r in resp],
+                int(eng.stats.lookups), int(eng.stats.hits),
+                int(eng.stats.inserts), eng.backend.calls)
+        assert results[True] == results[False]
+
+
+class TestRuntimeCheckpoint:
+    def test_engine_restart_with_adaptive_ivf_resumes(self, tmp_path):
+        """Acceptance criterion: a restarted engine with adaptive policy +
+        IVF index resumes with identical policy_state and serves hits with
+        no forced rebuild."""
+        from repro.data.qa_dataset import build_corpus, build_test_queries
+        from repro.serving import CachedEngine, Request, SimulatedLLMBackend
+        pairs = build_corpus(100, seed=0)
+        queries = build_test_queries(pairs, n_per_category=20, seed=1)
+        by_id = {p.qa_id: p for p in pairs}
+
+        def judge(req, sid):
+            return sid >= 0 and sid in by_id and \
+                by_id[sid].semantic_key == req.semantic_key
+
+        def make(**kw):
+            return CachedEngine(
+                mk(dim=384, capacity=2048, threshold=0.7),
+                SimulatedLLMBackend(pairs), judge=judge, batch_size=32,
+                index=IVFIndex(ncentroids=16, nprobe=8, bucket_cap=256,
+                               topk=4),
+                policy=AdaptiveThreshold(init=0.7, lr=0.05, ema=0.5), **kw)
+
+        eng = make()
+        eng.warm(pairs)
+        reqs = [Request(query=q.query, category=q.category,
+                        source_id=q.source_id, semantic_key=q.semantic_key)
+                for q in queries]
+        eng.process(reqs)   # adapts the threshold, refits the IVF index
+        path = os.path.join(str(tmp_path), "runtime.npz")
+        eng.save_cache(path)
+
+        eng2 = make()
+        eng2.load_cache(path)
+        # identical policy state (satellite: previously silently dropped)
+        np.testing.assert_array_equal(np.asarray(eng.policy_state),
+                                      np.asarray(eng2.policy_state))
+        # identical index state: restored runtime needs no forced rebuild
+        for a, b in zip(
+                jax.tree_util.tree_leaves(eng.runtime.index_state),
+                jax.tree_util.tree_leaves(eng2.runtime.index_state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert not eng2._needs_refit
+        resp = eng2.process(reqs[:32])
+        assert sum(r.cached for r in resp) >= 8
+        # no refit ran during serving (rebuild counter untouched since load)
+        assert eng2._inserts_since_rebuild == \
+            sum(not r.cached for r in resp)
+
+    def test_restart_restores_ttl_clock(self, tmp_path):
+        """Regression: expiries are absolute deadlines — reloading at now=0
+        would extend every entry's remaining TTL."""
+        from repro.data.qa_dataset import build_corpus
+        from repro.serving import CachedEngine, Request, SimulatedLLMBackend
+        pairs = build_corpus(40, seed=0)
+        mk_eng = lambda: CachedEngine(
+            mk(dim=384, capacity=512, ttl=60.0),
+            SimulatedLLMBackend(pairs), batch_size=8)
+        eng = mk_eng()
+        eng.tick(5000.0)
+        q = Request(query="does the blender come with a warranty")
+        eng.process([q])                      # inserted at t=5000, expires 5060
+        path = os.path.join(str(tmp_path), "clock.npz")
+        eng.save_cache(path)
+
+        eng2 = mk_eng()
+        eng2.load_cache(path)
+        assert eng2._now == 5000.0            # clock restored from metadata
+        assert eng2.process([q])[0].cached    # still inside TTL
+        eng2.tick(61.0)
+        assert not eng2.process([q])[0].cached  # expired on schedule
+
+        # regression: a snapshot path WITHOUT the .npz suffix (np.savez adds
+        # it to the data file only; the manifest keeps the raw name)
+        bare = os.path.join(str(tmp_path), "clock_bare")
+        eng.save_cache(bare)
+        eng3 = mk_eng()
+        eng3.load_cache(bare)
+        assert eng3._now == 5000.0
+
+    def test_raw_runtime_roundtrip_preserves_every_leaf(self, tmp_path):
+        from repro.training.checkpoint import (load_checkpoint,
+                                               save_checkpoint)
+        cfg = mk()
+        c = SemanticCache(cfg, index=INDEXES[1],
+                          policy=AdaptiveThreshold())
+        rt = c.init()
+        emb, vals, lens = corpus(jax.random.PRNGKey(0), 16, cfg.dim)
+        _, rt = c.step(rt, emb, vals, lens, 0.0)
+        rt = c.refit(rt, 0.0, jax.random.PRNGKey(1))
+        path = os.path.join(str(tmp_path), "rt.npz")
+        save_checkpoint(path, rt)
+        restored = load_checkpoint(path, c.init())
+        for a, b in zip(jax.tree_util.tree_leaves(rt),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -83,22 +83,24 @@ class TestCheckpoint:
             with pytest.raises(ValueError):
                 load_checkpoint(p, bad)
 
-    def test_cache_state_checkpoint(self):
-        """The Redis-persistence analogue: slab state round-trips."""
+    def test_cache_runtime_checkpoint(self):
+        """The Redis-persistence analogue: the *whole* CacheRuntime (slab +
+        stats + policy + index state) round-trips as one pytree."""
         from repro.core import CacheConfig, SemanticCache
         import jax.random as jr
         c = SemanticCache(CacheConfig(dim=8, capacity=16, value_len=4))
-        state, stats = c.init()
+        rt = c.init()
         emb = jr.normal(jr.PRNGKey(0), (4, 8))
         vals = jnp.arange(16).reshape(4, 4)
-        state, stats = c.insert(state, stats, emb, vals, jnp.full((4,), 4), 0.0)
+        rt = c.insert(rt, emb, vals, jnp.full((4,), 4), 0.0)
         with tempfile.TemporaryDirectory() as d:
             p = os.path.join(d, "cache.npz")
-            save_checkpoint(p, state)
+            save_checkpoint(p, rt)
             restored = load_checkpoint(p, jax.tree_util.tree_map(
-                jnp.zeros_like, state))
-        res, *_ = c.lookup(restored, stats, emb, 1.0)
+                jnp.zeros_like, rt))
+        res, _ = c.lookup(restored, emb, 1.0)
         assert bool(jnp.all(res.hit))
+        assert int(restored.stats.inserts) == 4
 
 
 class TestTrainSmallModel:
