@@ -1,0 +1,195 @@
+"""Tail-latency + coalescing benchmark for the async serving subsystem.
+
+Three experiments on the simulated backend (DESIGN.md §12.5):
+
+  1. **parity** — the async scheduler must reproduce the sync engine's
+     results on an identical workload: same per-request hit/miss
+     decisions, byte-identical answers, same hit rate. Driven in lockstep
+     waves of ``max_batch`` so both paths see the same batch partitioning.
+  2. **coalescing** — a duplicate-burst workload under open-loop Poisson
+     arrivals, coalescing on vs off: reports backend calls, the reduction
+     ratio, and coalesced-call counts.
+  3. **tail latency** — open-loop Poisson at a configurable rate against a
+     *blocking* backend (real sleeps): sustained QPS and p50/p95/p99 per
+     path (hit / miss / coalesced).
+
+Output: ``name,value`` CSV rows, then a JSON metrics summary.
+
+``--smoke`` shrinks sizes for CI and turns the parity/coalescing
+expectations into hard assertions (non-zero exit on violation), so a
+scheduler regression fails the build.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import sys
+
+from repro.core.types import CacheConfig
+from repro.data.qa_dataset import build_corpus
+from repro.serving import (AsyncCacheServer, CachedEngine, Request,
+                           SchedulerConfig, ServingMetrics,
+                           SimulatedLLMBackend, build_workload,
+                           run_open_loop, run_waves)
+
+
+def _emit(name: str, value) -> None:
+    print(f"{name},{value}")
+    sys.stdout.flush()
+
+
+def make_engine(pairs, *, batch_size: int, latency_s: float = 0.0,
+                block: bool = False, warm: bool = True) -> CachedEngine:
+    by_id = {p.qa_id: p for p in pairs}
+
+    def judge(req, sid):
+        return sid >= 0 and sid in by_id and \
+            by_id[sid].semantic_key == req.semantic_key
+
+    backend = SimulatedLLMBackend(pairs, latency_per_call_s=latency_s,
+                                  block=block)
+    cfg = CacheConfig(dim=384, capacity=max(4096, 8 * len(pairs)),
+                      value_len=48, ttl=None, threshold=0.8)
+    eng = CachedEngine(cfg, backend, judge=judge, batch_size=batch_size)
+    if warm:
+        eng.warm(pairs)
+    return eng
+
+
+def bench_parity(pairs, workload, *, batch: int) -> dict:
+    """Sync engine vs async scheduler on the same workload/partitioning."""
+    sync_eng = make_engine(pairs, batch_size=batch)
+    sync_resp = sync_eng.process(workload)
+
+    async_eng = make_engine(pairs, batch_size=batch)
+
+    async def drive():
+        sched = SchedulerConfig(max_batch=batch, max_wait_ms=50.0,
+                                coalesce=False)
+        async with AsyncCacheServer(async_eng, sched) as server:
+            return await run_waves(server.submit_request, workload,
+                                   wave=batch)
+    async_resp = asyncio.run(drive()).responses
+
+    decisions_match = all(a.cached == b.cached
+                          for a, b in zip(sync_resp, async_resp))
+    answers_match = all(a.answer == b.answer
+                        for a, b in zip(sync_resp, async_resp))
+    sync_hits = sum(r.cached for r in sync_resp)
+    async_hits = sum(r.cached for r in async_resp)
+    return {
+        "sync_hit_rate": sync_hits / len(workload),
+        "async_hit_rate": async_hits / len(workload),
+        "decisions_match": decisions_match,
+        "answers_match": answers_match,
+    }
+
+
+def bench_coalescing(pairs, workload, *, batch: int, rate_qps: float) -> dict:
+    """Duplicate-burst workload, coalescing on vs off."""
+    out = {}
+    for coalesce in (False, True):
+        eng = make_engine(pairs, batch_size=batch)
+
+        async def drive():
+            sched = SchedulerConfig(max_batch=batch, max_wait_ms=2.0,
+                                    coalesce=coalesce)
+            async with AsyncCacheServer(eng, sched) as server:
+                return await run_open_loop(server.submit_request, workload,
+                                           rate_qps=rate_qps, seed=7)
+        asyncio.run(drive())
+        tag = "coalesce_on" if coalesce else "coalesce_off"
+        out[f"{tag}_backend_calls"] = eng.backend.calls
+        out[f"{tag}_coalesced"] = eng.metrics.coalesced_calls
+    off, on = out["coalesce_off_backend_calls"], \
+        out["coalesce_on_backend_calls"]
+    out["backend_call_reduction_pct"] = round(100.0 * (1 - on / max(off, 1)),
+                                              2)
+    return out
+
+
+def bench_tail_latency(pairs, workload, *, batch: int, rate_qps: float,
+                       llm_latency_s: float) -> dict:
+    """Open-loop Poisson against a blocking backend: real wall-clock tails."""
+    eng = make_engine(pairs, batch_size=batch, latency_s=llm_latency_s,
+                      block=True)
+    # compile the fused serve path before the clock starts — otherwise the
+    # first micro-batch's jit trace (~1s) queues behind itself and floods
+    # every percentile with cold-start time — then zero the bookkeeping so
+    # the warmup row doesn't appear in the reported samples/counters
+    eng.serve_batch([Request(query="serve-path warmup")])
+    eng.metrics = ServingMetrics()
+
+    async def drive():
+        sched = SchedulerConfig(max_batch=batch, max_wait_ms=2.0)
+        async with AsyncCacheServer(eng, sched) as server:
+            return await run_open_loop(server.submit_request, workload,
+                                       rate_qps=rate_qps, seed=11)
+    res = asyncio.run(drive())
+    summary = eng.metrics.summary()
+    return {
+        "achieved_qps": round(res.achieved_qps, 1),
+        "wall_s": round(res.wall_s, 3),
+        "percentiles": summary["latency_percentiles"],
+        "coalesced_calls": summary["coalesced_calls"],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny sizes + hard assertions")
+    ap.add_argument("--corpus", type=int, default=None,
+                    help="QA pairs per category")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--rate-qps", type=float, default=None)
+    args = ap.parse_args(argv)
+
+    corpus = args.corpus or (60 if args.smoke else 500)
+    n_req = args.requests or (192 if args.smoke else 2000)
+    batch = args.batch or (16 if args.smoke else 64)
+    rate = args.rate_qps or (400.0 if args.smoke else 800.0)
+
+    pairs = build_corpus(corpus, seed=0)
+
+    # 1. parity: paper mixture, no duplicate bursts
+    plain = build_workload(pairs, n_req, burst_prob=0.0, seed=1)
+    parity = bench_parity(pairs, plain, batch=batch)
+    for k, v in parity.items():
+        _emit(f"serve/parity_{k}", v)
+
+    # 2. coalescing: concurrent-duplicate workload
+    bursty = build_workload(pairs, n_req, burst_prob=0.35, burst_size=8,
+                            seed=2)
+    coal = bench_coalescing(pairs, bursty, batch=batch, rate_qps=rate)
+    for k, v in coal.items():
+        _emit(f"serve/{k}", v)
+
+    # 3. tail latency under Poisson load with a real-sleeping backend
+    tail_req = bursty[:min(len(bursty), 96 if args.smoke else 1000)]
+    tail = bench_tail_latency(pairs, tail_req, batch=batch, rate_qps=rate,
+                              llm_latency_s=0.01 if args.smoke else 0.05)
+    _emit("serve/achieved_qps", tail["achieved_qps"])
+    for path, pct in tail["percentiles"].items():
+        for key in ("p50_s", "p95_s", "p99_s"):
+            _emit(f"serve/{path}_{key}", pct[key])
+    print(json.dumps(tail, indent=1))
+
+    ok = True
+    if not parity["decisions_match"] or not parity["answers_match"]:
+        print("FAIL: async scheduler diverged from sync engine", file=sys.stderr)
+        ok = False
+    if parity["sync_hit_rate"] != parity["async_hit_rate"]:
+        print("FAIL: hit-rate parity broken", file=sys.stderr)
+        ok = False
+    if coal["coalesce_on_backend_calls"] >= coal["coalesce_off_backend_calls"]:
+        print("FAIL: coalescing did not reduce backend calls", file=sys.stderr)
+        ok = False
+    _emit("serve/ok", ok)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -165,18 +165,29 @@ class SemanticCache:
 
     # -- fused serve-side step (beyond-paper: single jit — DESIGN.md §7) -----
     def commit(self, runtime: CacheRuntime, peeked: LookupResult,
-               now: Array | float) -> tuple[LookupResult, CacheRuntime]:
+               now: Array | float, *, valid: Array | None = None
+               ) -> tuple[LookupResult, CacheRuntime]:
         """Commit a previously peeked lookup (counters, LRU touch, policy
         state) *without* re-searching the slab. The hit mask is re-derived
         from the peeked scores against the current policy state, so
-        ``peek -> commit`` is bit-identical to a counted ``lookup``."""
+        ``peek -> commit`` is bit-identical to a counted ``lookup``.
+
+        ``valid`` marks real rows in a padded batch (DESIGN.md §12.2):
+        padding rows are excluded from the hit mask, the LRU touch and
+        every counter, so a padded commit is counter-identical to an
+        unpadded commit over just the valid rows."""
         now = jnp.asarray(now, dtype=jnp.float32)
         hit, pstate = self.policy.decide(peeked.score, runtime.policy_state)
         hit = hit & (peeked.score > -jnp.inf)
+        if valid is None:
+            n_lookups = peeked.score.shape[0]
+        else:
+            hit = hit & valid
+            n_lookups = jnp.sum(valid).astype(jnp.int32)
         result = dataclasses.replace(peeked, hit=hit)
         state = store.touch(runtime.state, peeked.index, now, hit)
         stats = runtime.stats.record_lookups(
-            peeked.score.shape[0], jnp.sum(hit).astype(jnp.int32))
+            n_lookups, jnp.sum(hit).astype(jnp.int32))
         return result, runtime.replace(state=state, stats=stats,
                                        policy_state=pstate)
 
@@ -190,6 +201,7 @@ class SemanticCache:
         *,
         source_id: Array | None = None,
         peeked: LookupResult | None = None,
+        valid: Array | None = None,
     ) -> tuple[LookupResult, CacheRuntime]:
         """Lookup, then insert exactly the missed queries' fresh responses.
 
@@ -202,12 +214,25 @@ class SemanticCache:
         the internal re-search: the engine peeks once to learn the miss set,
         then commits + inserts here, so the slab is searched exactly once
         per batch (DESIGN.md §7).
+
+        ``valid`` marks the real rows of a padded batch (DESIGN.md §12.2):
+        padding rows neither count as lookups/misses nor get inserted, so
+        every batch size shares one compiled shape without polluting state.
         """
-        if peeked is None:
+        if peeked is None and valid is None:
             result, runtime = self.lookup(runtime, queries, now)
         else:
-            result, runtime = self.commit(runtime, peeked, now)
+            if peeked is None:
+                # no peek supplied but the batch is padded: search without
+                # committing, then commit valid-masked — pad rows must not
+                # count as lookups/misses or touch LRU state
+                peeked, _ = self.lookup(runtime, queries, now,
+                                        update_counters=False)
+            result, runtime = self.commit(runtime, peeked, now, valid=valid)
+        insert_mask = ~result.hit
+        if valid is not None:
+            insert_mask = insert_mask & valid
         runtime = self.insert(
             runtime, queries, miss_values, miss_value_lens, now,
-            source_id=source_id, mask=~result.hit)
+            source_id=source_id, mask=insert_mask)
         return result, runtime

@@ -5,10 +5,18 @@ QA corpus, stream the 2,000-test-query workload through the CachedEngine,
 and print the paper's metrics. ``--backend model`` places a real (reduced)
 architecture behind the cache; ``--backend sim`` uses the simulated LLM
 API with the paper-style latency/cost model.
+
+``--scheduler async`` routes the workload through the continuous
+micro-batching scheduler (DESIGN.md §12) instead of the sync batch loop:
+open-loop Poisson arrivals at ``--rate-qps`` (or closed-loop with
+``--concurrency`` clients when no rate is given), with in-flight duplicate
+coalescing; the summary then also carries p50/p95/p99 latency per path and
+the coalesced-call count.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 
 from repro.configs import get_arch
@@ -17,8 +25,9 @@ from repro.core.policy import AdaptiveThreshold
 from repro.core.types import CacheConfig
 from repro.data.qa_dataset import build_corpus, build_test_queries
 from repro.data.tokenizer import HashTokenizer
-from repro.serving import (CachedEngine, ModelBackend, Request,
-                           SimulatedLLMBackend)
+from repro.serving import (AsyncCacheServer, CachedEngine, ModelBackend,
+                           Request, SchedulerConfig, SimulatedLLMBackend,
+                           run_closed_loop, run_open_loop)
 
 
 def main():
@@ -40,6 +49,18 @@ def main():
     ap.add_argument("--no-fused", dest="fused", action="store_false",
                     help="use separate lookup+insert instead of the fused "
                          "single-jit step()")
+    ap.add_argument("--scheduler", choices=("sync", "async"), default="sync",
+                    help="sync batch loop vs async continuous micro-batching "
+                         "with in-flight coalescing (DESIGN.md §12)")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="async admission deadline per micro-batch")
+    ap.add_argument("--rate-qps", type=float, default=None,
+                    help="async: open-loop Poisson arrival rate; omit for "
+                         "closed-loop")
+    ap.add_argument("--concurrency", type=int, default=32,
+                    help="async closed-loop client count")
+    ap.add_argument("--no-coalesce", dest="coalesce", action="store_false",
+                    help="disable in-flight duplicate coalescing")
     ap.add_argument("--snapshot", default=None,
                     help="save the full CacheRuntime (slab + policy + index "
                          "state) here after serving")
@@ -76,10 +97,38 @@ def main():
 
     print(f"warming cache with {len(pairs)} QA pairs ...")
     engine.warm(pairs)
-    print(f"serving {len(queries)} queries ...")
-    engine.process([Request(query=q.query, category=q.category,
-                            source_id=q.source_id,
-                            semantic_key=q.semantic_key) for q in queries])
+    requests = [Request(query=q.query, category=q.category,
+                        source_id=q.source_id,
+                        semantic_key=q.semantic_key) for q in queries]
+    if args.scheduler == "sync":
+        print(f"serving {len(queries)} queries (sync batches) ...")
+        engine.process(requests)
+    else:
+        mode = (f"open-loop {args.rate_qps:.0f} qps" if args.rate_qps
+                else f"closed-loop x{args.concurrency}")
+        print(f"serving {len(queries)} queries (async scheduler, {mode}) ...")
+        # pre-trace the fused serve path, then zero the bookkeeping: the
+        # one-off jit compile (~seconds) must not flood every reported
+        # end-to-end percentile
+        from repro.serving import ServingMetrics
+        engine.serve_batch([Request(query="serve-path compile warmup")])
+        engine.metrics = ServingMetrics()
+
+        async def drive():
+            sched = SchedulerConfig(max_batch=args.batch,
+                                    max_wait_ms=args.max_wait_ms,
+                                    coalesce=args.coalesce)
+            async with AsyncCacheServer(engine, sched) as server:
+                if args.rate_qps:
+                    res = await run_open_loop(server.submit_request,
+                                              requests, args.rate_qps)
+                else:
+                    res = await run_closed_loop(server.submit_request,
+                                                requests,
+                                                concurrency=args.concurrency)
+            print(f"sustained {res.achieved_qps:.1f} qps "
+                  f"({res.wall_s:.2f}s wall)")
+        asyncio.run(drive())
     print(json.dumps(engine.metrics.summary(), indent=1))
     if args.snapshot:
         engine.save_cache(args.snapshot)

@@ -1,9 +1,17 @@
-"""Serving runtime: the paper's cached query-handling system."""
+"""Serving runtime: the paper's cached query-handling system, plus the
+async continuous-batching layer in front of it (DESIGN.md §12)."""
 from repro.serving.engine import Batcher, CachedEngine, Request, Response
 from repro.serving.llm_backend import (BackendResult, ModelBackend,
                                        SimulatedLLMBackend)
+from repro.serving.loadgen import (LoadResult, build_workload,
+                                   run_closed_loop, run_open_loop, run_waves)
 from repro.serving.metrics import CategoryMetrics, ServingMetrics
+from repro.serving.scheduler import (AsyncScheduler, SchedulerConfig,
+                                     coalesce_key)
+from repro.serving.server import AsyncCacheServer
 
 __all__ = ["Batcher", "CachedEngine", "Request", "Response", "BackendResult",
            "ModelBackend", "SimulatedLLMBackend", "CategoryMetrics",
-           "ServingMetrics"]
+           "ServingMetrics", "AsyncScheduler", "SchedulerConfig",
+           "coalesce_key", "AsyncCacheServer", "LoadResult", "build_workload",
+           "run_closed_loop", "run_open_loop", "run_waves"]

@@ -51,6 +51,15 @@ class Response:
     cached: bool
     score: float
     latency_s: float
+    coalesced: bool = False   # served by attaching to an in-flight duplicate
+                              # (async scheduler, DESIGN.md §12.3)
+
+
+#: Row used to right-pad a partial batch up to the engine's fixed batch
+#: size. Its empty query embeds to the zero vector (cosine 0 against every
+#: slab key — always a miss), and the ``valid`` mask threaded through the
+#: fused step guarantees pad rows never touch counters or the slab.
+PAD_REQUEST = Request(query="", category="__pad__", source_id=-1)
 
 
 class Batcher:
@@ -62,6 +71,20 @@ class Batcher:
     def batches(self, requests: Sequence[Request]):
         for i in range(0, len(requests), self.batch_size):
             yield list(requests[i:i + self.batch_size])
+
+    def pad(self, batch: list[Request]) -> tuple[list[Request], int]:
+        """Right-pad ``batch`` to the fixed batch size (DESIGN.md §12.2).
+
+        Returns ``(padded_batch, n_valid)``. Every admission batch — the
+        final partial batch of a sync workload or a deadline flush from the
+        async scheduler — then shares ONE compiled shape, instead of
+        retracing the fused step per distinct ragged size. Callers must
+        route only the first ``n_valid`` rows into metrics and responses.
+        """
+        n = len(batch)
+        if n >= self.batch_size:
+            return list(batch), n
+        return list(batch) + [PAD_REQUEST] * (self.batch_size - n), n
 
 
 class CachedEngine:
@@ -112,8 +135,8 @@ class CachedEngine:
                 rt, q, v, vl, t, source_id=sid, mask=m),
             donate_argnums=(0,))
         self._step_jit = jax.jit(
-            lambda rt, q, mv, mvl, t, sid, peek: self.cache.step(
-                rt, q, mv, mvl, t, source_id=sid, peeked=peek),
+            lambda rt, q, mv, mvl, t, sid, peek, valid: self.cache.step(
+                rt, q, mv, mvl, t, source_id=sid, peeked=peek, valid=valid),
             donate_argnums=(0,))
         self._refit_jit = jax.jit(
             lambda rt, t, k: self.cache.refit(rt, t, k),
@@ -200,7 +223,7 @@ class CachedEngine:
     def process(self, requests: Sequence[Request]) -> list[Response]:
         out: list[Response] = []
         for batch in self.batcher.batches(requests):
-            out.extend(self._process_batch(batch))
+            out.extend(self.serve_batch(batch))
         return out
 
     def _generate_misses(self, batch, miss_idx):
@@ -220,7 +243,25 @@ class CachedEngine:
                    for j, i in enumerate(miss_idx)}
         return toks, lens, answers, res.latency_s, res.cost_usd
 
-    def _process_batch(self, batch: list[Request]) -> list[Response]:
+    def serve_batch(self, batch: list[Request], *,
+                    record_path_latency: bool = True) -> list[Response]:
+        """Serve ONE admission batch: peek -> backend -> fused step commit.
+
+        This is the pure device-side serve path (DESIGN.md §12.1): it does
+        no re-batching of its own, so both the sync ``process()`` loop and
+        the async continuous-batching scheduler drive it directly. On the
+        fused path partial batches are right-padded to the fixed batch
+        size (``Batcher.pad``); the ``valid`` mask keeps pad rows out of
+        every counter, the judge, the metrics and the slab.
+
+        ``record_path_latency=False`` skips the per-request hit/miss
+        latency samples — the async scheduler records true end-to-end
+        (queue wait + service) latencies itself instead of these
+        batch-amortized service times.
+        """
+        n_valid = len(batch)
+        if self.use_fused_step:
+            batch, n_valid = self.batcher.pad(batch)
         cfg = self.cache.config
         n = len(batch)
         t0 = time.perf_counter()
@@ -237,7 +278,7 @@ class CachedEngine:
             #    (the only slab search this batch — step commits it, §7)
             peek = self._peek_jit(self.runtime, emb, now)
             peek_hit = np.asarray(peek.hit)
-            miss_idx = [i for i in range(n) if not peek_hit[i]]
+            miss_idx = [i for i in range(n_valid) if not peek_hit[i]]
             cache_time = time.perf_counter() - t0
             # 2. backend answers the misses (paper §2.5 step 2)
             miss_values = np.zeros((n, cfg.value_len), dtype=np.int32)
@@ -248,11 +289,13 @@ class CachedEngine:
                 miss_values[miss_idx] = np.asarray(toks)
                 miss_lens[miss_idx] = np.asarray(lens)
             sid = jnp.asarray([r.source_id for r in batch], dtype=jnp.int32)
+            valid = np.zeros((n,), dtype=bool)
+            valid[:n_valid] = True
             # 3. one fused compiled step: commit the peek + masked insert
             t1 = time.perf_counter()
             result, self.runtime = self._step_jit(
                 self.runtime, emb, jnp.asarray(miss_values),
-                jnp.asarray(miss_lens), now, sid, peek)
+                jnp.asarray(miss_lens), now, sid, peek, jnp.asarray(valid))
             jax.block_until_ready(result.hit)  # count the commit in cache_time
             cache_time += time.perf_counter() - t1
             self._inserts_since_rebuild += len(miss_idx)
@@ -277,16 +320,17 @@ class CachedEngine:
         scores = np.asarray(result.score)
         matched_sid = np.asarray(result.source_id)
 
-        # hit path: detokenize cached responses
+        # hit path: detokenize cached responses (real rows only)
         vals = np.asarray(result.values)
-        for i in range(n):
+        for i in range(n_valid):
             if hit[i]:
                 answers[i] = self.tokenizer.decode(vals[i])
 
-        # judge hits (ground-truth oracle replaces GPT-4o-mini)
+        # judge hits (ground-truth oracle replaces GPT-4o-mini); pad rows
+        # are never hits (valid-masked), so they contribute no feedback
         positives = np.zeros((n,), dtype=bool)
         if self.judge is not None:
-            for i in range(n):
+            for i in range(n_valid):
                 if hit[i]:
                     positives[i] = self.judge(batch[i], int(matched_sid[i]))
             # adaptive-threshold feedback (paper §2.10): judged precision
@@ -296,18 +340,26 @@ class CachedEngine:
                 was_positive=jnp.asarray(positives),
                 was_hit=jnp.asarray(hit))
 
-        # metrics: baseline = every query pays the LLM call
+        # metrics: baseline = every query pays the LLM call. Only the
+        # n_valid real rows are recorded — pad rows must not move counters.
         per_call = getattr(self.backend, "latency_per_call_s", None)
-        baseline_time = (per_call or (llm_time / max(len(miss_idx), 1))) * n
+        baseline_time = (per_call or (llm_time / max(len(miss_idx), 1))) \
+            * n_valid
         per_cost = getattr(self.backend, "cost_per_call_usd", 0.0)
         self.metrics.record_batch(
-            [r.category for r in batch], hit, positives,
-            judged=[self.judge is not None and bool(h) for h in hit],
+            [batch[i].category for i in range(n_valid)],
+            hit[:n_valid], positives[:n_valid],
+            judged=[self.judge is not None and bool(hit[i])
+                    for i in range(n_valid)],
             cache_time_s=cache_time, llm_time_s=llm_time,
-            llm_cost=llm_cost, baseline_cost=per_cost * n,
+            llm_cost=llm_cost, baseline_cost=per_cost * n_valid,
             baseline_time=baseline_time)
 
-        per_q_latency = (cache_time + llm_time) / n
+        per_q_latency = (cache_time + llm_time) / max(n_valid, 1)
+        if record_path_latency:
+            for i in range(n_valid):
+                self.metrics.record_latency("hit" if hit[i] else "miss",
+                                            per_q_latency)
         return [Response(answer=answers[i], cached=bool(hit[i]),
                          score=float(scores[i]), latency_s=per_q_latency)
-                for i in range(n)]
+                for i in range(n_valid)]

@@ -41,11 +41,17 @@ class SimulatedLLMBackend:
 
     def __init__(self, pairs: Sequence[QAPair], *,
                  latency_per_call_s: float = 0.8,
-                 cost_per_call_usd: float = 0.002):
+                 cost_per_call_usd: float = 0.002,
+                 block: bool = False):
+        # ``block=True`` actually sleeps one API round-trip per generate()
+        # call (a batch of misses shares one RTT, like a batched API call)
+        # so the async scheduler's measured wall-clock latencies are real —
+        # the tail-latency benchmark needs elapsed time, not bookkeeping.
         self.by_key = {p.semantic_key: p.answer for p in pairs}
         self.by_question = {p.question: p.answer for p in pairs}
         self.latency_per_call_s = latency_per_call_s
         self.cost_per_call_usd = cost_per_call_usd
+        self.block = block
         self.calls = 0
 
     def generate(self, queries: Sequence[str],
@@ -59,6 +65,8 @@ class SimulatedLLMBackend:
             else:
                 answers.append(f"Here is a detailed answer to: {q}")
         self.calls += len(queries)
+        if self.block:
+            time.sleep(self.latency_per_call_s)
         return BackendResult(
             answers=answers,
             latency_s=self.latency_per_call_s * len(queries),

@@ -1,0 +1,117 @@
+"""Load generators over the QA corpus (DESIGN.md §12.4).
+
+Three traffic shapes against any async ``submit(Request) -> Response``:
+
+  * ``run_open_loop``   — open-loop Poisson arrivals at a target QPS:
+    requests fire on their arrival clock whether or not earlier ones have
+    completed. This is the shape that exposes queueing delay and tail
+    latency (closed-loop generators self-throttle and hide both).
+  * ``run_closed_loop`` — N concurrent clients, each submitting its next
+    request when the previous response lands (think: N chat sessions).
+  * ``run_waves``       — lockstep waves of exactly ``wave`` concurrent
+    submits. A wave equal to the scheduler's ``max_batch`` reproduces the
+    sync engine's batch partitioning exactly, which is what the
+    async-vs-sync equivalence checks rely on.
+
+``build_workload`` draws the paper's §3.2 mixture (paraphrases of cached
+questions + novel held-out queries) and can inject *duplicate bursts* —
+``burst_size`` byte-identical copies of one query back to back — the
+thundering-herd pattern in-flight coalescing exists to absorb.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import random
+import time
+from typing import Awaitable, Callable, Sequence
+
+from repro.data.qa_dataset import QAPair, build_test_queries
+from repro.serving.engine import Request, Response
+
+Submit = Callable[[Request], Awaitable[Response]]
+
+
+@dataclasses.dataclass
+class LoadResult:
+    """One generator run: responses in submission order + throughput."""
+
+    responses: list[Response]
+    wall_s: float
+
+    @property
+    def achieved_qps(self) -> float:
+        return len(self.responses) / self.wall_s if self.wall_s > 0 else 0.0
+
+
+def build_workload(pairs: Sequence[QAPair], n_requests: int, *,
+                   paraphrase_ratio: float = 0.75,
+                   burst_prob: float = 0.0, burst_size: int = 4,
+                   seed: int = 1) -> list[Request]:
+    """Paper-mixture request stream with optional duplicate bursts.
+
+    With probability ``burst_prob`` a drawn query is emitted ``burst_size``
+    times consecutively (identical bytes — the strongest coalescing case);
+    otherwise once. Exactly ``n_requests`` requests are returned.
+    """
+    rng = random.Random(seed)
+    base = build_test_queries(
+        list(pairs), n_per_category=max(1, n_requests // 4 + burst_size),
+        paraphrase_ratio=paraphrase_ratio, seed=seed)
+    out: list[Request] = []
+    i = 0
+    while len(out) < n_requests:
+        q = base[i % len(base)]
+        i += 1
+        copies = burst_size if (burst_prob > 0.0
+                                and rng.random() < burst_prob) else 1
+        req = Request(query=q.query, category=q.category,
+                      source_id=q.source_id, semantic_key=q.semantic_key)
+        for _ in range(min(copies, n_requests - len(out))):
+            out.append(req)
+    return out
+
+
+async def run_open_loop(submit: Submit, requests: Sequence[Request],
+                        rate_qps: float, *, seed: int = 0) -> LoadResult:
+    """Open-loop Poisson: exponential inter-arrivals at ``rate_qps``."""
+    rng = random.Random(seed)
+    loop = asyncio.get_running_loop()
+    start = loop.time()
+    tasks: list[asyncio.Task] = []
+    next_t = 0.0
+    for req in requests:
+        next_t += rng.expovariate(rate_qps)
+        delay = start + next_t - loop.time()
+        if delay > 0:
+            await asyncio.sleep(delay)
+        tasks.append(asyncio.create_task(submit(req)))
+    responses = list(await asyncio.gather(*tasks))
+    return LoadResult(responses=responses, wall_s=loop.time() - start)
+
+
+async def run_closed_loop(submit: Submit, requests: Sequence[Request],
+                          *, concurrency: int = 8) -> LoadResult:
+    """Closed-loop: ``concurrency`` clients, one outstanding request each."""
+    t0 = time.perf_counter()
+    responses: list[Response | None] = [None] * len(requests)
+    it = iter(range(len(requests)))
+
+    async def client() -> None:
+        for i in it:                      # single event loop: next() is safe
+            responses[i] = await submit(requests[i])
+
+    await asyncio.gather(*(client() for _ in range(max(1, concurrency))))
+    return LoadResult(responses=list(responses),
+                      wall_s=time.perf_counter() - t0)
+
+
+async def run_waves(submit: Submit, requests: Sequence[Request],
+                    *, wave: int) -> LoadResult:
+    """Lockstep waves of ``wave`` concurrent submits (sync-batch analogue)."""
+    t0 = time.perf_counter()
+    responses: list[Response] = []
+    for i in range(0, len(requests), wave):
+        chunk = requests[i:i + wave]
+        responses.extend(await asyncio.gather(*(submit(r) for r in chunk)))
+    return LoadResult(responses=responses, wall_s=time.perf_counter() - t0)

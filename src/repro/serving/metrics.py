@@ -4,11 +4,36 @@ Per-category counters for lookups / hits / positive hits plus latency and
 cost accumulators for the cached and uncached paths. ``summary()`` emits
 exactly the rows the paper reports: cache-hit rate, API-call reduction,
 positive-hit rate, average response time with/without cache, cost saved.
+
+Beyond-paper serving additions (DESIGN.md §12): per-path latency samples
+("hit" / "miss" / "coalesced") summarized as p50/p95/p99 percentiles, and
+a ``coalesced_calls`` counter — requests that attached to an in-flight
+duplicate instead of paying their own lookup/backend call. The paper-table
+rows of ``summary()`` are unchanged; the new quantities ride along under
+new keys.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
+
+
+_PCTS = (50.0, 95.0, 99.0)
+
+
+def percentiles(samples: list[float]) -> dict:
+    """p50/p95/p99 (linear interpolation, numpy-compatible) of one path."""
+    if not samples:
+        return {"count": 0, "p50_s": 0.0, "p95_s": 0.0, "p99_s": 0.0}
+    xs = sorted(samples)
+    out = {"count": len(xs)}
+    for p in _PCTS:
+        rank = (len(xs) - 1) * p / 100.0
+        lo = int(rank)
+        hi = min(lo + 1, len(xs) - 1)
+        val = xs[lo] + (xs[hi] - xs[lo]) * (rank - lo)
+        out[f"p{int(p)}_s"] = round(val, 6)
+    return out
 
 
 @dataclasses.dataclass
@@ -43,6 +68,20 @@ class ServingMetrics:
     llm_path_time_s: float = 0.0            # miss-path LLM latency
     baseline_time_s: float = 0.0            # all-queries-to-LLM latency
     queries: int = 0
+    coalesced_calls: int = 0                # requests merged into in-flight
+                                            # duplicates (scheduler, §12.3)
+    latency_samples: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(list))   # path -> [seconds]
+
+    def record_latency(self, path: str, seconds: float) -> None:
+        """One request's end-to-end latency on ``path`` (hit/miss/coalesced)."""
+        self.latency_samples[path].append(seconds)
+
+    def record_coalesced(self, n: int = 1) -> None:
+        """Count requests merged into an in-flight duplicate. Their
+        end-to-end latency is recorded separately (at resolution time)
+        via ``record_latency("coalesced", ...)``."""
+        self.coalesced_calls += n
 
     def record_batch(self, categories, hits, positives, *, judged,
                      cache_time_s: float, llm_time_s: float,
@@ -91,4 +130,8 @@ class ServingMetrics:
                        / max(self.baseline_cost_usd, 1e-9)), 2),
             "avg_latency_with_cache_s": round(avg_with, 4),
             "avg_latency_without_cache_s": round(avg_without, 4),
+            "coalesced_calls": self.coalesced_calls,
+            "latency_percentiles": {
+                path: percentiles(xs)
+                for path, xs in sorted(self.latency_samples.items())},
         }

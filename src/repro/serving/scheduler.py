@@ -1,0 +1,252 @@
+"""Async continuous micro-batch scheduler with in-flight coalescing.
+
+The paper measures one synchronous batch at a time (§2.5, Figures 2–4);
+production traffic is *concurrent*. This module is the admission layer in
+front of ``CachedEngine`` (DESIGN.md §12): requests arrive on an asyncio
+event loop, wait in a bounded FIFO queue, and are flushed to the engine's
+``serve_batch`` as micro-batches — on ``max_batch`` occupancy or on the
+oldest request's ``max_wait_ms`` deadline, whichever comes first.
+
+**In-flight coalescing** (DESIGN.md §12.3): concurrent requests with the
+same semantic key (exact query string today; embedding-similarity
+coalescing is a ROADMAP follow-up) attach as *waiters* to the one pending
+entry — queued or already dispatched to the backend — so a thundering herd
+of N identical misses costs ONE LLM call instead of N. Without a semantic
+cache in front, this is the classic request-dedup proxy; with one, it
+closes the window the paper leaves open between "first miss starts
+generating" and "response is inserted", during which every duplicate would
+also miss.
+
+Invariants (tested in ``tests/test_scheduler.py``):
+  * admission order is FIFO — a flush always takes the oldest entries,
+    hence the oldest deadlines;
+  * a full queue never deadlocks submitters: it forces an immediate
+    oldest-deadline flush (backpressure, §12.2);
+  * at most one ``serve_batch`` runs at a time (single-worker executor —
+    the engine's runtime is owned linearly), while the event loop stays
+    free to accept and coalesce new arrivals;
+  * every accepted request's future is resolved exactly once, also on
+    backend failure and on ``stop()`` (drain).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.serving.engine import CachedEngine, Request, Response
+
+
+def coalesce_key(request: Request) -> str:
+    """Semantic identity for in-flight dedup: exact query text (the
+    embedding-similarity upgrade is named in ROADMAP open items)."""
+    return request.query
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Admission-control knobs (DESIGN.md §12.2)."""
+
+    max_batch: int = 32        # flush when this many requests are queued ...
+    max_wait_ms: float = 5.0   # ... or when the oldest one has waited this long
+    max_queue: int = 1024      # bounded queue; full -> immediate flush
+    coalesce: bool = True      # in-flight duplicate merging (§12.3)
+
+    def __post_init__(self):
+        if self.max_batch <= 0 or self.max_queue <= 0:
+            raise ValueError("max_batch and max_queue must be positive")
+        if self.max_wait_ms < 0:
+            raise ValueError("max_wait_ms must be >= 0")
+
+
+class _Entry:
+    """One queued leader request and its completion future."""
+
+    __slots__ = ("request", "future", "arrival")
+
+    def __init__(self, request: Request, future: asyncio.Future,
+                 arrival: float):
+        self.request = request
+        self.future = future
+        self.arrival = arrival
+
+
+class AsyncScheduler:
+    """Continuous micro-batching in front of one ``CachedEngine``.
+
+    Usage::
+
+        scheduler = AsyncScheduler(engine, SchedulerConfig(max_batch=32))
+        await scheduler.start()
+        response = await scheduler.submit(Request(query="..."))
+        await scheduler.stop()      # drains the queue
+
+    ``submit`` is safe to call from many concurrent tasks; the engine runs
+    in a single worker thread so the device-side serve path is serialized
+    while admission/coalescing continue on the event loop.
+    """
+
+    def __init__(self, engine: CachedEngine,
+                 config: SchedulerConfig | None = None):
+        self.engine = engine
+        self.config = config or SchedulerConfig()
+        self._queue: deque[_Entry] = deque()
+        # key -> list of (waiter future, arrival time); present from leader
+        # enqueue until its response is delivered (covers queued AND
+        # dispatched-to-backend windows — that is the "in-flight" part)
+        self._pending: dict[str, list[tuple[asyncio.Future, float]]] = {}
+        self._cond: asyncio.Condition | None = None
+        self._loop_task: asyncio.Task | None = None
+        self._executor: ThreadPoolExecutor | None = None
+        self._force_flush = False
+        self._stopping = False
+        self._running = False
+        self.batches_served = 0
+
+    # -- lifecycle ------------------------------------------------------- #
+    async def start(self) -> None:
+        if self._running:
+            return
+        self._cond = asyncio.Condition()
+        # fresh worker per start: stop() shut the previous one down, and a
+        # drained scheduler may be started again
+        self._executor = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="serve-batch")
+        self._stopping = False
+        self._running = True
+        self._loop_task = asyncio.create_task(self._run())
+
+    async def stop(self) -> None:
+        """Drain: serve everything already accepted, then shut down."""
+        if not self._running:
+            return
+        async with self._cond:
+            self._stopping = True
+            self._cond.notify_all()
+        await self._loop_task
+        self._running = False
+        self._executor.shutdown(wait=True)
+
+    async def __aenter__(self) -> "AsyncScheduler":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- admission ------------------------------------------------------- #
+    async def submit(self, request: Request) -> Response:
+        """Enqueue one request and await its response.
+
+        Duplicates of an in-flight key attach as waiters (no queue slot, no
+        extra backend call); otherwise the request becomes that key's
+        leader. A full queue blocks the submitter and forces an immediate
+        flush of the oldest entries until a slot frees up.
+        """
+        if not self._running or self._stopping:
+            raise RuntimeError("scheduler is not running")
+        loop = asyncio.get_running_loop()
+        fut: asyncio.Future = loop.create_future()
+        arrival = time.perf_counter()
+        key = coalesce_key(request)
+        async with self._cond:
+            # re-check under the lock: stop() may have begun draining
+            # between the fast-path check above and lock acquisition, and
+            # an entry enqueued after the drain would strand its future
+            if not self._running or self._stopping:
+                raise RuntimeError("scheduler is not running")
+            if self.config.coalesce and key in self._pending:
+                self._pending[key].append((fut, arrival))
+                self.engine.metrics.record_coalesced(1)
+            else:
+                while len(self._queue) >= self.config.max_queue:
+                    # backpressure (§12.2): demand an immediate oldest-
+                    # deadline flush and wait for a freed slot
+                    self._force_flush = True
+                    self._cond.notify_all()
+                    await self._cond.wait()
+                    if self._stopping:
+                        raise RuntimeError("scheduler stopped while queued")
+                self._queue.append(_Entry(request, fut, arrival))
+                if self.config.coalesce:
+                    self._pending.setdefault(key, [])
+                self._cond.notify_all()
+        # awaited OUTSIDE the condition lock: the serve loop needs the lock
+        # to resolve this future
+        return await fut
+
+    # -- scheduler loop --------------------------------------------------- #
+    async def _run(self) -> None:
+        while True:
+            entries = await self._admit()
+            if entries is None:
+                return
+            await self._serve(entries)
+
+    async def _admit(self) -> list[_Entry] | None:
+        """Block until a flush condition holds, then take the oldest
+        ``<= max_batch`` entries (FIFO — oldest deadlines first)."""
+        async with self._cond:
+            while True:
+                if self._queue:
+                    age_ms = (time.perf_counter()
+                              - self._queue[0].arrival) * 1000.0
+                    if (len(self._queue) >= self.config.max_batch
+                            or age_ms >= self.config.max_wait_ms
+                            or self._force_flush or self._stopping):
+                        self._force_flush = False
+                        k = min(len(self._queue), self.config.max_batch)
+                        entries = [self._queue.popleft() for _ in range(k)]
+                        self._cond.notify_all()   # wake blocked submitters
+                        return entries
+                    timeout = self.config.max_wait_ms / 1000.0 - age_ms / 1000.0
+                elif self._stopping:
+                    return None
+                else:
+                    timeout = None
+                try:
+                    await asyncio.wait_for(self._cond.wait(), timeout)
+                except asyncio.TimeoutError:
+                    pass
+
+    async def _serve(self, entries: list[_Entry]) -> None:
+        """One engine round for one admission batch, off the event loop."""
+        loop = asyncio.get_running_loop()
+        batch = [e.request for e in entries]
+        try:
+            responses = await loop.run_in_executor(
+                self._executor,
+                lambda: self.engine.serve_batch(
+                    batch, record_path_latency=False))
+        except Exception as exc:                    # resolve, never strand
+            async with self._cond:
+                for e in entries:
+                    for fut, _ in self._pending.pop(
+                            coalesce_key(e.request), []):
+                        if not fut.done():
+                            fut.set_exception(exc)
+                    if not e.future.done():
+                        e.future.set_exception(exc)
+            return
+        self.batches_served += 1
+        done = time.perf_counter()
+        async with self._cond:
+            for e, r in zip(entries, responses):
+                # end-to-end latency: queue wait + service (the sync path's
+                # samples are service-only; these are what a client sees)
+                self.engine.metrics.record_latency(
+                    "hit" if r.cached else "miss", done - e.arrival)
+                if not e.future.done():
+                    e.future.set_result(
+                        dataclasses.replace(r, latency_s=done - e.arrival))
+                # waiters inherit the leader's answer/decision; they paid
+                # no lookup and no backend call
+                for fut, w_arrival in self._pending.pop(
+                        coalesce_key(e.request), []):
+                    self.engine.metrics.record_latency(
+                        "coalesced", done - w_arrival)
+                    if not fut.done():
+                        fut.set_result(dataclasses.replace(
+                            r, coalesced=True, latency_s=done - w_arrival))

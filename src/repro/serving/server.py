@@ -1,0 +1,128 @@
+"""AsyncCacheServer — the serving front-end that owns engine + scheduler.
+
+Composes one ``CachedEngine`` with one ``AsyncScheduler`` (DESIGN.md §12)
+behind two entry points:
+
+  * **in-process**: ``await server.submit(...)`` / ``submit_request(...)``
+    — what the load generators, benchmarks and tests drive;
+  * **TCP (stdlib only)**: newline-delimited JSON over asyncio streams
+    (``serve_tcp``) — one request object per line in, one response object
+    per line out, pipelined: every line is scheduled as its own task, so a
+    client that writes N lines before reading gets the same micro-batching
+    and coalescing as N separate clients.
+
+The wire format keeps to the engine's ``Request``/``Response`` fields::
+
+    > {"id": 7, "query": "how do i sort a list in python",
+       "category": "python_basics"}
+    < {"id": 7, "answer": ..., "cached": true, "score": 0.93,
+       "latency_s": 0.004, "coalesced": false}
+
+Responses may arrive out of request order (coalesced waiters resolve with
+their leader's batch), so pipelined clients should send an ``id`` — it is
+echoed verbatim in the matching response line.
+
+No third-party serving stack (HTTP frameworks, gRPC) is used — the repo's
+offline constraint — but the seam is exactly where one would bolt on.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+
+from repro.serving.engine import CachedEngine, Request, Response
+from repro.serving.scheduler import AsyncScheduler, SchedulerConfig
+
+
+class AsyncCacheServer:
+    """Own the serving stack's lifecycle: start/stop, submit, TCP accept."""
+
+    def __init__(self, engine: CachedEngine,
+                 scheduler_config: SchedulerConfig | None = None):
+        # one compiled shape end to end: the engine pads every admission
+        # batch to its fixed batch size, so align it with the flush size
+        cfg = scheduler_config or SchedulerConfig(
+            max_batch=engine.batcher.batch_size)
+        self.engine = engine
+        self.scheduler = AsyncScheduler(engine, cfg)
+        self._tcp: asyncio.AbstractServer | None = None
+
+    # -- lifecycle ------------------------------------------------------- #
+    async def start(self) -> None:
+        await self.scheduler.start()
+
+    async def stop(self) -> None:
+        if self._tcp is not None:
+            self._tcp.close()
+            await self._tcp.wait_closed()
+            self._tcp = None
+        await self.scheduler.stop()
+
+    async def __aenter__(self) -> "AsyncCacheServer":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- in-process API --------------------------------------------------- #
+    async def submit(self, query: str, *, category: str = "default",
+                     source_id: int = -1, semantic_key: str = "") -> Response:
+        return await self.scheduler.submit(Request(
+            query=query, category=category, source_id=source_id,
+            semantic_key=semantic_key))
+
+    async def submit_request(self, request: Request) -> Response:
+        return await self.scheduler.submit(request)
+
+    # -- TCP front-end ----------------------------------------------------- #
+    async def serve_tcp(self, host: str = "127.0.0.1", port: int = 0) -> int:
+        """Accept JSON-lines clients; returns the bound port (0 = ephemeral)."""
+        self._tcp = await asyncio.start_server(self._handle, host, port)
+        return self._tcp.sockets[0].getsockname()[1]
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        lock = asyncio.Lock()          # serialize writes, not serves
+
+        async def one(line: bytes) -> None:
+            req_id = None
+            try:
+                obj = json.loads(line)
+                req_id = obj.get("id")
+                resp = await self.submit(
+                    obj["query"],
+                    category=obj.get("category", "default"),
+                    source_id=int(obj.get("source_id", -1)),
+                    semantic_key=obj.get("semantic_key", ""))
+                payload = {"answer": resp.answer, "cached": resp.cached,
+                           "score": resp.score, "latency_s": resp.latency_s,
+                           "coalesced": resp.coalesced}
+            except Exception as exc:   # malformed line / scheduler stopped
+                payload = {"error": str(exc)}
+            if req_id is not None:     # echo: responses can be out of order
+                payload["id"] = req_id
+            async with lock:
+                writer.write(json.dumps(payload).encode() + b"\n")
+                await writer.drain()
+
+        # completed tasks discard themselves: a long-lived pipelined
+        # connection must not accumulate one task object per line served
+        tasks: set[asyncio.Task] = set()
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    break
+                if line.strip():
+                    t = asyncio.create_task(one(line))
+                    tasks.add(t)
+                    t.add_done_callback(tasks.discard)
+        finally:
+            if tasks:
+                await asyncio.gather(*tasks, return_exceptions=True)
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
