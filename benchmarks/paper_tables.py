@@ -4,6 +4,8 @@ fig2  — API-call frequency: traditional vs semantic caching (per category)
 fig3  — average query response time: with cache vs without
 fig4/table1 — cache hits + positive-hit accuracy per category
 threshold_sweep — §5.3: cosine threshold 0.6..0.9 step 0.05
+tenant_table — beyond-paper (DESIGN.md §13): per-tenant hit/miss/latency
+               breakdown of a partitioned multi-tenant run
 
 Each returns (rows, summary) where rows are CSV-able dicts; ``run.py``
 prints them in the harness format.
@@ -15,7 +17,9 @@ import time
 from repro.core.types import CacheConfig
 from repro.data.qa_dataset import (CATEGORIES, build_corpus,
                                    build_test_queries)
-from repro.serving import CachedEngine, Request, SimulatedLLMBackend
+from repro.serving import (CachedEngine, Request, SimulatedLLMBackend,
+                           build_multi_tenant_workload)
+from repro.tenancy import TenantRegistry, TenantSpec
 
 _PAPER_TABLE1 = {   # category -> (cache hits / 500, positive hits)
     "python_basics": (335, 310),
@@ -133,6 +137,54 @@ def threshold_sweep(full: bool = False):
     rows.append({"name": "sec5.3/optimal", "us_per_call": 0.0,
                  "derived": f"best_threshold={best[0]:.2f} (paper: 0.80)"})
     return rows, {"best": best}
+
+
+def tenant_table(full: bool = False):
+    """Per-tenant breakdown (beyond-paper, DESIGN.md §13): one partitioned
+    cache, Zipf-skewed 3-tenant traffic, per-tenant hit rate + precision +
+    mean latency — the multi-tenant analogue of Table 1."""
+    n = 800 if full else 250
+    nq = 600 if full else 240
+    pairs = build_corpus(n, seed=0)
+    by_id = {p.qa_id: p for p in pairs}
+
+    def judge(req, sid):
+        return sid >= 0 and sid in by_id and \
+            by_id[sid].semantic_key == req.semantic_key
+
+    registry = TenantRegistry((
+        TenantSpec("free", share=1.0, weight=1.0),
+        TenantSpec("pro", share=2.0, weight=2.0),
+        TenantSpec("enterprise", share=2.0, weight=4.0, threshold=0.85),
+    ))
+    cfg = CacheConfig(dim=384, capacity=8 * n * len(registry), value_len=48,
+                      ttl=None, threshold=0.8)
+    eng = CachedEngine(cfg, SimulatedLLMBackend(pairs), judge=judge,
+                       batch_size=64, registry=registry)
+    for name in registry.names:
+        eng.warm(pairs, tenant=name)
+    workload = build_multi_tenant_workload(
+        pairs, nq, tenants=list(registry.names), skew=1.2, seed=2)
+    t0 = time.perf_counter()
+    eng.process(workload)
+    wall = time.perf_counter() - t0
+
+    s = eng.metrics.summary()
+    dev = eng.tenant_stats()
+    rows = []
+    for name in registry.names:
+        h = s["tenants"][name]
+        d = dev[name]
+        rows.append({
+            "name": f"tenancy/{name}",
+            "us_per_call": 1e6 * wall / max(nq, 1),
+            "derived": (f"lookups={d['lookups']}"
+                        f" hit_rate={h['hit_rate']:.3f}"
+                        f" inserts={d['inserts']}"
+                        f" evictions={d['evictions']}"
+                        f" region_slots={d['region_slots']}"),
+        })
+    return rows, s
 
 
 def ttl_behaviour():

@@ -53,6 +53,7 @@ def main() -> None:
         ("fig3", lambda: paper_tables.fig3(summary_holder.get("s"))),
         ("sec5.3", lambda: paper_tables.threshold_sweep(full=False)),
         ("sec2.7", paper_tables.ttl_behaviour),
+        ("tenancy", lambda: paper_tables.tenant_table(full=full)),
         ("kernel", kernel_bench.cosine_topk_scaling),
         ("design3", kernel_bench.hnsw_vs_exact),
         ("beyond", kernel_bench.ivf_bench),

@@ -1,6 +1,6 @@
 """Tail-latency + coalescing benchmark for the async serving subsystem.
 
-Three experiments on the simulated backend (DESIGN.md §12.5):
+Four experiments on the simulated backend (DESIGN.md §12.5, §13.5):
 
   1. **parity** — the async scheduler must reproduce the sync engine's
      results on an identical workload: same per-request hit/miss
@@ -12,12 +12,16 @@ Three experiments on the simulated backend (DESIGN.md §12.5):
   3. **tail latency** — open-loop Poisson at a configurable rate against a
      *blocking* backend (real sleeps): sustained QPS and p50/p95/p99 per
      path (hit / miss / coalesced).
+  4. **tenancy** — a 3-tenant Zipf-skewed workload through a partitioned
+     cache with DRR admission: cross-tenant isolation (an answer cached by
+     one tenant must miss for another even for the byte-identical query),
+     per-tenant accounting consistency, and per-tenant hit rates.
 
 Output: ``name,value`` CSV rows, then a JSON metrics summary.
 
-``--smoke`` shrinks sizes for CI and turns the parity/coalescing
+``--smoke`` shrinks sizes for CI and turns the parity/coalescing/tenancy
 expectations into hard assertions (non-zero exit on violation), so a
-scheduler regression fails the build.
+scheduler or isolation regression fails the build.
 """
 from __future__ import annotations
 
@@ -30,8 +34,9 @@ from repro.core.types import CacheConfig
 from repro.data.qa_dataset import build_corpus
 from repro.serving import (AsyncCacheServer, CachedEngine, Request,
                            SchedulerConfig, ServingMetrics,
-                           SimulatedLLMBackend, build_workload,
-                           run_open_loop, run_waves)
+                           SimulatedLLMBackend, build_multi_tenant_workload,
+                           build_workload, run_open_loop, run_waves)
+from repro.tenancy import TenantRegistry, TenantSpec
 
 
 def _emit(name: str, value) -> None:
@@ -40,7 +45,8 @@ def _emit(name: str, value) -> None:
 
 
 def make_engine(pairs, *, batch_size: int, latency_s: float = 0.0,
-                block: bool = False, warm: bool = True) -> CachedEngine:
+                block: bool = False, warm: bool = True,
+                registry=None) -> CachedEngine:
     by_id = {p.qa_id: p for p in pairs}
 
     def judge(req, sid):
@@ -49,11 +55,19 @@ def make_engine(pairs, *, batch_size: int, latency_s: float = 0.0,
 
     backend = SimulatedLLMBackend(pairs, latency_per_call_s=latency_s,
                                   block=block)
-    cfg = CacheConfig(dim=384, capacity=max(4096, 8 * len(pairs)),
+    per_tenant = max(4096, 8 * len(pairs))
+    cfg = CacheConfig(dim=384,
+                      capacity=per_tenant * (len(registry) if registry
+                                             else 1),
                       value_len=48, ttl=None, threshold=0.8)
-    eng = CachedEngine(cfg, backend, judge=judge, batch_size=batch_size)
+    eng = CachedEngine(cfg, backend, judge=judge, batch_size=batch_size,
+                       registry=registry)
     if warm:
-        eng.warm(pairs)
+        if registry is None:
+            eng.warm(pairs)
+        else:
+            for name in registry.names:
+                eng.warm(pairs, tenant=name)
     return eng
 
 
@@ -136,6 +150,59 @@ def bench_tail_latency(pairs, workload, *, batch: int, rate_qps: float,
     }
 
 
+def bench_tenancy(pairs, *, batch: int, n_req: int, rate_qps: float) -> dict:
+    """3-tenant Zipf-skewed workload through a partitioned cache (§13.5)."""
+    registry = TenantRegistry((
+        TenantSpec("free", share=1.0, weight=1.0),
+        TenantSpec("pro", share=2.0, weight=2.0),
+        TenantSpec("enterprise", share=2.0, weight=4.0),
+    ))
+    eng = make_engine(pairs, batch_size=batch, registry=registry)
+
+    # isolation probe: a novel answer cached under 'free' must be invisible
+    # to 'pro' even though the query bytes (hence the embedding) are equal
+    probe = "what is the meaning of the tenant isolation probe"
+    eng.process([Request(query=probe, tenant="free")])       # miss + insert
+    again = eng.process([Request(query=probe, tenant="free")])[0]
+    cross = eng.process([Request(query=probe, tenant="pro")])[0]
+    isolation_ok = bool(again.cached) and not cross.cached
+
+    workload = build_multi_tenant_workload(
+        pairs, n_req, tenants=list(registry.names), skew=1.2,
+        burst_prob=0.2, burst_size=4, seed=13)
+
+    async def drive():
+        sched = SchedulerConfig(max_batch=batch, max_wait_ms=2.0,
+                                tenant_weights=registry.weights(),
+                                max_queue_per_tenant=max(batch, n_req // 4))
+        async with AsyncCacheServer(eng, sched) as server:
+            return await run_open_loop(server.submit_request, workload,
+                                       rate_qps=rate_qps, seed=17)
+    res = asyncio.run(drive())
+    served_all = (len(res.responses) == n_req
+                  and all(r is not None and r.answer for r in res.responses))
+
+    dev = eng.tenant_stats()
+    summary = eng.metrics.summary()
+    host = summary["tenants"]
+    # accounting: device-side per-tenant lookups must sum to the global
+    # counter, and host-side per-tenant lookups to the query count
+    accounting_ok = (
+        sum(v["lookups"] for v in dev.values()) == int(eng.stats.lookups)
+        and sum(v["hits"] for v in dev.values()) == int(eng.stats.hits)
+        and sum(v["lookups"] for v in host.values()) == summary["queries"])
+    out = {
+        "isolation_ok": isolation_ok,
+        "served_all": served_all,
+        "accounting_ok": accounting_ok,
+    }
+    for name in registry.names:
+        out[f"{name}_lookups"] = dev[name]["lookups"]
+        out[f"{name}_hit_rate"] = round(
+            dev[name]["hits"] / max(dev[name]["lookups"], 1), 4)
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -177,6 +244,13 @@ def main(argv=None) -> int:
             _emit(f"serve/{path}_{key}", pct[key])
     print(json.dumps(tail, indent=1))
 
+    # 4. multi-tenant: 3 tenants, skewed traffic, partitioned cache + DRR
+    ten = bench_tenancy(pairs, batch=batch,
+                        n_req=min(n_req, 192 if args.smoke else 1000),
+                        rate_qps=rate)
+    for k, v in ten.items():
+        _emit(f"serve/tenancy_{k}", v)
+
     ok = True
     if not parity["decisions_match"] or not parity["answers_match"]:
         print("FAIL: async scheduler diverged from sync engine", file=sys.stderr)
@@ -186,6 +260,12 @@ def main(argv=None) -> int:
         ok = False
     if coal["coalesce_on_backend_calls"] >= coal["coalesce_off_backend_calls"]:
         print("FAIL: coalescing did not reduce backend calls", file=sys.stderr)
+        ok = False
+    if not ten["isolation_ok"]:
+        print("FAIL: cross-tenant cache leak", file=sys.stderr)
+        ok = False
+    if not (ten["served_all"] and ten["accounting_ok"]):
+        print("FAIL: tenancy serving/accounting broken", file=sys.stderr)
         ok = False
     _emit("serve/ok", ok)
     return 0 if ok else 1

@@ -25,6 +25,13 @@ one ``jax.jit`` with donated buffers:
 The index and policy are protocol plugins (``repro.core.runtime.Index`` /
 ``Policy``): Exact and IVF — and any future structure — are interchangeable
 with no ``isinstance`` branches and no out-of-band ``fit`` calls.
+
+Multi-tenancy (DESIGN.md §13): an optional static ``partition``
+(``repro.tenancy.PartitionMap``) splits the slab into disjoint per-tenant
+regions. A per-row ``tenant_id`` vector — the only traced tenancy input —
+masks every lookup to its row's own region and routes every insert into
+its row's own per-tenant ring, so one compiled ``step()`` serves every
+tenant mix with zero retraces and structural cross-tenant isolation.
 """
 from __future__ import annotations
 
@@ -51,6 +58,7 @@ class SemanticCache:
     config: CacheConfig
     index: Any = None          # Index protocol plugin (None -> ExactIndex)
     policy: Any = None         # Policy protocol plugin (None -> FixedThreshold)
+    partition: Any = None      # PartitionMap for multi-tenant regions (§13)
 
     def __post_init__(self):
         if self.index is None:
@@ -58,16 +66,61 @@ class SemanticCache:
         if self.policy is None:
             object.__setattr__(
                 self, "policy", FixedThreshold(threshold=self.config.threshold))
+        if self.partition is not None:
+            if self.partition.capacity != self.config.capacity:
+                raise ValueError(
+                    f"partition covers {self.partition.capacity} slots, "
+                    f"slab capacity is {self.config.capacity}")
+            if self.config.eviction != "ring":
+                # per-tenant LRU/LFU needs a per-row in-region arg-min scan;
+                # until that lands, failing loudly beats silently evicting
+                # across regions
+                raise ValueError(
+                    "tenant partitioning currently supports ring eviction "
+                    f"only (got {self.config.eviction!r})")
 
     # -- state ------------------------------------------------------------
     def init(self) -> CacheRuntime:
-        """Fresh runtime: empty slab, zero counters, init policy/index state."""
+        """Fresh runtime: empty slab, zero counters, init policy/index state
+        (+ per-tenant ring pointers/counters when partitioned)."""
+        tenancy = None
+        if self.partition is not None:
+            from repro.tenancy.partition import TenancyState
+            tenancy = TenancyState.zeros(len(self.partition))
         return CacheRuntime(
             state=init_cache_state(self.config),
             stats=CacheStats.zeros(),
             policy_state=self.policy.init_state(),
             index_state=self.index.init(self.config),
+            tenancy=tenancy,
         )
+
+    # -- tenancy helpers (no-ops when partition is None) -------------------
+    def _require_tenants(self, tenant_id: Array | None) -> Array | None:
+        """Partitioned caches must be told each row's tenant; an unpartitioned
+        cache ignores the argument entirely (single-tenant fast path)."""
+        if self.partition is None:
+            return None
+        if tenant_id is None:
+            raise ValueError("cache is tenant-partitioned: every call needs "
+                             "a per-row tenant_id vector")
+        return jnp.asarray(tenant_id, dtype=jnp.int32)
+
+    def _tenant_alive(self, alive: Array, tenant_id: Array) -> Array:
+        """(N,) aliveness -> (B, N) per-row visibility: a row sees only the
+        live slots of its own region (structural isolation — a cosine-1.0
+        duplicate in another tenant's region is invisible, not just
+        sub-threshold)."""
+        owner = jnp.asarray(self.partition.slot_owner())        # (N,) const
+        return alive[None, :] & (owner[None, :] == tenant_id[:, None])
+
+    def _apply_threshold_overrides(self, hit: Array, score: Array,
+                                   tenant_id: Array) -> Array:
+        """Per-tenant similarity-threshold overrides (registry option): rows
+        of a tenant with an override re-decide against it; rows without keep
+        the cache-wide policy's decision. Negative entry = no override."""
+        thr = self.partition.thresholds_array()[tenant_id]      # (B,)
+        return jnp.where(thr >= 0.0, score >= thr, hit)
 
     # -- lookup (paper §2.5 step 1) ----------------------------------------
     def lookup(
@@ -77,24 +130,35 @@ class SemanticCache:
         now: Array | float,
         *,
         update_counters: bool = True,
+        tenant_id: Array | None = None,  # (B,) required when partitioned
     ) -> tuple[LookupResult, CacheRuntime]:
         """ANN search + threshold decision. ``update_counters=False`` gives a
         pure peek (no LRU touch, no stats, no policy-state commit) — the
-        engine uses it to learn the miss set before the fused ``step``."""
+        engine uses it to learn the miss set before the fused ``step``.
+
+        On a partitioned cache each row searches only its own tenant's
+        region (``tenant_id`` masks the aliveness per row, §13.2)."""
+        tenant_id = self._require_tenants(tenant_id)
         state, stats = runtime.state, runtime.stats
         b = queries.shape[0]
         now = jnp.asarray(now, dtype=jnp.float32)
         alive = store.alive_mask(state, now)
+        if tenant_id is not None:
+            alive = self._tenant_alive(alive, tenant_id)        # (B, N)
 
         top_s, top_i = self.index.search(
             runtime.index_state, queries, state.keys, alive)
 
         best_score = top_s[:, 0]
         best_idx = jnp.maximum(top_i[:, 0], 0)  # -1 guard when cache empty
-        any_alive = jnp.any(alive)
-        best_score = jnp.where(any_alive & (top_i[:, 0] >= 0), best_score, -jnp.inf)
+        row_alive = jnp.any(alive, axis=-1) if alive.ndim == 2 \
+            else jnp.any(alive)
+        best_score = jnp.where(row_alive & (top_i[:, 0] >= 0),
+                               best_score, -jnp.inf)
 
         hit, pstate = self.policy.decide(best_score, runtime.policy_state)
+        if tenant_id is not None:
+            hit = self._apply_threshold_overrides(hit, best_score, tenant_id)
         hit = hit & (best_score > -jnp.inf)
 
         result = LookupResult(
@@ -111,8 +175,25 @@ class SemanticCache:
             return result, runtime
         state = store.touch(state, best_idx, now, hit)
         stats = stats.record_lookups(b, jnp.sum(hit).astype(jnp.int32))
+        tenancy = self._account_lookups(runtime.tenancy, tenant_id,
+                                        hit=hit, valid=None)
         return result, runtime.replace(state=state, stats=stats,
-                                       policy_state=pstate)
+                                       policy_state=pstate, tenancy=tenancy)
+
+    def _account_lookups(self, tenancy, tenant_id: Array | None, *,
+                         hit: Array, valid: Array | None):
+        """Scatter-add one batch of lookups/hits into the per-tenant
+        counters. Padding rows (``valid=False``) contribute nothing."""
+        if tenancy is None or tenant_id is None:
+            return tenancy
+        ones = jnp.ones_like(tenant_id)
+        if valid is not None:
+            ones = jnp.where(valid, ones, 0)
+        hits = jnp.where(hit, ones, 0)
+        return dataclasses.replace(
+            tenancy,
+            lookups=tenancy.lookups.at[tenant_id].add(ones),
+            hits=tenancy.hits.at[tenant_id].add(hits))
 
     # -- insert (paper §2.5 step 3) -----------------------------------------
     def insert(
@@ -125,19 +206,39 @@ class SemanticCache:
         *,
         source_id: Array | None = None,
         mask: Array | None = None,     # typically = ~hit from the lookup
+        tenant_id: Array | None = None,  # (B,) required when partitioned
     ) -> CacheRuntime:
-        state, slots = store.insert(
-            self.config, runtime.state, queries, values, value_lens, now,
-            source_id=source_id, mask=mask)
+        tenant_id = self._require_tenants(tenant_id)
         if mask is None:
             mask = jnp.ones((queries.shape[0],), dtype=bool)
+        now_f = jnp.asarray(now, dtype=jnp.float32)
+        tenancy = runtime.tenancy
+        slots = None
+        if tenant_id is not None:
+            # per-tenant ring inside each tenant's own region: a tenant can
+            # only ever overwrite itself (structural capacity isolation)
+            slots, new_ptr = store.select_slots_tenant(
+                self.partition, tenancy.ptr, tenant_id, mask)
+            alive_before = store.alive_mask(runtime.state, now_f)
+            evicted = jnp.where(mask & alive_before[slots],
+                                jnp.ones_like(tenant_id), 0)
+            inserted = jnp.where(mask, jnp.ones_like(tenant_id), 0)
+            tenancy = dataclasses.replace(
+                tenancy,
+                ptr=new_ptr,
+                inserts=tenancy.inserts.at[tenant_id].add(inserted),
+                evictions=tenancy.evictions.at[tenant_id].add(evicted))
+        state, slots = store.insert(
+            self.config, runtime.state, queries, values, value_lens, now,
+            source_id=source_id, mask=mask, slots=slots)
         # the index absorbs the new rows so they are findable before the
         # next periodic refit (DESIGN.md §8.2)
         istate = self.index.absorb(runtime.index_state, slots, queries, mask)
         n = jnp.sum(mask).astype(jnp.int32)
         stats = dataclasses.replace(
             runtime.stats, inserts=runtime.stats.inserts + n)
-        return runtime.replace(state=state, stats=stats, index_state=istate)
+        return runtime.replace(state=state, stats=stats, index_state=istate,
+                               tenancy=tenancy)
 
     # -- maintenance (paper §2.7 TTL; §2.4 rebalancing) ----------------------
     def expire(self, runtime: CacheRuntime, now: Array | float) -> CacheRuntime:
@@ -165,7 +266,8 @@ class SemanticCache:
 
     # -- fused serve-side step (beyond-paper: single jit — DESIGN.md §7) -----
     def commit(self, runtime: CacheRuntime, peeked: LookupResult,
-               now: Array | float, *, valid: Array | None = None
+               now: Array | float, *, valid: Array | None = None,
+               tenant_id: Array | None = None
                ) -> tuple[LookupResult, CacheRuntime]:
         """Commit a previously peeked lookup (counters, LRU touch, policy
         state) *without* re-searching the slab. The hit mask is re-derived
@@ -174,10 +276,15 @@ class SemanticCache:
 
         ``valid`` marks real rows in a padded batch (DESIGN.md §12.2):
         padding rows are excluded from the hit mask, the LRU touch and
-        every counter, so a padded commit is counter-identical to an
-        unpadded commit over just the valid rows."""
+        every counter — including the per-tenant accounting — so a padded
+        commit is counter-identical to an unpadded commit over just the
+        valid rows."""
+        tenant_id = self._require_tenants(tenant_id)
         now = jnp.asarray(now, dtype=jnp.float32)
         hit, pstate = self.policy.decide(peeked.score, runtime.policy_state)
+        if tenant_id is not None:
+            hit = self._apply_threshold_overrides(hit, peeked.score,
+                                                  tenant_id)
         hit = hit & (peeked.score > -jnp.inf)
         if valid is None:
             n_lookups = peeked.score.shape[0]
@@ -188,8 +295,10 @@ class SemanticCache:
         state = store.touch(runtime.state, peeked.index, now, hit)
         stats = runtime.stats.record_lookups(
             n_lookups, jnp.sum(hit).astype(jnp.int32))
+        tenancy = self._account_lookups(runtime.tenancy, tenant_id,
+                                        hit=hit, valid=valid)
         return result, runtime.replace(state=state, stats=stats,
-                                       policy_state=pstate)
+                                       policy_state=pstate, tenancy=tenancy)
 
     def step(
         self,
@@ -202,6 +311,7 @@ class SemanticCache:
         source_id: Array | None = None,
         peeked: LookupResult | None = None,
         valid: Array | None = None,
+        tenant_id: Array | None = None,
     ) -> tuple[LookupResult, CacheRuntime]:
         """Lookup, then insert exactly the missed queries' fresh responses.
 
@@ -218,21 +328,28 @@ class SemanticCache:
         ``valid`` marks the real rows of a padded batch (DESIGN.md §12.2):
         padding rows neither count as lookups/misses nor get inserted, so
         every batch size shares one compiled shape without polluting state.
+
+        ``tenant_id`` (required on a partitioned cache) is a traced (B,)
+        vector, so *every* tenant mix — all-one-tenant, interleaved,
+        padded — shares this one compiled program (§13.2).
         """
         if peeked is None and valid is None:
-            result, runtime = self.lookup(runtime, queries, now)
+            result, runtime = self.lookup(runtime, queries, now,
+                                          tenant_id=tenant_id)
         else:
             if peeked is None:
                 # no peek supplied but the batch is padded: search without
                 # committing, then commit valid-masked — pad rows must not
                 # count as lookups/misses or touch LRU state
                 peeked, _ = self.lookup(runtime, queries, now,
-                                        update_counters=False)
-            result, runtime = self.commit(runtime, peeked, now, valid=valid)
+                                        update_counters=False,
+                                        tenant_id=tenant_id)
+            result, runtime = self.commit(runtime, peeked, now, valid=valid,
+                                          tenant_id=tenant_id)
         insert_mask = ~result.hit
         if valid is not None:
             insert_mask = insert_mask & valid
         runtime = self.insert(
             runtime, queries, miss_values, miss_value_lens, now,
-            source_id=source_id, mask=insert_mask)
+            source_id=source_id, mask=insert_mask, tenant_id=tenant_id)
         return result, runtime

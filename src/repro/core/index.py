@@ -53,13 +53,19 @@ class ExactIndex:
 
     def search(self, istate: ExactState, queries: Array, keys: Array,
                alive: Array) -> tuple[Array, Array]:
-        """(B,d) x (N,d) -> (scores (B,k), indices (B,k))."""
+        """(B,d) x (N,d) -> (scores (B,k), indices (B,k)).
+
+        ``alive`` is (N,) — one visibility mask for the whole batch — or
+        (B, N) for per-row visibility (the tenancy path masks each query to
+        its own slab region). The Pallas kernel takes the shared-mask fast
+        path only; per-row masks score on the jnp path (a per-row-masked
+        kernel is a follow-up)."""
         del istate
         backend = self.backend
         if backend == "auto":
             backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
         queries = l2_normalize(queries)  # keys are normalized at insert time
-        if backend == "pallas":
+        if backend == "pallas" and alive.ndim == 1:
             from repro.kernels import ops  # deferred: kernels are optional deps
 
             return ops.cosine_topk(queries, keys, alive, k=self.topk)
@@ -200,7 +206,10 @@ class IVFIndex:
 
     def search(self, istate: IVFState, queries: Array, keys: Array, valid: Array
                ) -> tuple[Array, Array]:
-        """(B,d) -> (scores (B,k), slot indices (B,k)). Probes nprobe buckets."""
+        """(B,d) -> (scores (B,k), slot indices (B,k)). Probes nprobe buckets.
+
+        ``valid`` is (N,) shared or (B, N) per-row (tenancy: each query sees
+        only its own region's slots, whichever buckets they landed in)."""
         ivf = istate
         q = l2_normalize(queries)
         csims = jnp.einsum("bd,cd->bc", q, ivf.centroids)      # (B, C)
@@ -213,7 +222,10 @@ class IVFIndex:
         safe = jnp.maximum(cand_flat, 0)
         cand_keys = keys[safe]                                  # (B, M, d)
         sims = jnp.einsum("bd,bmd->bm", q, cand_keys)
-        alive = valid[safe] & ok_flat
+        if valid.ndim == 2:
+            alive = jnp.take_along_axis(valid, safe, axis=1) & ok_flat
+        else:
+            alive = valid[safe] & ok_flat
         sims = jnp.where(alive, sims, NEG_INF)
         k = min(self.topk, sims.shape[-1])
         top_s, top_m = jax.lax.top_k(sims, k)

@@ -50,7 +50,10 @@ class Index(Protocol):
 
     def search(self, istate: Any, queries: Array, keys: Array, alive: Array
                ) -> tuple[Array, Array]:
-        """(B,d) queries vs the slab -> (scores (B,k), slot ids (B,k))."""
+        """(B,d) queries vs the slab -> (scores (B,k), slot ids (B,k)).
+
+        ``alive`` is (N,) shared across the batch, or (B, N) per-row — the
+        tenancy layer masks each query to its own slab region (§13.2)."""
         ...
 
     def absorb(self, istate: Any, slots: Array, keys: Array, mask: Array) -> Any:
@@ -88,13 +91,18 @@ class CacheRuntime:
       state        — the slab (keys/values/TTL/LRU bookkeeping),
       stats        — running hit/miss/insert counters,
       policy_state — threshold-policy state (e.g. adaptive (thr, ema) pair),
-      index_state  — ANN-index state (empty for ExactIndex, IVFState for IVF).
+      index_state  — ANN-index state (empty for ExactIndex, IVFState for IVF),
+      tenancy      — per-tenant ring pointers + accounting (``TenancyState``,
+                     DESIGN.md §13.2); ``None`` for a single-tenant cache,
+                     which keeps the treedef — and thus every compiled
+                     program — identical to the pre-tenancy layout.
     """
 
     state: CacheState
     stats: CacheStats
     policy_state: Array
     index_state: Any
+    tenancy: Any = None
 
     def replace(self, **kw) -> "CacheRuntime":
         return dataclasses.replace(self, **kw)

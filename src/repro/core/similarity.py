@@ -39,7 +39,9 @@ def cosine_scores(queries: Array, keys: Array, valid: Array | None = None,
     Args:
       queries: (B, d) query embeddings.
       keys: (N, d) slab keys.
-      valid: (N,) bool slot-aliveness mask (validity ∧ not-expired).
+      valid: (N,) bool slot-aliveness mask (validity ∧ not-expired), or
+        (B, N) bool for per-row visibility — the multi-tenant path masks
+        each query to its own slab region (DESIGN.md §13.2).
       assume_normalized: skip re-normalization (keys are normalized at insert).
     """
     if keys.dtype == jnp.int8:
@@ -51,7 +53,8 @@ def cosine_scores(queries: Array, keys: Array, valid: Array | None = None,
         "bd,nd->bn", queries, keys, preferred_element_type=jnp.float32
     )
     if valid is not None:
-        scores = jnp.where(valid[None, :], scores, NEG_INF)
+        mask = valid if valid.ndim == 2 else valid[None, :]
+        scores = jnp.where(mask, scores, NEG_INF)
     return scores
 
 

@@ -87,6 +87,40 @@ def select_slots(config: CacheConfig, state: CacheState, now: Array, m: int,
     return idx.astype(jnp.int32)
 
 
+def select_slots_tenant(partition, tenant_ptr: Array, tenant_id: Array,
+                        mask: Array) -> tuple[Array, Array]:
+    """Per-tenant ring slot selection inside disjoint slab regions
+    (DESIGN.md §13.2).
+
+    Each tenant runs its own FIFO ring over its contiguous region
+    ``[start_t, start_t + size_t)``; ``tenant_ptr`` is the (T,) vector of
+    per-tenant ring offsets. Written rows of a tenant pack contiguously from
+    that tenant's pointer (same packing argument as the global ring in
+    ``select_slots``); masked-out rows park on that tenant's slots just past
+    its written block, where their keep-old write is a no-op. Regions are
+    disjoint, so slots are distinct across tenants by construction; within a
+    tenant they are distinct as long as the per-batch row count does not
+    exceed the region size (the engine enforces ``min region >= batch``).
+
+    Returns ``(slots (B,), new_tenant_ptr (T,))``.
+    """
+    b = tenant_id.shape[0]
+    starts = partition.starts_array()[tenant_id]
+    sizes = partition.sizes_array()[tenant_id]
+    mask = mask.astype(bool)
+    same = tenant_id[:, None] == tenant_id[None, :]              # (B, B)
+    before = jnp.tril(jnp.ones((b, b), dtype=bool), k=-1)
+    written_rank = jnp.sum(same & before & mask[None, :], axis=1)
+    skipped_rank = jnp.sum(same & before & ~mask[None, :], axis=1)
+    written_total = jnp.sum(same & mask[None, :], axis=1)
+    off = jnp.where(mask, written_rank, written_total + skipped_rank)
+    slots = starts + (tenant_ptr[tenant_id] + off) % sizes
+    counts = jnp.zeros_like(tenant_ptr).at[tenant_id].add(
+        mask.astype(jnp.int32))
+    new_ptr = (tenant_ptr + counts) % partition.sizes_array()
+    return slots.astype(jnp.int32), new_ptr
+
+
 def insert(
     config: CacheConfig,
     state: CacheState,
@@ -97,12 +131,18 @@ def insert(
     *,
     source_id: Array | None = None,  # (B,) provenance
     mask: Array | None = None,       # (B,) bool: only insert where True
+    slots: Array | None = None,      # (B,) externally chosen distinct slots
 ) -> tuple[CacheState, Array]:
     """Insert a batch of (embedding, response) pairs (paper §2.5 step 3).
 
     Masked-out rows are written to a scratch slot pattern and immediately
     neutralized, keeping the op fully static-shaped (jit/pjit friendly):
     rows with ``mask=False`` do not modify any live slot.
+
+    ``slots`` overrides the eviction policy's slot choice with externally
+    selected (distinct) slots — the tenancy layer picks per-region slots via
+    ``select_slots_tenant`` and manages its own per-tenant ring pointers, so
+    the global ``state.ptr`` is left untouched on that path.
 
     Returns ``(state, slots)`` where ``slots`` is the (B,) int32 slot id each
     row was (or, for masked rows, would have been) written to — the ANN
@@ -123,7 +163,9 @@ def insert(
         # traffic in the lookup — EXPERIMENTS.md §Perf)
         keys = jnp.clip(jnp.round(keys * 127.0), -127, 127)
     keys = keys.astype(config.key_dtype)
-    slots = select_slots(config, state, now, b, mask=mask)  # (B,) distinct
+    external_slots = slots is not None
+    if not external_slots:
+        slots = select_slots(config, state, now, b, mask=mask)  # (B,) distinct
 
     # For masked-out rows keep the previous slot contents: gather-then-where.
     def upd(dst, src_new, slot_axis0=True):
@@ -150,7 +192,7 @@ def insert(
         ),
         source_id=upd(state.source_id, source_id.astype(jnp.int32)),
         ptr=(state.ptr + jnp.sum(mask).astype(jnp.int32)) % config.capacity
-        if config.eviction == "ring"
+        if config.eviction == "ring" and not external_slots
         else state.ptr,
         n_inserts=state.n_inserts + jnp.sum(mask).astype(jnp.int32),
     )

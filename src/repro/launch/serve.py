@@ -12,6 +12,12 @@ open-loop Poisson arrivals at ``--rate-qps`` (or closed-loop with
 ``--concurrency`` clients when no rate is given), with in-flight duplicate
 coalescing; the summary then also carries p50/p95/p99 latency per path and
 the coalesced-call count.
+
+``--tenants N`` turns on multi-tenant serving (DESIGN.md §13): the slab is
+partitioned into N per-tenant regions, traffic is a Zipf-skewed mixture
+over the tenants (``--tenant-skew``; 0 = uniform), admission is
+deficit-round-robin fair, and the summary carries per-tenant hit/miss/
+latency breakdowns plus the device-side per-tenant counters.
 """
 from __future__ import annotations
 
@@ -27,7 +33,9 @@ from repro.data.qa_dataset import build_corpus, build_test_queries
 from repro.data.tokenizer import HashTokenizer
 from repro.serving import (AsyncCacheServer, CachedEngine, ModelBackend,
                            Request, SchedulerConfig, SimulatedLLMBackend,
-                           run_closed_loop, run_open_loop)
+                           build_multi_tenant_workload, run_closed_loop,
+                           run_open_loop)
+from repro.tenancy import TenantRegistry
 
 
 def main():
@@ -61,6 +69,11 @@ def main():
                     help="async closed-loop client count")
     ap.add_argument("--no-coalesce", dest="coalesce", action="store_false",
                     help="disable in-flight duplicate coalescing")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="partition the cache into N tenant regions and "
+                         "serve a multi-tenant workload (0 = single-tenant)")
+    ap.add_argument("--tenant-skew", type=float, default=1.0,
+                    help="Zipf skew of tenant popularity (0 = uniform)")
     ap.add_argument("--snapshot", default=None,
                     help="save the full CacheRuntime (slab + policy + index "
                          "state) here after serving")
@@ -85,7 +98,13 @@ def main():
         backend = ModelBackend(model, params,
                                HashTokenizer(vocab_size=config.vocab))
 
-    cfg = CacheConfig(dim=384, capacity=max(16384, 8 * args.corpus),
+    registry = None
+    if args.tenants > 0:
+        registry = TenantRegistry.uniform(
+            [f"tenant-{i}" for i in range(args.tenants)])
+    # multi-tenant: every tenant's region must hold the warm corpus
+    capacity = max(16384, 8 * args.corpus) * max(1, args.tenants)
+    cfg = CacheConfig(dim=384, capacity=capacity,
                       value_len=48, ttl=args.ttl, threshold=args.threshold)
     index = IVFIndex(ncentroids=128, nprobe=16, bucket_cap=1024) \
         if args.index == "ivf" else None
@@ -93,13 +112,22 @@ def main():
         if args.policy == "adaptive" else None
     engine = CachedEngine(cfg, backend, judge=judge, batch_size=args.batch,
                           index=index, policy=policy,
-                          use_fused_step=args.fused)
+                          use_fused_step=args.fused, registry=registry)
 
-    print(f"warming cache with {len(pairs)} QA pairs ...")
-    engine.warm(pairs)
-    requests = [Request(query=q.query, category=q.category,
-                        source_id=q.source_id,
-                        semantic_key=q.semantic_key) for q in queries]
+    if registry is None:
+        print(f"warming cache with {len(pairs)} QA pairs ...")
+        engine.warm(pairs)
+        requests = [Request(query=q.query, category=q.category,
+                            source_id=q.source_id,
+                            semantic_key=q.semantic_key) for q in queries]
+    else:
+        print(f"warming {args.tenants} tenant regions with "
+              f"{len(pairs)} QA pairs each ...")
+        for name in registry.names:
+            engine.warm(pairs, tenant=name)
+        requests = build_multi_tenant_workload(
+            pairs, len(queries), tenants=list(registry.names),
+            skew=args.tenant_skew, seed=1)
     if args.scheduler == "sync":
         print(f"serving {len(queries)} queries (sync batches) ...")
         engine.process(requests)
@@ -111,13 +139,17 @@ def main():
         # one-off jit compile (~seconds) must not flood every reported
         # end-to-end percentile
         from repro.serving import ServingMetrics
-        engine.serve_batch([Request(query="serve-path compile warmup")])
+        engine.serve_batch([Request(
+            query="serve-path compile warmup",
+            tenant="default" if registry is None else registry.names[0])])
         engine.metrics = ServingMetrics()
 
         async def drive():
             sched = SchedulerConfig(max_batch=args.batch,
                                     max_wait_ms=args.max_wait_ms,
-                                    coalesce=args.coalesce)
+                                    coalesce=args.coalesce,
+                                    tenant_weights=None if registry is None
+                                    else registry.weights())
             async with AsyncCacheServer(engine, sched) as server:
                 if args.rate_qps:
                     res = await run_open_loop(server.submit_request,
@@ -130,6 +162,9 @@ def main():
                   f"({res.wall_s:.2f}s wall)")
         asyncio.run(drive())
     print(json.dumps(engine.metrics.summary(), indent=1))
+    if registry is not None:
+        print("device-side per-tenant counters:")
+        print(json.dumps(engine.tenant_stats(), indent=1))
     if args.snapshot:
         engine.save_cache(args.snapshot)
         print(f"runtime snapshot (slab+policy+index state) -> {args.snapshot}")

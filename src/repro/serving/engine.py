@@ -18,6 +18,13 @@ Two serve paths (DESIGN.md §7):
 
 A ground-truth judge callback replaces the paper's GPT-4o-mini validation
 (DESIGN.md §9): judge(query, matched_source_id) -> bool.
+
+Multi-tenancy (DESIGN.md §13): constructing the engine with a
+``TenantRegistry`` partitions the slab into per-tenant regions and threads
+each request's ``tenant`` through the same compiled step — same batch
+shapes, same jit cache, but lookups/inserts are masked to each row's own
+region and both ``ServingMetrics`` and the device-side ``TenancyState``
+keep per-tenant accounting.
 """
 from __future__ import annotations
 
@@ -43,6 +50,8 @@ class Request:
     category: str = "default"
     source_id: int = -1          # ground-truth provenance (evaluation only)
     semantic_key: str = ""
+    tenant: str = "default"      # isolation domain (multi-tenant serving,
+                                 # DESIGN.md §13); ignored without a registry
 
 
 @dataclasses.dataclass
@@ -96,7 +105,8 @@ class CachedEngine:
                  policy=None,
                  index=None,
                  rebuild_every: int = 2048,
-                 use_fused_step: bool = True):
+                 use_fused_step: bool = True,
+                 registry=None):
         # ``policy``: optional threshold policy (e.g. AdaptiveThreshold —
         # paper §2.10 future work). With an adaptive policy the engine feeds
         # judged hit outcomes back after every batch, closing the paper's
@@ -104,7 +114,24 @@ class CachedEngine:
         # ``index``: optional ANN index (e.g. IVFIndex). The index is refit
         # every ``rebuild_every`` inserts — the analogue of the paper's
         # periodic HNSW rebalancing (§2.4); a no-op for stateless indexes.
-        self.cache = SemanticCache(cache_config, policy=policy, index=index)
+        # ``registry``: optional TenantRegistry — partitions the slab into
+        # per-tenant regions and routes each Request.tenant through the
+        # compiled step (DESIGN.md §13). None = single-tenant (unchanged).
+        self.registry = registry
+        partition = None
+        if registry is not None:
+            partition = registry.partition(cache_config.capacity)
+            if min(partition.sizes) < batch_size:
+                # the per-tenant ring guarantees distinct slots only while a
+                # batch's rows per tenant fit inside the tenant's region
+                raise ValueError(
+                    f"smallest tenant region ({min(partition.sizes)} slots, "
+                    f"tenant {partition.names[partition.sizes.index(min(partition.sizes))]!r}) "
+                    f"is below the batch size ({batch_size}); grow the slab "
+                    "or the tenant's share/quota")
+            self._tenant_index = {n: i for i, n in enumerate(partition.names)}
+        self.cache = SemanticCache(cache_config, policy=policy, index=index,
+                                   partition=partition)
         self.runtime: CacheRuntime = self.cache.init()
         self.use_fused_step = use_fused_step
         self.rebuild_every = rebuild_every
@@ -124,19 +151,22 @@ class CachedEngine:
         # are in-place at the XLA level instead of copying the slab per
         # batch. The peek must NOT donate — the same runtime is fed to the
         # fused step right after.
+        # ``tid`` is the per-row tenant-id vector (None on a single-tenant
+        # engine — an empty pytree, so the compiled signature is unchanged)
         self._lookup_jit = jax.jit(
-            lambda rt, q, t: self.cache.lookup(rt, q, t),
+            lambda rt, q, t, tid: self.cache.lookup(rt, q, t, tenant_id=tid),
             donate_argnums=(0,))
         self._peek_jit = jax.jit(
-            lambda rt, q, t: self.cache.lookup(
-                rt, q, t, update_counters=False)[0])
+            lambda rt, q, t, tid: self.cache.lookup(
+                rt, q, t, update_counters=False, tenant_id=tid)[0])
         self._insert_jit = jax.jit(
-            lambda rt, q, v, vl, t, sid, m: self.cache.insert(
-                rt, q, v, vl, t, source_id=sid, mask=m),
+            lambda rt, q, v, vl, t, sid, m, tid: self.cache.insert(
+                rt, q, v, vl, t, source_id=sid, mask=m, tenant_id=tid),
             donate_argnums=(0,))
         self._step_jit = jax.jit(
-            lambda rt, q, mv, mvl, t, sid, peek, valid: self.cache.step(
-                rt, q, mv, mvl, t, source_id=sid, peeked=peek, valid=valid),
+            lambda rt, q, mv, mvl, t, sid, peek, valid, tid: self.cache.step(
+                rt, q, mv, mvl, t, source_id=sid, peeked=peek, valid=valid,
+                tenant_id=tid),
             donate_argnums=(0,))
         self._refit_jit = jax.jit(
             lambda rt, t, k: self.cache.refit(rt, t, k),
@@ -155,6 +185,25 @@ class CachedEngine:
     def policy_state(self):
         return self.runtime.policy_state
 
+    def tenant_stats(self) -> dict:
+        """Device-side per-tenant accounting (TenancyState counters), keyed
+        by tenant name. Empty dict on a single-tenant engine."""
+        t = self.runtime.tenancy
+        if t is None:
+            return {}
+        part = self.cache.partition
+        return {
+            name: {
+                "lookups": int(t.lookups[i]),
+                "hits": int(t.hits[i]),
+                "misses": int(t.lookups[i]) - int(t.hits[i]),
+                "inserts": int(t.inserts[i]),
+                "evictions": int(t.evictions[i]),
+                "region_slots": part.sizes[i],
+            }
+            for i, name in enumerate(part.names)
+        }
+
     # ------------------------------------------------------------------ #
     def save_cache(self, path: str) -> None:
         """Persist the *entire* runtime (the Redis RDB-snapshot analogue):
@@ -162,12 +211,18 @@ class CachedEngine:
         resumes serving hits immediately, keeps its adapted threshold and
         pays no forced index rebuild."""
         from repro.training.checkpoint import save_checkpoint
+        part = self.cache.partition
         save_checkpoint(path, {"runtime": self.runtime},
                         metadata={"now": self._now,
                                   "dim": self.cache.config.dim,
                                   "capacity": self.cache.config.capacity,
                                   "index": type(self.cache.index).__name__,
-                                  "policy": type(self.cache.policy).__name__})
+                                  "policy": type(self.cache.policy).__name__,
+                                  # static partition map: restores must be
+                                  # built with the same tenant layout or the
+                                  # per-tenant ring pointers/regions disagree
+                                  "partition": None if part is None
+                                  else part.manifest()})
 
     def load_cache(self, path: str) -> None:
         import json
@@ -183,8 +238,18 @@ class CachedEngine:
         manifest = path + ".manifest.json"
         if os.path.exists(manifest):
             with open(manifest) as f:
-                self._now = float(
-                    json.load(f).get("metadata", {}).get("now", self._now))
+                meta = json.load(f).get("metadata", {})
+            self._now = float(meta.get("now", self._now))
+            # partition maps are static config: a snapshot taken under one
+            # tenant layout silently mis-regions under another, so verify
+            saved = meta.get("partition")
+            part = self.cache.partition
+            current = None if part is None else part.manifest()
+            if saved != current:
+                raise ValueError(
+                    f"snapshot partition map {saved} does not match this "
+                    f"engine's {current}; rebuild the engine with the "
+                    "registry the snapshot was taken under")
         # index state was checkpointed with the slab — no forced rebuild
         self._needs_refit = False
         self._inserts_since_rebuild = 0
@@ -202,10 +267,41 @@ class CachedEngine:
         """Advance the TTL clock (tests drive expiry deterministically)."""
         self._now += seconds
 
-    def warm(self, pairs) -> None:
-        """Cache population phase (paper §3.1): embed+insert the corpus."""
+    def _tenant_ids(self, batch) -> "jax.Array | None":
+        """(B,) int32 tenant ids for a (possibly padded) batch; None on a
+        single-tenant engine. Pad rows route as tenant 0 — harmless, since
+        the ``valid`` mask keeps them out of every counter and the slab."""
+        if self.registry is None:
+            return None
+        ids = []
+        for r in batch:
+            if r is PAD_REQUEST:
+                ids.append(0)
+            else:
+                try:
+                    ids.append(self._tenant_index[r.tenant])
+                except KeyError:
+                    raise KeyError(
+                        f"unknown tenant {r.tenant!r}; registered: "
+                        f"{tuple(self._tenant_index)}") from None
+        return jnp.asarray(ids, dtype=jnp.int32)
+
+    def warm(self, pairs, tenant: str | None = None) -> None:
+        """Cache population phase (paper §3.1): embed+insert the corpus.
+
+        On a multi-tenant engine the corpus lands in ``tenant``'s region
+        (default: the registry's first tenant) — warm each tenant
+        separately with its own corpus."""
         cfg = self.cache.config
         bs = 256
+        tid_value = None
+        if self.registry is not None:
+            name = tenant if tenant is not None else self.registry.names[0]
+            tid_value = self.registry.index(name)
+            # distinct-slot guarantee: one chunk must fit inside the region
+            bs = min(bs, self.cache.partition.sizes[tid_value])
+        elif tenant is not None:
+            raise ValueError("warm(tenant=...) needs a tenant registry")
         for i in range(0, len(pairs), bs):
             chunk = pairs[i:i + bs]
             emb = jnp.asarray(self.embedder.embed_batch(
@@ -213,10 +309,12 @@ class CachedEngine:
             toks, lens = self.tokenizer.encode_batch(
                 [p.answer for p in chunk], cfg.value_len)
             sid = jnp.asarray([p.qa_id for p in chunk], dtype=jnp.int32)
+            tid = None if tid_value is None else jnp.full(
+                (len(chunk),), tid_value, dtype=jnp.int32)
             self.runtime = self._insert_jit(
                 self.runtime, emb, jnp.asarray(toks),
                 jnp.asarray(lens), jnp.float32(self._now), sid,
-                jnp.ones((len(chunk),), dtype=bool))
+                jnp.ones((len(chunk),), dtype=bool), tid)
             self._inserts_since_rebuild += len(chunk)
 
     # ------------------------------------------------------------------ #
@@ -260,10 +358,22 @@ class CachedEngine:
         batch-amortized service times.
         """
         n_valid = len(batch)
+        if self.registry is not None and len(batch) > self.batcher.batch_size:
+            # the per-tenant ring guarantees distinct slots only while a
+            # batch's rows per tenant fit in the tenant's region, which the
+            # constructor proved for batches up to batch_size; an oversized
+            # admission batch (a mis-aligned SchedulerConfig.max_batch)
+            # could silently collide slots, so fail loudly instead
+            raise ValueError(
+                f"tenant-partitioned engine got a {len(batch)}-row batch "
+                f"but batch_size={self.batcher.batch_size}; align the "
+                "scheduler's max_batch with the engine batch size "
+                "(AsyncCacheServer's default config does)")
         if self.use_fused_step:
             batch, n_valid = self.batcher.pad(batch)
         cfg = self.cache.config
         n = len(batch)
+        tid = self._tenant_ids(batch)
         t0 = time.perf_counter()
         emb = jnp.asarray(self.embedder.embed_batch([r.query for r in batch]))
         now = jnp.float32(self._now)
@@ -276,7 +386,7 @@ class CachedEngine:
         if self.use_fused_step:
             # 1. pure peek: learn the miss set without committing any state
             #    (the only slab search this batch — step commits it, §7)
-            peek = self._peek_jit(self.runtime, emb, now)
+            peek = self._peek_jit(self.runtime, emb, now, tid)
             peek_hit = np.asarray(peek.hit)
             miss_idx = [i for i in range(n_valid) if not peek_hit[i]]
             cache_time = time.perf_counter() - t0
@@ -295,12 +405,14 @@ class CachedEngine:
             t1 = time.perf_counter()
             result, self.runtime = self._step_jit(
                 self.runtime, emb, jnp.asarray(miss_values),
-                jnp.asarray(miss_lens), now, sid, peek, jnp.asarray(valid))
+                jnp.asarray(miss_lens), now, sid, peek, jnp.asarray(valid),
+                tid)
             jax.block_until_ready(result.hit)  # count the commit in cache_time
             cache_time += time.perf_counter() - t1
             self._inserts_since_rebuild += len(miss_idx)
         else:
-            result, self.runtime = self._lookup_jit(self.runtime, emb, now)
+            result, self.runtime = self._lookup_jit(self.runtime, emb, now,
+                                                    tid)
             lookup_hit = np.asarray(result.hit)
             miss_idx = [i for i in range(n) if not lookup_hit[i]]
             cache_time = time.perf_counter() - t0
@@ -310,10 +422,11 @@ class CachedEngine:
                 memb = emb[jnp.asarray(miss_idx)]
                 sid = jnp.asarray([batch[i].source_id for i in miss_idx],
                                   dtype=jnp.int32)
+                mtid = None if tid is None else tid[jnp.asarray(miss_idx)]
                 self.runtime = self._insert_jit(
                     self.runtime, memb, jnp.asarray(toks),
                     jnp.asarray(lens), now, sid,
-                    jnp.ones((len(miss_idx),), dtype=bool))
+                    jnp.ones((len(miss_idx),), dtype=bool), mtid)
                 self._inserts_since_rebuild += len(miss_idx)
 
         hit = np.asarray(result.hit)
@@ -353,13 +466,17 @@ class CachedEngine:
                     for i in range(n_valid)],
             cache_time_s=cache_time, llm_time_s=llm_time,
             llm_cost=llm_cost, baseline_cost=per_cost * n_valid,
-            baseline_time=baseline_time)
+            baseline_time=baseline_time,
+            tenants=None if self.registry is None else
+            [batch[i].tenant for i in range(n_valid)])
 
         per_q_latency = (cache_time + llm_time) / max(n_valid, 1)
         if record_path_latency:
             for i in range(n_valid):
-                self.metrics.record_latency("hit" if hit[i] else "miss",
-                                            per_q_latency)
+                self.metrics.record_latency(
+                    "hit" if hit[i] else "miss", per_q_latency,
+                    tenant=None if self.registry is None
+                    else batch[i].tenant)
         return [Response(answer=answers[i], cached=bool(hit[i]),
                          score=float(scores[i]), latency_s=per_q_latency)
                 for i in range(n_valid)]

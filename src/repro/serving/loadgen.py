@@ -17,11 +17,19 @@ Three traffic shapes against any async ``submit(Request) -> Response``:
 questions + novel held-out queries) and can inject *duplicate bursts* —
 ``burst_size`` byte-identical copies of one query back to back — the
 thundering-herd pattern in-flight coalescing exists to absorb.
+
+``build_multi_tenant_workload`` (DESIGN.md §13.4) interleaves per-tenant
+request streams with Zipf-skewed tenant popularity. Every tenant's stream
+is drawn from its **own** ``random.Random`` seeded from ``(seed, tenant)``
+— stable hashing, not Python's salted ``hash()`` — so adding or removing a
+tenant never perturbs another tenant's request sequence: A/B runs that
+differ only in the tenant set stay comparable per tenant.
 """
 from __future__ import annotations
 
 import asyncio
 import dataclasses
+import hashlib
 import random
 import time
 from typing import Awaitable, Callable, Sequence
@@ -30,6 +38,26 @@ from repro.data.qa_dataset import QAPair, build_test_queries
 from repro.serving.engine import Request, Response
 
 Submit = Callable[[Request], Awaitable[Response]]
+
+
+def tenant_rng(seed: int, tenant: str) -> random.Random:
+    """A ``random.Random`` stream owned by ``(seed, tenant)``.
+
+    The derivation is a stable SHA-256 of both, NOT ``hash()`` (which is
+    salted per process): the same (seed, tenant) yields the same stream in
+    every run, on every host, regardless of which other tenants exist.
+    """
+    digest = hashlib.sha256(f"{seed}\x1f{tenant}".encode()).digest()
+    return random.Random(int.from_bytes(digest[:8], "big"))
+
+
+def zipf_weights(n: int, skew: float = 1.0) -> list[float]:
+    """Normalized Zipf popularity: weight of rank-i tenant ∝ 1/(i+1)^skew.
+    ``skew=0`` is uniform; larger = one tenant dominates (the noisy-
+    neighbour regime the DRR admission exists for)."""
+    raw = [1.0 / (i + 1) ** skew for i in range(n)]
+    total = sum(raw)
+    return [w / total for w in raw]
 
 
 @dataclasses.dataclass
@@ -69,6 +97,56 @@ def build_workload(pairs: Sequence[QAPair], n_requests: int, *,
                       source_id=q.source_id, semantic_key=q.semantic_key)
         for _ in range(min(copies, n_requests - len(out))):
             out.append(req)
+    return out
+
+
+def build_multi_tenant_workload(
+        pairs: Sequence[QAPair], n_requests: int, *,
+        tenants: Sequence[str], skew: float = 1.0,
+        paraphrase_ratio: float = 0.75,
+        burst_prob: float = 0.0, burst_size: int = 4,
+        seed: int = 1) -> list[Request]:
+    """Zipf-skewed multi-tenant request stream (DESIGN.md §13.4).
+
+    Tenant popularity follows ``zipf_weights(len(tenants), skew)`` in the
+    order given (first tenant = heaviest). Each tenant draws its own
+    paper-mixture stream — paraphrase choices, burst rolls and query
+    sequence all come from ``tenant_rng(seed, tenant)`` — and a separate
+    interleaving stream picks which tenant emits next. Consequences:
+
+      * tenant T's request *sequence* is a pure function of
+        (seed, T, n_requests): adding tenant C to an {A, B} run leaves A's
+        and B's sequences byte-identical (only the interleaving changes);
+      * duplicate bursts stay within one tenant — cross-tenant duplicates
+        are never coalescable anyway (the key is (tenant, query)).
+    """
+    if not tenants:
+        raise ValueError("need at least one tenant")
+    weights = zipf_weights(len(tenants), skew)
+    pick = random.Random(seed)               # interleaving stream only
+    streams = {}
+    for t in tenants:
+        rng = tenant_rng(seed, t)
+        base = build_test_queries(
+            list(pairs),
+            n_per_category=max(1, n_requests // 4 + burst_size),
+            paraphrase_ratio=paraphrase_ratio,
+            seed=rng.randrange(2 ** 31))
+        streams[t] = {"rng": rng, "base": base, "i": 0, "carry": []}
+    out: list[Request] = []
+    while len(out) < n_requests:
+        (t,) = pick.choices(tenants, weights=weights)
+        s = streams[t]
+        if not s["carry"]:
+            q = s["base"][s["i"] % len(s["base"])]
+            s["i"] += 1
+            copies = burst_size if (burst_prob > 0.0 and
+                                    s["rng"].random() < burst_prob) else 1
+            req = Request(query=q.query, category=q.category,
+                          source_id=q.source_id,
+                          semantic_key=q.semantic_key, tenant=t)
+            s["carry"] = [req] * copies
+        out.append(s["carry"].pop())
     return out
 
 

@@ -11,6 +11,12 @@ a ``coalesced_calls`` counter — requests that attached to an in-flight
 duplicate instead of paying their own lookup/backend call. The paper-table
 rows of ``summary()`` are unchanged; the new quantities ride along under
 new keys.
+
+Multi-tenant serving (DESIGN.md §13) adds a per-tenant breakdown under the
+same contract: ``record_batch(..., tenants=...)`` and
+``record_latency(..., tenant=...)`` accumulate per-tenant hit/miss counts,
+coalesced counts and per-tenant latency percentiles, surfaced under
+``summary()["tenants"]`` without touching any existing row.
 """
 from __future__ import annotations
 
@@ -59,9 +65,27 @@ class CategoryMetrics:
 
 
 @dataclasses.dataclass
+class TenantMetrics:
+    """Host-side per-tenant accounting (mirrors the device-side
+    ``TenancyState`` counters, plus latency samples only the host sees)."""
+
+    lookups: int = 0
+    hits: int = 0
+    coalesced: int = 0
+    latency_samples: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(list))   # path -> [seconds]
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+@dataclasses.dataclass
 class ServingMetrics:
     per_category: dict = dataclasses.field(
         default_factory=lambda: defaultdict(CategoryMetrics))
+    per_tenant: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(TenantMetrics))
     total_cost_usd: float = 0.0
     baseline_cost_usd: float = 0.0          # what 100% API calls would cost
     cache_path_time_s: float = 0.0          # embed + lookup wall time
@@ -73,20 +97,27 @@ class ServingMetrics:
     latency_samples: dict = dataclasses.field(
         default_factory=lambda: defaultdict(list))   # path -> [seconds]
 
-    def record_latency(self, path: str, seconds: float) -> None:
-        """One request's end-to-end latency on ``path`` (hit/miss/coalesced)."""
+    def record_latency(self, path: str, seconds: float,
+                       tenant: str | None = None) -> None:
+        """One request's end-to-end latency on ``path`` (hit/miss/coalesced).
+        ``tenant`` additionally files the sample under that tenant's
+        breakdown (multi-tenant serving, §13)."""
         self.latency_samples[path].append(seconds)
+        if tenant is not None:
+            self.per_tenant[tenant].latency_samples[path].append(seconds)
 
-    def record_coalesced(self, n: int = 1) -> None:
+    def record_coalesced(self, n: int = 1, tenant: str | None = None) -> None:
         """Count requests merged into an in-flight duplicate. Their
         end-to-end latency is recorded separately (at resolution time)
         via ``record_latency("coalesced", ...)``."""
         self.coalesced_calls += n
+        if tenant is not None:
+            self.per_tenant[tenant].coalesced += n
 
     def record_batch(self, categories, hits, positives, *, judged,
                      cache_time_s: float, llm_time_s: float,
                      llm_cost: float, baseline_cost: float,
-                     baseline_time: float) -> None:
+                     baseline_time: float, tenants=None) -> None:
         for i, cat in enumerate(categories):
             m = self.per_category[cat]
             m.lookups += 1
@@ -98,6 +129,10 @@ class ServingMetrics:
                         m.positive_hits += 1
             m.cache_latency_s += cache_time_s / max(len(categories), 1)
             m.llm_latency_s += llm_time_s / max(len(categories), 1)
+            if tenants is not None:
+                t = self.per_tenant[tenants[i]]
+                t.lookups += 1
+                t.hits += int(bool(hits[i]))
         self.total_cost_usd += llm_cost
         self.baseline_cost_usd += baseline_cost
         self.cache_path_time_s += cache_time_s
@@ -120,8 +155,20 @@ class ServingMetrics:
         avg_with = ((self.cache_path_time_s + self.llm_path_time_s)
                     / max(self.queries, 1))
         avg_without = self.baseline_time_s / max(self.queries, 1)
+        tenants = {}
+        for name, t in sorted(self.per_tenant.items()):
+            tenants[name] = {
+                "lookups": t.lookups,
+                "cache_hits": t.hits,
+                "hit_rate": round(t.hit_rate, 4),
+                "coalesced_calls": t.coalesced,
+                "latency_percentiles": {
+                    path: percentiles(xs)
+                    for path, xs in sorted(t.latency_samples.items())},
+            }
         return {
             "categories": cats,
+            "tenants": tenants,
             "queries": self.queries,
             "total_cost_usd": round(self.total_cost_usd, 4),
             "baseline_cost_usd": round(self.baseline_cost_usd, 4),

@@ -17,11 +17,24 @@ closes the window the paper leaves open between "first miss starts
 generating" and "response is inserted", during which every duplicate would
 also miss.
 
-Invariants (tested in ``tests/test_scheduler.py``):
-  * admission order is FIFO — a flush always takes the oldest entries,
-    hence the oldest deadlines;
-  * a full queue never deadlocks submitters: it forces an immediate
-    oldest-deadline flush (backpressure, §12.2);
+**Multi-tenant admission** (DESIGN.md §13.3): requests queue per tenant
+and micro-batches are formed by *deficit round robin* over the backlogged
+tenants — each rotation credits a tenant its (weight-proportional) quantum
+and takes that many of its oldest requests — so a bursty tenant can fill
+idle slots but can never starve the others out of a contended batch.
+Backpressure is also per tenant: a tenant at its own queue bound blocks
+(and forces a flush) without consuming other tenants' admission capacity.
+With one tenant all of this degenerates to the original FIFO queue.
+
+Invariants (tested in ``tests/test_scheduler.py`` / ``test_tenancy.py``):
+  * admission order is FIFO within a tenant — a flush takes each tenant's
+    oldest entries, and the flush trigger is the globally oldest deadline;
+  * under contention a tenant's share of a micro-batch is proportional to
+    its DRR weight, regardless of how deep its backlog is;
+  * a full queue (global or per-tenant) never deadlocks submitters: it
+    forces an immediate flush (backpressure, §12.2);
+  * coalescing never crosses tenants: the dedup key is (tenant, query),
+    so identical queries from different tenants each pay their own way;
   * at most one ``serve_batch`` runs at a time (single-worker executor —
     the engine's runtime is owned linearly), while the event loop stays
     free to accept and coalesce new arrivals;
@@ -39,26 +52,48 @@ from concurrent.futures import ThreadPoolExecutor
 from repro.serving.engine import CachedEngine, Request, Response
 
 
+def normalize_query(text: str) -> str:
+    """Whitespace/case-insensitive canonical form for coalescing: strip,
+    casefold, collapse internal whitespace. Trivially-different duplicates
+    ("How do I…", "  how do i …") now share one in-flight leader — the
+    first step toward the ROADMAP's embedding-similarity coalescing."""
+    return " ".join(text.split()).casefold()
+
+
 def coalesce_key(request: Request) -> str:
-    """Semantic identity for in-flight dedup: exact query text (the
-    embedding-similarity upgrade is named in ROADMAP open items)."""
-    return request.query
+    """Semantic identity for in-flight dedup: (tenant, normalized query).
+
+    The tenant prefix makes cross-tenant coalescing structurally impossible
+    — two tenants asking the same question must not share an answer object,
+    let alone a cache decision (§13.3). The embedding-similarity upgrade is
+    named in ROADMAP open items."""
+    return f"{request.tenant}\x1f{normalize_query(request.query)}"
 
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
-    """Admission-control knobs (DESIGN.md §12.2)."""
+    """Admission-control knobs (DESIGN.md §12.2, §13.3)."""
 
     max_batch: int = 32        # flush when this many requests are queued ...
     max_wait_ms: float = 5.0   # ... or when the oldest one has waited this long
-    max_queue: int = 1024      # bounded queue; full -> immediate flush
+    max_queue: int = 1024      # bounded total backlog; full -> immediate flush
     coalesce: bool = True      # in-flight duplicate merging (§12.3)
+    max_queue_per_tenant: int | None = None  # per-tenant backlog bound
+                                             # (None -> max_queue)
+    tenant_weights: dict | None = None       # DRR quanta by tenant name;
+                                             # unlisted tenants weigh 1.0
 
     def __post_init__(self):
         if self.max_batch <= 0 or self.max_queue <= 0:
             raise ValueError("max_batch and max_queue must be positive")
         if self.max_wait_ms < 0:
             raise ValueError("max_wait_ms must be >= 0")
+        if self.max_queue_per_tenant is not None \
+                and self.max_queue_per_tenant <= 0:
+            raise ValueError("max_queue_per_tenant must be positive")
+        if self.tenant_weights and \
+                any(w <= 0 for w in self.tenant_weights.values()):
+            raise ValueError("tenant weights must be positive")
 
 
 class _Entry:
@@ -92,7 +127,12 @@ class AsyncScheduler:
                  config: SchedulerConfig | None = None):
         self.engine = engine
         self.config = config or SchedulerConfig()
-        self._queue: deque[_Entry] = deque()
+        # per-tenant FIFO queues + deficit-round-robin state (§13.3); a
+        # single-tenant workload uses exactly one queue = the old FIFO
+        self._queues: dict[str, deque[_Entry]] = {}
+        self._rr: deque[str] = deque()     # backlogged tenants, rotation order
+        self._deficit: dict[str, float] = {}
+        self._qlen = 0                     # total backlog across tenants
         # key -> list of (waiter future, arrival time); present from leader
         # enqueue until its response is delivered (covers queued AND
         # dispatched-to-backend windows — that is the "in-flight" part)
@@ -104,6 +144,19 @@ class AsyncScheduler:
         self._stopping = False
         self._running = False
         self.batches_served = 0
+
+    def _weight(self, tenant: str) -> float:
+        w = self.config.tenant_weights
+        return w.get(tenant, 1.0) if w else 1.0
+
+    def _tenant_of(self, request: Request) -> str | None:
+        """Tenant tag for metrics — only when the engine actually runs a
+        registry (a bare 'default' on a single-tenant engine is noise)."""
+        return request.tenant if getattr(self.engine, "registry", None) \
+            is not None else None
+
+    def _oldest_arrival(self) -> float:
+        return min(q[0].arrival for q in self._queues.values() if q)
 
     # -- lifecycle ------------------------------------------------------- #
     async def start(self) -> None:
@@ -140,10 +193,12 @@ class AsyncScheduler:
     async def submit(self, request: Request) -> Response:
         """Enqueue one request and await its response.
 
-        Duplicates of an in-flight key attach as waiters (no queue slot, no
-        extra backend call); otherwise the request becomes that key's
-        leader. A full queue blocks the submitter and forces an immediate
-        flush of the oldest entries until a slot frees up.
+        Duplicates of an in-flight (tenant, query) key attach as waiters
+        (no queue slot, no extra backend call); otherwise the request
+        becomes that key's leader in its tenant's queue. A full queue —
+        the tenant's own bound or the global one — blocks the submitter
+        and forces an immediate flush until a slot frees up; other
+        tenants' submitters are unaffected by a neighbour's full queue.
         """
         if not self._running or self._stopping:
             raise RuntimeError("scheduler is not running")
@@ -151,6 +206,8 @@ class AsyncScheduler:
         fut: asyncio.Future = loop.create_future()
         arrival = time.perf_counter()
         key = coalesce_key(request)
+        tenant = request.tenant
+        cap_tenant = self.config.max_queue_per_tenant or self.config.max_queue
         async with self._cond:
             # re-check under the lock: stop() may have begun draining
             # between the fast-path check above and lock acquisition, and
@@ -159,17 +216,23 @@ class AsyncScheduler:
                 raise RuntimeError("scheduler is not running")
             if self.config.coalesce and key in self._pending:
                 self._pending[key].append((fut, arrival))
-                self.engine.metrics.record_coalesced(1)
+                self.engine.metrics.record_coalesced(
+                    1, tenant=self._tenant_of(request))
             else:
-                while len(self._queue) >= self.config.max_queue:
-                    # backpressure (§12.2): demand an immediate oldest-
-                    # deadline flush and wait for a freed slot
+                queue = self._queues.setdefault(tenant, deque())
+                while (self._qlen >= self.config.max_queue
+                       or len(queue) >= cap_tenant):
+                    # backpressure (§12.2): demand an immediate flush and
+                    # wait for a freed slot in *this* tenant's budget
                     self._force_flush = True
                     self._cond.notify_all()
                     await self._cond.wait()
                     if self._stopping:
                         raise RuntimeError("scheduler stopped while queued")
-                self._queue.append(_Entry(request, fut, arrival))
+                queue.append(_Entry(request, fut, arrival))
+                self._qlen += 1
+                if tenant not in self._rr:
+                    self._rr.append(tenant)
                 if self.config.coalesce:
                     self._pending.setdefault(key, [])
                 self._cond.notify_all()
@@ -185,20 +248,48 @@ class AsyncScheduler:
                 return
             await self._serve(entries)
 
+    def _form_batch(self) -> list[_Entry]:
+        """Deficit-round-robin batch formation over backlogged tenants
+        (§13.3). Each rotation credits the tenant its weight as quantum and
+        takes that many of its oldest entries (FIFO within tenant). The
+        deficit persists across batches while a tenant stays backlogged —
+        that is what makes long-run shares weight-proportional — and resets
+        when its queue drains (classic DRR, Shreedhar & Varghese 1996)."""
+        out: list[_Entry] = []
+        while len(out) < self.config.max_batch and self._qlen > 0:
+            tenant = self._rr.popleft()
+            queue = self._queues[tenant]
+            if not queue:
+                self._deficit[tenant] = 0.0
+                continue              # drained earlier: drop from rotation
+            self._deficit[tenant] = self._deficit.get(tenant, 0.0) \
+                + self._weight(tenant)
+            take = min(len(queue), int(self._deficit[tenant]),
+                       self.config.max_batch - len(out))
+            for _ in range(take):
+                out.append(queue.popleft())
+            self._qlen -= take
+            self._deficit[tenant] -= take
+            if queue:
+                self._rr.append(tenant)   # still backlogged: keep rotating
+            else:
+                self._deficit[tenant] = 0.0
+        return out
+
     async def _admit(self) -> list[_Entry] | None:
-        """Block until a flush condition holds, then take the oldest
-        ``<= max_batch`` entries (FIFO — oldest deadlines first)."""
+        """Block until a flush condition holds, then form one micro-batch.
+        The flush trigger watches the *globally* oldest arrival, so no
+        tenant's deadline is hostage to another tenant's traffic."""
         async with self._cond:
             while True:
-                if self._queue:
+                if self._qlen > 0:
                     age_ms = (time.perf_counter()
-                              - self._queue[0].arrival) * 1000.0
-                    if (len(self._queue) >= self.config.max_batch
+                              - self._oldest_arrival()) * 1000.0
+                    if (self._qlen >= self.config.max_batch
                             or age_ms >= self.config.max_wait_ms
                             or self._force_flush or self._stopping):
                         self._force_flush = False
-                        k = min(len(self._queue), self.config.max_batch)
-                        entries = [self._queue.popleft() for _ in range(k)]
+                        entries = self._form_batch()
                         self._cond.notify_all()   # wake blocked submitters
                         return entries
                     timeout = self.config.max_wait_ms / 1000.0 - age_ms / 1000.0
@@ -234,19 +325,22 @@ class AsyncScheduler:
         done = time.perf_counter()
         async with self._cond:
             for e, r in zip(entries, responses):
+                tenant = self._tenant_of(e.request)
                 # end-to-end latency: queue wait + service (the sync path's
                 # samples are service-only; these are what a client sees)
                 self.engine.metrics.record_latency(
-                    "hit" if r.cached else "miss", done - e.arrival)
+                    "hit" if r.cached else "miss", done - e.arrival,
+                    tenant=tenant)
                 if not e.future.done():
                     e.future.set_result(
                         dataclasses.replace(r, latency_s=done - e.arrival))
                 # waiters inherit the leader's answer/decision; they paid
-                # no lookup and no backend call
+                # no lookup and no backend call (and shared the leader's
+                # tenant — the coalesce key guarantees it)
                 for fut, w_arrival in self._pending.pop(
                         coalesce_key(e.request), []):
                     self.engine.metrics.record_latency(
-                        "coalesced", done - w_arrival)
+                        "coalesced", done - w_arrival, tenant=tenant)
                     if not fut.done():
                         fut.set_result(dataclasses.replace(
                             r, coalesced=True, latency_s=done - w_arrival))

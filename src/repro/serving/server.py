@@ -14,9 +14,13 @@ behind two entry points:
 The wire format keeps to the engine's ``Request``/``Response`` fields::
 
     > {"id": 7, "query": "how do i sort a list in python",
-       "category": "python_basics"}
+       "category": "python_basics", "tenant": "acme"}
     < {"id": 7, "answer": ..., "cached": true, "score": 0.93,
        "latency_s": 0.004, "coalesced": false}
+
+``tenant`` (optional, default "default") selects the isolation domain on a
+multi-tenant engine (DESIGN.md §13): lookups/inserts stay inside that
+tenant's slab region and coalescing never crosses tenants.
 
 Responses may arrive out of request order (coalesced waiters resolve with
 their leader's batch), so pipelined clients should send an ``id`` — it is
@@ -67,10 +71,11 @@ class AsyncCacheServer:
 
     # -- in-process API --------------------------------------------------- #
     async def submit(self, query: str, *, category: str = "default",
-                     source_id: int = -1, semantic_key: str = "") -> Response:
+                     source_id: int = -1, semantic_key: str = "",
+                     tenant: str = "default") -> Response:
         return await self.scheduler.submit(Request(
             query=query, category=category, source_id=source_id,
-            semantic_key=semantic_key))
+            semantic_key=semantic_key, tenant=tenant))
 
     async def submit_request(self, request: Request) -> Response:
         return await self.scheduler.submit(request)
@@ -94,7 +99,8 @@ class AsyncCacheServer:
                     obj["query"],
                     category=obj.get("category", "default"),
                     source_id=int(obj.get("source_id", -1)),
-                    semantic_key=obj.get("semantic_key", ""))
+                    semantic_key=obj.get("semantic_key", ""),
+                    tenant=obj.get("tenant", "default"))
                 payload = {"answer": resp.answer, "cached": resp.cached,
                            "score": resp.score, "latency_s": resp.latency_s,
                            "coalesced": resp.coalesced}

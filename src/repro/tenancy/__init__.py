@@ -1,0 +1,14 @@
+"""Multi-tenant cache namespaces (DESIGN.md §13).
+
+One device-resident semantic cache, many isolation domains: the registry
+describes tenants (capacity shares, DRR admission weights, optional
+threshold overrides), the partition map splits the slab into contiguous
+per-tenant regions baked into the compiled step, and ``TenancyState``
+carries per-tenant ring pointers + accounting inside the ``CacheRuntime``
+pytree.
+"""
+from repro.tenancy.partition import PartitionMap, TenancyState
+from repro.tenancy.registry import NO_OVERRIDE, TenantRegistry, TenantSpec
+
+__all__ = ["PartitionMap", "TenancyState", "TenantRegistry", "TenantSpec",
+           "NO_OVERRIDE"]

@@ -1,0 +1,134 @@
+"""Static slab partition map + device-side tenancy state (DESIGN.md §13.2).
+
+``PartitionMap`` is the *static* half of tenancy: a frozen, hashable record
+of which contiguous slab region each tenant owns and which (if any)
+similarity threshold overrides the cache-wide policy for it. It is baked
+into ``SemanticCache`` like the index/policy plugins: trace-time constants,
+so one compiled ``step()`` serves every tenant mix — the per-row
+``tenant_id`` vector is the only traced tenancy input.
+
+``TenancyState`` is the *dynamic* half: per-tenant ring pointers and
+accounting counters, carried as one more leaf group of the ``CacheRuntime``
+pytree so it jits, donates, and checkpoints with the slab.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionMap:
+    """Contiguous per-tenant slab regions. Tenant ``t`` owns slots
+    ``[starts[t], starts[t] + sizes[t])``; regions are disjoint and cover
+    the slab exactly (enforced by the registry that builds the map).
+
+    ``thresholds[t] < 0`` means "no override" (use the policy's decision).
+    """
+
+    names: tuple[str, ...]
+    starts: tuple[int, ...]
+    sizes: tuple[int, ...]
+    thresholds: tuple[float, ...]
+    capacity: int
+
+    def __post_init__(self):
+        if not (len(self.names) == len(self.starts) == len(self.sizes)
+                == len(self.thresholds)):
+            raise ValueError("partition field lengths disagree")
+        if sum(self.sizes) != self.capacity:
+            raise ValueError(f"regions sum to {sum(self.sizes)}, "
+                             f"capacity is {self.capacity}")
+        acc = 0
+        for s, z in zip(self.starts, self.sizes):
+            if s != acc or z < 1:
+                raise ValueError("regions must be contiguous, in order and "
+                                 "non-empty")
+            acc += z
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def index(self, name: str) -> int:
+        try:
+            return self.names.index(name)
+        except ValueError:
+            raise KeyError(f"unknown tenant {name!r}; registered: "
+                           f"{self.names}") from None
+
+    def region(self, name: str) -> tuple[int, int]:
+        i = self.index(name)
+        return self.starts[i], self.sizes[i]
+
+    def manifest(self) -> dict:
+        """JSON-able layout record — the single definition used both when
+        writing a checkpoint manifest and when verifying one on restore."""
+        return {"names": list(self.names), "starts": list(self.starts),
+                "sizes": list(self.sizes),
+                "thresholds": list(self.thresholds)}
+
+    # -- trace-time constant arrays -------------------------------------- #
+    def slot_owner(self) -> np.ndarray:
+        """(capacity,) int32: owning tenant of every slab slot."""
+        return _slot_owner(self.starts, self.sizes, self.capacity)
+
+    def starts_array(self) -> Array:
+        return jnp.asarray(self.starts, dtype=jnp.int32)
+
+    def sizes_array(self) -> Array:
+        return jnp.asarray(self.sizes, dtype=jnp.int32)
+
+    def thresholds_array(self) -> Array:
+        """(T,) float32; negative entries mean "no override"."""
+        return jnp.asarray(self.thresholds, dtype=jnp.float32)
+
+
+@functools.lru_cache(maxsize=64)
+def _slot_owner(starts: tuple[int, ...], sizes: tuple[int, ...],
+                capacity: int) -> np.ndarray:
+    owner = np.empty((capacity,), dtype=np.int32)
+    for t, (s, z) in enumerate(zip(starts, sizes)):
+        owner[s:s + z] = t
+    return owner
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TenancyState:
+    """Per-tenant mutable state, one ``CacheRuntime`` leaf group.
+
+    Leaves (all leading dim = number of tenants):
+      ptr       — ring insert pointer, an offset *within* the tenant's
+                  region (the global scalar ``CacheState.ptr`` is unused
+                  under tenancy);
+      lookups   — committed lookups per tenant;
+      hits      — committed hits per tenant;
+      inserts   — rows written per tenant;
+      evictions — inserts that overwrote a live (non-expired) entry, i.e.
+                  intra-region capacity pressure. A tenant can only ever
+                  evict itself — cross-tenant eviction is structurally
+                  impossible with disjoint regions.
+    """
+
+    ptr: Array
+    lookups: Array
+    hits: Array
+    inserts: Array
+    evictions: Array
+
+    @staticmethod
+    def zeros(num_tenants: int) -> "TenancyState":
+        def z():
+            return jnp.zeros((num_tenants,), dtype=jnp.int32)
+        return TenancyState(ptr=z(), lookups=z(), hits=z(), inserts=z(),
+                            evictions=z())
+
+    @property
+    def num_tenants(self) -> int:
+        return self.ptr.shape[0]
