@@ -55,6 +55,53 @@ def cosine_topk_scaling():
     return rows, {}
 
 
+def masked_lookup_scaling():
+    """Per-row-masked (tenancy) lookup: interval operands vs a dense (B, N)
+    mask (DESIGN.md §14).
+
+    On TPU the interval kernel builds the visibility mask from iota in VMEM,
+    so per-row masking adds exactly 8 bytes/row of operand traffic (start +
+    size, int32) — O(B), independent of slab size — where a dense bool mask
+    adds B*N bytes of HBM traffic on the lookup's memory-bound axis. This
+    CPU host times the two jnp oracles (same contract as the kernels) and
+    reports the operand-bytes ratio the kernel avoids.
+    """
+    rows = []
+    d, b, k, tenants = 384, 32, 4, 8
+    f_dense = jax.jit(lambda q, kk, m: ref.cosine_topk_ref(q, kk, m, k))
+    f_intv = jax.jit(lambda q, kk, v, st, sz: ref.cosine_topk_interval_ref(
+        q, kk, v, st, sz, k))
+    for n in (32768, 131072, 524288):
+        rng = jax.random.PRNGKey(n)
+        kq, kk_, kt = jax.random.split(rng, 3)
+        q = jax.random.normal(kq, (b, d))
+        q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+        keys = jax.random.normal(kk_, (n, d))
+        keys = keys / jnp.linalg.norm(keys, axis=1, keepdims=True)
+        valid = jnp.ones((n,), bool)
+        # uniform tenant partition: contiguous equal regions, random mix
+        region = n // tenants
+        tid = jax.random.randint(kt, (b,), 0, tenants, dtype=jnp.int32)
+        starts, sizes = tid * region, jnp.full((b,), region, jnp.int32)
+        dense = (jnp.arange(n, dtype=jnp.int32)[None, :] >= starts[:, None]) \
+            & (jnp.arange(n, dtype=jnp.int32)[None, :]
+               < (starts + sizes)[:, None])
+        t_dense = _time(f_dense, q, keys, dense)
+        t_intv = _time(f_intv, q, keys, valid, starts, sizes)
+        mask_bytes = b * n            # (B, N) bool materialized in HBM
+        intv_bytes = 2 * b * 4       # (B,) start + (B,) size, int32
+        rows.append({
+            "name": f"kernel/masked_lookup_n{n}",
+            "us_per_call": t_intv * 1e6,
+            "derived": (f"cpu_interval_us={t_intv*1e6:.0f} "
+                        f"cpu_dense_mask_us={t_dense*1e6:.0f} "
+                        f"mask_operand_bytes={mask_bytes} "
+                        f"interval_operand_bytes={intv_bytes} "
+                        f"hbm_traffic_saved={mask_bytes/intv_bytes:.0f}x"),
+        })
+    return rows, {}
+
+
 def hnsw_vs_exact():
     """Paper-faithful HNSW vs the TPU-native exact scoring (DESIGN.md §3)."""
     import numpy as np

@@ -55,6 +55,7 @@ def main() -> None:
         ("sec2.7", paper_tables.ttl_behaviour),
         ("tenancy", lambda: paper_tables.tenant_table(full=full)),
         ("kernel", kernel_bench.cosine_topk_scaling),
+        ("kernel-masked", kernel_bench.masked_lookup_scaling),
         ("design3", kernel_bench.hnsw_vs_exact),
         ("beyond", kernel_bench.ivf_bench),
         ("beyond-fused", kernel_bench.fused_step_bench),

@@ -106,13 +106,16 @@ class SemanticCache:
                              "a per-row tenant_id vector")
         return jnp.asarray(tenant_id, dtype=jnp.int32)
 
-    def _tenant_alive(self, alive: Array, tenant_id: Array) -> Array:
-        """(N,) aliveness -> (B, N) per-row visibility: a row sees only the
-        live slots of its own region (structural isolation — a cosine-1.0
-        duplicate in another tenant's region is invisible, not just
-        sub-threshold)."""
-        owner = jnp.asarray(self.partition.slot_owner())        # (N,) const
-        return alive[None, :] & (owner[None, :] == tenant_id[:, None])
+    def _tenant_interval(self, tenant_id: Array) -> tuple[Array, Array]:
+        """(B,) tenant ids -> per-row ``(starts, sizes)`` interval operands:
+        a row sees only its own region's slots (structural isolation — a
+        cosine-1.0 duplicate in another tenant's region is invisible, not
+        just sub-threshold). Regions are contiguous by construction
+        (PartitionMap), so per-row visibility is O(B) interval operands —
+        the index keeps the fused Pallas path on TPU (§14) instead of
+        materializing a (B, N) mask."""
+        return (self.partition.starts_array()[tenant_id],
+                self.partition.sizes_array()[tenant_id])
 
     def _apply_threshold_overrides(self, hit: Array, score: Array,
                                    tenant_id: Array) -> Array:
@@ -137,24 +140,25 @@ class SemanticCache:
         engine uses it to learn the miss set before the fused ``step``.
 
         On a partitioned cache each row searches only its own tenant's
-        region (``tenant_id`` masks the aliveness per row, §13.2)."""
+        region, passed to the index as per-row ``(start, size)`` interval
+        operands (§13.2, §14) so the TPU path stays on the fused
+        interval-masked kernel — no (B, N) mask is ever materialized."""
         tenant_id = self._require_tenants(tenant_id)
         state, stats = runtime.state, runtime.stats
         b = queries.shape[0]
         now = jnp.asarray(now, dtype=jnp.float32)
         alive = store.alive_mask(state, now)
+        interval = None
         if tenant_id is not None:
-            alive = self._tenant_alive(alive, tenant_id)        # (B, N)
+            interval = self._tenant_interval(tenant_id)         # O(B) operands
 
         top_s, top_i = self.index.search(
-            runtime.index_state, queries, state.keys, alive)
+            runtime.index_state, queries, state.keys, alive, interval=interval)
 
-        best_score = top_s[:, 0]
         best_idx = jnp.maximum(top_i[:, 0], 0)  # -1 guard when cache empty
-        row_alive = jnp.any(alive, axis=-1) if alive.ndim == 2 \
-            else jnp.any(alive)
-        best_score = jnp.where(row_alive & (top_i[:, 0] >= 0),
-                               best_score, -jnp.inf)
+        # every search path returns index -1 with score -inf for rows with
+        # no visible live slot (empty cache, empty tenant region, padding)
+        best_score = jnp.where(top_i[:, 0] >= 0, top_s[:, 0], -jnp.inf)
 
         hit, pstate = self.policy.decide(best_score, runtime.policy_state)
         if tenant_id is not None:

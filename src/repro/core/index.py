@@ -28,7 +28,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.similarity import cosine_scores, masked_topk, l2_normalize, NEG_INF
+from repro.core.similarity import (NEG_INF, cosine_scores,
+                                   interval_visibility, l2_normalize,
+                                   masked_topk)
 from repro.core.types import CacheConfig
 
 Array = jax.Array
@@ -52,25 +54,43 @@ class ExactIndex:
         return ExactState()
 
     def search(self, istate: ExactState, queries: Array, keys: Array,
-               alive: Array) -> tuple[Array, Array]:
+               alive: Array, *, interval: tuple[Array, Array] | None = None
+               ) -> tuple[Array, Array]:
         """(B,d) x (N,d) -> (scores (B,k), indices (B,k)).
 
         ``alive`` is (N,) — one visibility mask for the whole batch — or
-        (B, N) for per-row visibility (the tenancy path masks each query to
-        its own slab region). The Pallas kernel takes the shared-mask fast
-        path only; per-row masks score on the jnp path (a per-row-masked
-        kernel is a follow-up)."""
+        (B, N) for general per-row visibility. ``interval`` = per-row
+        ``(starts, sizes)`` operands restricting each row to a contiguous
+        slot range on top of a shared (N,) ``alive`` — the tenancy path
+        (contiguous PartitionMap regions, DESIGN.md §14): on TPU it stays
+        on the fused interval-masked Pallas kernel with O(B) operand
+        traffic; a (B, N) ``alive`` routes to the dense blocked-mask
+        kernel. Rows with no visible live slot return exactly (-inf, -1).
+        """
         del istate
         backend = self.backend
         if backend == "auto":
             backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
         queries = l2_normalize(queries)  # keys are normalized at insert time
-        if backend == "pallas" and alive.ndim == 1:
+        if interval is not None and alive.ndim == 2:
+            # interval on top of an already-per-row mask: fold it in so the
+            # restriction is never dropped (IVF composes the same way)
+            alive = interval_visibility(alive, *interval)
+            interval = None
+        if backend == "pallas":
             from repro.kernels import ops  # deferred: kernels are optional deps
 
+            if interval is not None:
+                starts, sizes = interval
+                return ops.cosine_topk_interval(queries, keys, alive,
+                                                starts, sizes, k=self.topk)
             return ops.cosine_topk(queries, keys, alive, k=self.topk)
+        if interval is not None:
+            alive = interval_visibility(alive, *interval)
         scores = cosine_scores(queries, keys, alive)
         vals, idx = masked_topk(scores, self.topk)
+        # all-masked rows: same (-inf, -1) contract as the Pallas kernels
+        idx = jnp.where(vals > NEG_INF, idx, -1)
         return vals, idx.astype(jnp.int32)
 
     def absorb(self, istate: ExactState, slots: Array, keys: Array,
@@ -128,6 +148,8 @@ class IVFIndex:
         of TPU-friendliness, and the analogue of HNSW's bounded degree M.
         """
         del istate  # full rebuild from the slab; prior state irrelevant
+        if keys.dtype == jnp.int8:
+            keys = keys.astype(jnp.float32) / 127.0  # uniform slab dequant
         valid = alive
         n, d = keys.shape
         c = self.ncentroids
@@ -204,12 +226,17 @@ class IVFIndex:
         return IVFState(centroids=istate.centroids, buckets=buckets,
                         bucket_valid=bucket_valid)
 
-    def search(self, istate: IVFState, queries: Array, keys: Array, valid: Array
+    def search(self, istate: IVFState, queries: Array, keys: Array,
+               valid: Array, *, interval: tuple[Array, Array] | None = None
                ) -> tuple[Array, Array]:
         """(B,d) -> (scores (B,k), slot indices (B,k)). Probes nprobe buckets.
 
-        ``valid`` is (N,) shared or (B, N) per-row (tenancy: each query sees
-        only its own region's slots, whichever buckets they landed in)."""
+        ``valid`` is (N,) shared or (B, N) per-row; ``interval`` = per-row
+        ``(starts, sizes)`` restricting each row to its own contiguous slab
+        region on top of a shared (N,) ``valid`` (tenancy: each query sees
+        only its own region's slots, whichever buckets they landed in) —
+        applied to the gathered candidate slot ids, O(B·M), never a (B, N)
+        mask. Rows with no visible live candidate return (-inf, -1)."""
         ivf = istate
         q = l2_normalize(queries)
         csims = jnp.einsum("bd,cd->bc", q, ivf.centroids)      # (B, C)
@@ -221,11 +248,20 @@ class IVFIndex:
         ok_flat = cand_ok.reshape(b, -1)
         safe = jnp.maximum(cand_flat, 0)
         cand_keys = keys[safe]                                  # (B, M, d)
-        sims = jnp.einsum("bd,bmd->bm", q, cand_keys)
+        if cand_keys.dtype == jnp.int8:
+            # uniform slab dequant (store.insert: round(normalized * 127));
+            # scoring raw int8 would inflate every score x127
+            cand_keys = cand_keys.astype(jnp.float32) / 127.0
+        sims = jnp.einsum("bd,bmd->bm", q, cand_keys,
+                          preferred_element_type=jnp.float32)
         if valid.ndim == 2:
             alive = jnp.take_along_axis(valid, safe, axis=1) & ok_flat
         else:
             alive = valid[safe] & ok_flat
+        if interval is not None:
+            starts, sizes = interval
+            alive = alive & (safe >= starts[:, None]) \
+                & (safe < (starts + sizes)[:, None])
         sims = jnp.where(alive, sims, NEG_INF)
         k = min(self.topk, sims.shape[-1])
         top_s, top_m = jax.lax.top_k(sims, k)

@@ -48,12 +48,18 @@ class Index(Protocol):
         """Fresh index state with static shapes derived from ``config``."""
         ...
 
-    def search(self, istate: Any, queries: Array, keys: Array, alive: Array
+    def search(self, istate: Any, queries: Array, keys: Array, alive: Array,
+               *, interval: tuple[Array, Array] | None = None
                ) -> tuple[Array, Array]:
         """(B,d) queries vs the slab -> (scores (B,k), slot ids (B,k)).
 
-        ``alive`` is (N,) shared across the batch, or (B, N) per-row — the
-        tenancy layer masks each query to its own slab region (§13.2)."""
+        ``alive`` is (N,) shared across the batch, or (B, N) for general
+        per-row visibility. ``interval`` = per-row ``(starts, sizes)``
+        operands restricting each row to a contiguous slot range on top of
+        a shared (N,) ``alive`` — how the tenancy layer masks each query to
+        its own slab region with O(B) operands instead of a (B, N) mask
+        (§13.2, §14). Rows with no visible live slot must return exactly
+        (-inf, -1)."""
         ...
 
     def absorb(self, istate: Any, slots: Array, keys: Array, mask: Array) -> Any:

@@ -58,6 +58,20 @@ def cosine_scores(queries: Array, keys: Array, valid: Array | None = None,
     return scores
 
 
+def interval_visibility(alive: Array, starts: Array, sizes: Array) -> Array:
+    """Expand per-row interval operands into a dense (B, N) visibility mask:
+    row ``b`` sees the alive slots in ``[starts[b], starts[b] + sizes[b])``.
+    ``alive`` is (N,) shared or already-per-row (B, N).
+
+    This is the jnp-path materialization of what the interval-masked Pallas
+    kernel builds from iota in VMEM (DESIGN.md §14) — on CPU the (B, N)
+    bool is cheap; on TPU the kernel avoids it entirely.
+    """
+    cols = jnp.arange(alive.shape[-1], dtype=jnp.int32)[None, :]
+    inside = (cols >= starts[:, None]) & (cols < (starts + sizes)[:, None])
+    return (alive if alive.ndim == 2 else alive[None, :]) & inside
+
+
 def masked_topk(scores: Array, k: int) -> tuple[Array, Array]:
     """Top-k over the last axis. Returns (values (..., k), indices (..., k))."""
     k = min(k, scores.shape[-1])

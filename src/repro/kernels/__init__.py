@@ -1,8 +1,13 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
 cosine_topk       — fused masked cosine-similarity + top-k over the cache slab
-                    (the paper's search hot-spot; replaces HNSW on TPU)
-quant_cosine_topk — int8-slab variant (beyond-paper: 4x HBM traffic cut)
+                    (the paper's search hot-spot; replaces HNSW on TPU).
+                    Variants: shared (N,) mask, per-row interval operands
+                    (the tenancy fast path — O(B) operands, mask built from
+                    iota in VMEM), dense (B, N) blocked mask (general
+                    non-contiguous visibility), each with f32 and int8 slabs
+quant_cosine_topk — int8-slab variant with per-row dequant scales
+                    (beyond-paper: 4x HBM traffic cut)
 flash_attention   — online-softmax blockwise attention for the miss path
                     (prefill), GQA-aware, causal/sliding-window
 decode_attention  — single-token attention over the (optionally int8) KV
@@ -12,12 +17,18 @@ Each kernel has a pure-jnp oracle in ``ref.py`` and a dispatching wrapper in
 ``ops.py``; tests sweep shapes/dtypes in interpret mode against the oracles.
 """
 from repro.kernels import ops, ref
-from repro.kernels.cosine_topk import (cosine_topk_pallas,
+from repro.kernels.cosine_topk import (cosine_topk_interval_pallas,
+                                       cosine_topk_masked_pallas,
+                                       cosine_topk_pallas,
+                                       quant_cosine_topk_interval_pallas,
+                                       quant_cosine_topk_masked_pallas,
                                        quant_cosine_topk_pallas,
                                        quantize_keys)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
 
-__all__ = ["ops", "ref", "cosine_topk_pallas", "quant_cosine_topk_pallas",
-           "quantize_keys", "flash_attention_pallas",
-           "decode_attention_pallas"]
+__all__ = ["ops", "ref", "cosine_topk_pallas",
+           "cosine_topk_interval_pallas", "cosine_topk_masked_pallas",
+           "quant_cosine_topk_pallas", "quant_cosine_topk_interval_pallas",
+           "quant_cosine_topk_masked_pallas", "quantize_keys",
+           "flash_attention_pallas", "decode_attention_pallas"]

@@ -21,9 +21,28 @@ over the (BB, BN) score block is pure VPU work and avoids any sort network;
 the per-block winners then merge with the resident (BB, k) running set via
 one more k-step selection over the concatenated (BB, 2k) candidates.
 
-Validity/TTL masking is fused: the ``valid`` column (f32 0/1, shaped (N, 1)
-to satisfy TPU >=2D tiling) rides in with each key block and masked slots
-score -inf — the kernel-level analogue of Redis lazy expiry.
+Masking (all fused, all optional — DESIGN.md §14):
+  * ``valid`` — shared (N,) aliveness (validity ∧ TTL), shipped as an
+    (N, 1) f32 column riding with each key block: the kernel-level analogue
+    of Redis lazy expiry.
+  * per-row *intervals* — (B,) ``starts``/``sizes`` operands, one visible
+    contiguous slot range per query row. The (BB, BN) visibility mask is
+    built *inside* the kernel from block iota against the (BB, 1) interval
+    operands, so per-row masking costs O(B) operand traffic instead of a
+    (B, N) bool mask in HBM. This is the multi-tenant path: PartitionMap
+    regions are contiguous by construction (§13.2).
+  * dense per-row mask — a blocked (BB, BN) int8 mask operand for masks
+    that are *not* contiguous ranges (e.g. future embedding-LSH bucket
+    coalescing). Costs B*N bytes of HBM traffic; prefer intervals.
+
+int8 slabs: keys stored as ``round(normalized * 127)`` (store.insert) score
+through the same kernel with a uniform static ``key_scale = 1/127`` folded
+into the in-VMEM dequant — entrypoints apply it automatically for int8 keys
+so raw-int8 GEMMs (scores inflated x127) cannot happen. Per-row-scale
+quantization (``quantize_keys``) uses the (N, 1) ``scales`` operand instead.
+
+All-masked rows (empty tenant region, padded row) return exactly
+``(-inf, -1)`` — the same contract as ``ref.cosine_topk_ref``.
 """
 from __future__ import annotations
 
@@ -52,9 +71,10 @@ def _iter_topk(scores: Array, ids: Array, k: int) -> tuple[Array, Array]:
     return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)
 
 
-def _cosine_topk_kernel(q_ref, k_ref, valid_ref, ts_ref, ti_ref, *,
-                        k: int, block_n: int, dequant: bool,
-                        scale_ref=None):
+def _cosine_topk_kernel(q_ref, k_ref, ts_ref, ti_ref, *,
+                        k: int, block_n: int, key_scale: float | None,
+                        scale_ref=None, valid_ref=None,
+                        start_ref=None, size_ref=None, mask_ref=None):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -64,19 +84,35 @@ def _cosine_topk_kernel(q_ref, k_ref, valid_ref, ts_ref, ti_ref, *,
 
     q = q_ref[...]                      # (BB, d) f32
     kb = k_ref[...]                     # (BN, d) f32|bf16|int8
-    if dequant:
+    if scale_ref is not None:
         kb = kb.astype(jnp.float32) * scale_ref[...]  # (BN,1) per-row scale
+    elif key_scale is not None:
+        kb = kb.astype(jnp.float32) * key_scale       # uniform int8 dequant
     # MXU GEMM; contraction over d.
     s = jax.lax.dot_general(
         q, kb.astype(jnp.float32),
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)           # (BB, BN)
-    vmask = valid_ref[...]              # (BN, 1) f32 0/1
-    s = jnp.where((vmask[:, 0] > 0.5)[None, :], s, NEG_INF)
 
     base = j * block_n
-    bb = s.shape[0]
-    gids = base + jax.lax.broadcasted_iota(jnp.int32, (bb, s.shape[1]), 1)
+    bb, bn = s.shape
+    gids = base + jax.lax.broadcasted_iota(jnp.int32, (bb, bn), 1)
+
+    if valid_ref is not None:
+        vmask = valid_ref[...]          # (BN, 1) f32 0/1, shared by the batch
+        s = jnp.where((vmask[:, 0] > 0.5)[None, :], s, NEG_INF)
+    if start_ref is not None:
+        # per-row interval visibility, built from iota in VMEM: row b sees
+        # slots [start[b], start[b] + size[b]) — O(B) operands, no (B, N)
+        # mask ever touches HBM
+        start = start_ref[...]          # (BB, 1) int32
+        size = size_ref[...]            # (BB, 1) int32
+        s = jnp.where((gids >= start) & (gids < start + size), s, NEG_INF)
+    if mask_ref is not None:
+        # dense per-row mask block (BB, BN) int8 — the general
+        # (non-contiguous) visibility path
+        s = jnp.where(mask_ref[...] > 0, s, NEG_INF)
+
     blk_s, blk_i = _iter_topk(s, gids, k)
 
     run_s, run_i = ts_ref[...], ti_ref[...]
@@ -96,38 +132,71 @@ def _pad_to(x: Array, n: int, axis: int, fill) -> Array:
     return jnp.pad(x, widths, constant_values=fill)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_b", "block_n",
-                                             "interpret"))
-def cosine_topk_pallas(queries: Array, keys: Array, valid: Array, *,
-                       k: int = 4, block_b: int = 128, block_n: int = 512,
-                       interpret: bool = False) -> tuple[Array, Array]:
-    """Fused masked cosine top-k. See module docstring for the contract.
-
-    queries (B, d) f32 normalized; keys (N, d); valid (N,) bool.
-    Returns (scores (B, k), indices (B, k) int32, -1 where masked/empty).
-    """
+def _launch(queries: Array, keys: Array, *, valid=None, scales=None,
+            key_scale=None, starts=None, sizes=None, row_mask=None,
+            k: int, block_b: int, block_n: int, interpret: bool
+            ) -> tuple[Array, Array]:
+    """Shared pallas_call assembly for every kernel variant: pads operands
+    to tile multiples, wires the optional mask/scale operands, slices the
+    batch padding back off. Padded key columns are masked invalid (shared
+    column / dense mask) or fall outside every interval (intervals never
+    extend past N); padded batch rows get size-0 intervals / zero masks and
+    are discarded by the final slice."""
     b, d = queries.shape
     n = keys.shape[0]
     bb = min(block_b, max(8, b))
     bn = min(block_n, n)
-    # pad to tile multiples; padded keys are masked invalid
     b_pad = -(-b // bb) * bb
     n_pad = -(-n // bn) * bn
-    q = _pad_to(queries.astype(jnp.float32), b_pad, 0, 0.0)
-    kk = _pad_to(keys, n_pad, 0, 0.0)
-    vm = _pad_to(valid.astype(jnp.float32)[:, None], n_pad, 0, 0.0)
+    if keys.dtype == jnp.int8 and scales is None and key_scale is None:
+        # int8 slab = round(normalized * 127): uniform dequant, folded into
+        # the in-VMEM cast. Raw-int8 scoring would inflate scores x127 and
+        # make every threshold comparison spuriously hit.
+        key_scale = 1.0 / 127.0
 
-    grid = (b_pad // bb, n_pad // bn)
-    kernel = functools.partial(
-        _cosine_topk_kernel, k=k, block_n=bn, dequant=False)
+    operands = [_pad_to(queries.astype(jnp.float32), b_pad, 0, 0.0),
+                _pad_to(keys, n_pad, 0, 0)]
+    in_specs = [pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+                pl.BlockSpec((bn, d), lambda i, j: (j, 0))]
+    ref_names = []
+
+    def add(name, op, spec):
+        operands.append(op)
+        in_specs.append(spec)
+        ref_names.append(name)
+
+    if scales is not None:
+        add("scale_ref",
+            _pad_to(scales.astype(jnp.float32)[:, None], n_pad, 0, 0.0),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)))
+    if valid is not None:
+        add("valid_ref",
+            _pad_to(valid.astype(jnp.float32)[:, None], n_pad, 0, 0.0),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)))
+    if starts is not None:
+        add("start_ref",
+            _pad_to(starts.astype(jnp.int32)[:, None], b_pad, 0, 0),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)))
+        add("size_ref",
+            _pad_to(sizes.astype(jnp.int32)[:, None], b_pad, 0, 0),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)))
+    if row_mask is not None:
+        # int8, not f32: the mask is pure HBM traffic on a memory-bound op,
+        # so ship 1 byte/element (B*N bytes total)
+        rm = _pad_to(_pad_to(row_mask.astype(jnp.int8), b_pad, 0, 0),
+                     n_pad, 1, 0)
+        add("mask_ref", rm, pl.BlockSpec((bb, bn), lambda i, j: (i, j)))
+
+    def kernel(q_ref, k_ref, *rest):
+        refs = dict(zip(ref_names, rest[:len(ref_names)]))
+        ts_ref, ti_ref = rest[len(ref_names):]
+        _cosine_topk_kernel(q_ref, k_ref, ts_ref, ti_ref, k=k, block_n=bn,
+                            key_scale=key_scale, **refs)
+
     ts, ti = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
-        ],
+        grid=(b_pad // bb, n_pad // bn),
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
             pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
@@ -137,16 +206,35 @@ def cosine_topk_pallas(queries: Array, keys: Array, valid: Array, *,
             jax.ShapeDtypeStruct((b_pad, k), jnp.int32),
         ],
         interpret=interpret,
-    )(q, kk, vm)
+    )(*operands)
     ts = jnp.where(ts <= NEG_INF, -jnp.inf, ts)
     return ts[:b], ti[:b]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_b", "block_n",
-                                             "interpret"))
+_STATIC = ("k", "block_b", "block_n", "interpret", "key_scale")
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def cosine_topk_pallas(queries: Array, keys: Array, valid: Array, *,
+                       k: int = 4, block_b: int = 128, block_n: int = 512,
+                       interpret: bool = False, key_scale: float | None = None
+                       ) -> tuple[Array, Array]:
+    """Fused masked cosine top-k. See module docstring for the contract.
+
+    queries (B, d) f32 normalized; keys (N, d) f32|bf16|int8; valid (N,)
+    bool shared across the batch. int8 keys dequant in-kernel (uniform
+    ``key_scale``, default 1/127 — the slab's symmetric scale).
+    Returns (scores (B, k), indices (B, k) int32, -1 where masked/empty).
+    """
+    return _launch(queries, keys, valid=valid, key_scale=key_scale,
+                   k=k, block_b=block_b, block_n=block_n, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def quant_cosine_topk_pallas(queries: Array, keys_q: Array, scales: Array,
                              valid: Array, *, k: int = 4, block_b: int = 128,
-                             block_n: int = 512, interpret: bool = False
+                             block_n: int = 512, interpret: bool = False,
+                             key_scale: float | None = None
                              ) -> tuple[Array, Array]:
     """int8-slab variant: keys int8 + per-row f32 scale, dequant in VMEM.
 
@@ -154,44 +242,72 @@ def quant_cosine_topk_pallas(queries: Array, keys_q: Array, scales: Array,
     large N — see EXPERIMENTS.md §Perf); dequant happens after the DMA, on
     the block in VMEM, so the MXU still sees f32 operands.
     """
-    b, d = queries.shape
-    n = keys_q.shape[0]
-    bb = min(block_b, max(8, b))
-    bn = min(block_n, n)
-    b_pad = -(-b // bb) * bb
-    n_pad = -(-n // bn) * bn
-    q = _pad_to(queries.astype(jnp.float32), b_pad, 0, 0.0)
-    kk = _pad_to(keys_q, n_pad, 0, 0)
-    sc = _pad_to(scales[:, None], n_pad, 0, 0.0)
-    vm = _pad_to(valid.astype(jnp.float32)[:, None], n_pad, 0, 0.0)
+    del key_scale  # per-row scales take precedence by construction
+    return _launch(queries, keys_q, scales=scales, valid=valid,
+                   k=k, block_b=block_b, block_n=block_n, interpret=interpret)
 
-    grid = (b_pad // bb, n_pad // bn)
 
-    def kernel(q_ref, k_ref, s_ref, valid_ref, ts_ref, ti_ref):
-        _cosine_topk_kernel(q_ref, k_ref, valid_ref, ts_ref, ti_ref,
-                            k=k, block_n=bn, dequant=True, scale_ref=s_ref)
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def cosine_topk_interval_pallas(queries: Array, keys: Array, valid: Array,
+                                starts: Array, sizes: Array, *, k: int = 4,
+                                block_b: int = 128, block_n: int = 512,
+                                interpret: bool = False,
+                                key_scale: float | None = None
+                                ) -> tuple[Array, Array]:
+    """Per-row interval-masked variant — the tenancy fast path (§13.2).
 
-    ts, ti = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
-            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b_pad, k), jnp.float32),
-            jax.ShapeDtypeStruct((b_pad, k), jnp.int32),
-        ],
-        interpret=interpret,
-    )(q, kk, sc, vm)
-    ts = jnp.where(ts <= NEG_INF, -jnp.inf, ts)
-    return ts[:b], ti[:b]
+    Row ``b`` sees slots ``[starts[b], starts[b] + sizes[b])`` ∩ ``valid``.
+    The interval operands are O(B); the (B, N) visibility mask is built from
+    block iota in VMEM and never materializes in HBM. ``sizes[b] == 0``
+    (empty region / padded row) returns exactly ``(-inf, -1)`` for that row.
+    """
+    return _launch(queries, keys, valid=valid, starts=starts, sizes=sizes,
+                   key_scale=key_scale, k=k, block_b=block_b, block_n=block_n,
+                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def quant_cosine_topk_interval_pallas(queries: Array, keys_q: Array,
+                                      scales: Array, valid: Array,
+                                      starts: Array, sizes: Array, *,
+                                      k: int = 4, block_b: int = 128,
+                                      block_n: int = 512,
+                                      interpret: bool = False,
+                                      key_scale: float | None = None
+                                      ) -> tuple[Array, Array]:
+    """Interval-masked int8 variant with per-row dequant scales."""
+    del key_scale
+    return _launch(queries, keys_q, scales=scales, valid=valid, starts=starts,
+                   sizes=sizes, k=k, block_b=block_b, block_n=block_n,
+                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def cosine_topk_masked_pallas(queries: Array, keys: Array, mask: Array, *,
+                              k: int = 4, block_b: int = 128,
+                              block_n: int = 512, interpret: bool = False,
+                              key_scale: float | None = None
+                              ) -> tuple[Array, Array]:
+    """General per-row-masked variant: ``mask`` is (B, N) bool — full
+    visibility (aliveness ∧ per-row) folded in by the caller. Streams the
+    mask in (BB, BN) blocks; for contiguous regions prefer the interval
+    variant (O(B) operands vs O(B·N) mask traffic)."""
+    return _launch(queries, keys, row_mask=mask, key_scale=key_scale,
+                   k=k, block_b=block_b, block_n=block_n, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def quant_cosine_topk_masked_pallas(queries: Array, keys_q: Array,
+                                    scales: Array, mask: Array, *,
+                                    k: int = 4, block_b: int = 128,
+                                    block_n: int = 512,
+                                    interpret: bool = False,
+                                    key_scale: float | None = None
+                                    ) -> tuple[Array, Array]:
+    """Dense-masked int8 variant with per-row dequant scales."""
+    del key_scale
+    return _launch(queries, keys_q, scales=scales, row_mask=mask,
+                   k=k, block_b=block_b, block_n=block_n, interpret=interpret)
 
 
 def quantize_keys(keys: Array) -> tuple[Array, Array]:

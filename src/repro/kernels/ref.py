@@ -19,15 +19,24 @@ def cosine_topk_ref(queries: Array, keys: Array, valid: Array, k: int
 
     Args:
       queries: (B, d) float32, assumed L2-normalized.
-      keys: (N, d) float or quantized-dequantized values, normalized.
-      valid: (N,) bool aliveness mask.
+      keys: (N, d) float or quantized-dequantized values, normalized. int8
+        keys are the uniform slab quantization (round(normalized * 127))
+        and dequant by 1/127 before scoring — raw int8 GEMMs would inflate
+        every score x127.
+      valid: (N,) bool aliveness mask shared by the batch, or (B, N) bool
+        per-row visibility.
       k: neighbours to return.
     Returns:
       (scores (B, k) f32 desc-sorted, indices (B, k) int32; -1 where masked).
+      All-masked rows return exactly (-inf, -1) — the contract every kernel
+      variant and index path must match.
     """
+    if keys.dtype == jnp.int8:
+        keys = keys.astype(jnp.float32) / 127.0
     scores = jnp.einsum("bd,nd->bn", queries, keys.astype(jnp.float32),
                         preferred_element_type=jnp.float32)
-    scores = jnp.where(valid[None, :], scores, NEG_INF)
+    mask = valid if valid.ndim == 2 else valid[None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
     vals, idx = jax.lax.top_k(scores, k)
     idx = jnp.where(vals > NEG_INF, idx, -1)
     return vals, idx.astype(jnp.int32)
@@ -38,9 +47,37 @@ def quant_cosine_topk_ref(queries: Array, keys_q: Array, scales: Array,
     """int8-quantized scoring oracle: dequantize then exact top-k.
 
     keys_q: (N, d) int8; scales: (N,) f32 per-row dequant scale.
+    valid: (N,) shared or (B, N) per-row.
     """
     keys = keys_q.astype(jnp.float32) * scales[:, None]
     return cosine_topk_ref(queries, keys, valid, k)
+
+
+def interval_mask(starts: Array, sizes: Array, n: int) -> Array:
+    """(B,) interval operands -> (B, N) bool visibility mask: row ``b`` sees
+    slots ``[starts[b], starts[b] + sizes[b])``. The jnp oracle for the
+    iota-built mask the interval kernel never materializes."""
+    cols = jnp.arange(n, dtype=jnp.int32)[None, :]
+    return (cols >= starts[:, None]) & (cols < (starts + sizes)[:, None])
+
+
+def cosine_topk_interval_ref(queries: Array, keys: Array, valid: Array,
+                             starts: Array, sizes: Array, k: int
+                             ) -> tuple[Array, Array]:
+    """Oracle for the per-row interval-masked kernel (tenancy fast path):
+    dense (B, N) mask = shared aliveness ∧ per-row interval, then exact
+    top-k. ``sizes[b] == 0`` rows return (-inf, -1)."""
+    mask = valid[None, :] & interval_mask(starts, sizes, keys.shape[0])
+    return cosine_topk_ref(queries, keys, mask, k)
+
+
+def quant_cosine_topk_interval_ref(queries: Array, keys_q: Array,
+                                   scales: Array, valid: Array, starts: Array,
+                                   sizes: Array, k: int
+                                   ) -> tuple[Array, Array]:
+    """Interval oracle over a per-row-scale int8 slab."""
+    keys = keys_q.astype(jnp.float32) * scales[:, None]
+    return cosine_topk_interval_ref(queries, keys, valid, starts, sizes, k)
 
 
 def flash_attention_ref(q: Array, kk: Array, v: Array, *, causal: bool = True,

@@ -49,6 +49,51 @@ class TestIVF:
         s, i = ivf.search(st, keys[10:11], keys, valid)
         assert int(i[0, 0]) == 10
 
+    def test_int8_slab_parity_vs_exact(self):
+        """Satellite regression: IVF gathered-candidate scoring on an int8
+        slab must dequant (x 1/127) like the exact path — without it IVF
+        scores inflate x127 and disagree with exact on the same slab."""
+        keys = _unit(jax.random.PRNGKey(0), (256, 32))
+        keys8 = jnp.clip(jnp.round(keys * 127.0), -127, 127).astype(jnp.int8)
+        valid = jnp.ones((256,), bool)
+        queries = keys[:32] + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(1), (32, 32))
+        # nprobe == ncentroids: IVF probes every bucket -> exact recall,
+        # so any score disagreement is a scoring bug, not a recall miss
+        ivf = IVFIndex(ncentroids=8, nprobe=8, bucket_cap=256, topk=1)
+        st = ivf.fit(keys8, valid, jax.random.PRNGKey(2))
+        s_ivf, i_ivf = ivf.search(st, queries, keys8, valid)
+        ex = ExactIndex(topk=1, backend="jnp")
+        s_ex, i_ex = ex.search(ExactState(), queries, keys8, valid)
+        np.testing.assert_array_equal(np.asarray(i_ivf[:, 0]),
+                                      np.asarray(i_ex[:, 0]))
+        np.testing.assert_allclose(np.asarray(s_ivf[:, 0]),
+                                   np.asarray(s_ex[:, 0]), rtol=1e-5,
+                                   atol=1e-5)
+        assert float(jnp.max(jnp.abs(s_ivf))) <= 1.01  # not x127
+
+    def test_interval_matches_dense_mask(self):
+        """IVF per-row intervals == IVF with the equivalent dense (B, N)
+        mask: same candidates, same scores, same slots."""
+        from repro.core.similarity import interval_visibility
+        keys = _unit(jax.random.PRNGKey(3), (192, 16))
+        valid = jnp.ones((192,), bool)
+        queries = _unit(jax.random.PRNGKey(4), (6, 16))
+        starts = jnp.asarray([0, 64, 128, 0, 64, 128], jnp.int32)
+        sizes = jnp.asarray([64, 64, 64, 64, 64, 0], jnp.int32)
+        ivf = IVFIndex(ncentroids=6, nprobe=6, bucket_cap=192, topk=2)
+        st = ivf.fit(keys, valid, jax.random.PRNGKey(5))
+        s_a, i_a = ivf.search(st, queries, keys, valid,
+                              interval=(starts, sizes))
+        dense = interval_visibility(valid, starts, sizes)
+        s_b, i_b = ivf.search(st, queries, keys, dense)
+        np.testing.assert_array_equal(np.asarray(i_a), np.asarray(i_b))
+        np.testing.assert_allclose(np.asarray(s_a), np.asarray(s_b),
+                                   atol=1e-6)
+        # empty-interval row: the (-inf, -1) contract
+        assert (np.asarray(i_a)[5] == -1).all()
+        assert np.isneginf(np.asarray(s_a)[5]).all()
+
 
 class TestHNSW:
     def test_exact_on_small_sets(self):

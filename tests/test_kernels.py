@@ -49,6 +49,23 @@ class TestCosineTopK:
         assert bool(jnp.all(pi == -1))
         assert bool(jnp.all(ps == -jnp.inf))
 
+    def test_int8_slab_keys_dequant_in_kernel(self):
+        """Regression: the exact kernel on an int8 slab (uniform symmetric
+        round(normalized * 127) from store.insert) must dequant in-kernel —
+        scoring raw int8 inflates every score x127 and makes every
+        threshold comparison spuriously hit."""
+        q = _unit(jax.random.PRNGKey(0), (4, 64))
+        keys = _unit(jax.random.PRNGKey(1), (128, 64))
+        keys8 = jnp.clip(jnp.round(keys * 127.0), -127, 127).astype(jnp.int8)
+        valid = jax.random.bernoulli(jax.random.PRNGKey(2), 0.9, (128,))
+        rs, ri = ref.cosine_topk_ref(q, keys8, valid, 2)
+        ps, pi = cosine_topk_pallas(q, keys8, valid, k=2, block_b=8,
+                                    block_n=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(rs), np.asarray(ps),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(ri), np.asarray(pi))
+        assert float(jnp.max(jnp.abs(ps))) <= 1.01  # cosine range, not x127
+
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_key_dtypes(self, dtype):
         q = _unit(jax.random.PRNGKey(0), (4, 64))

@@ -1,0 +1,397 @@
+"""Per-row-masked cosine_topk kernel variants (DESIGN.md §14) vs the jnp
+oracles, in interpret mode on CPU: interval operands (the tenancy fast
+path), the dense blocked (B, N) mask path, int8 slabs (uniform and per-row
+scales), the (-inf, -1) all-masked contract across every lookup path, and
+the ops-level dispatch under REPRO_PALLAS_INTERPRET=1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.kernels import ref
+from repro.kernels.cosine_topk import (cosine_topk_interval_pallas,
+                                       cosine_topk_masked_pallas,
+                                       cosine_topk_pallas,
+                                       quant_cosine_topk_interval_pallas,
+                                       quant_cosine_topk_masked_pallas,
+                                       quantize_keys)
+
+
+def _unit(rng, shape):
+    x = jax.random.normal(rng, shape)
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def _slab_int8(keys):
+    """The cache slab's uniform symmetric quantization (store.insert)."""
+    return jnp.clip(jnp.round(keys * 127.0), -127, 127).astype(jnp.int8)
+
+
+def _random_intervals(rng, b, n, *, empty_every=4):
+    """Random per-row (start, size) pairs; every ``empty_every``-th row gets
+    an empty interval (size 0) — the empty-region / padded-row edge."""
+    k1, k2 = jax.random.split(rng)
+    starts = jax.random.randint(k1, (b,), 0, n, dtype=jnp.int32)
+    sizes = jax.random.randint(k2, (b,), 1, n + 1, dtype=jnp.int32)
+    sizes = jnp.minimum(sizes, n - starts)
+    if empty_every:
+        rows = jnp.arange(b)
+        sizes = jnp.where(rows % empty_every == empty_every - 1, 0, sizes)
+    return starts, sizes
+
+
+def _check(expected, got, rtol=1e-5, atol=1e-5):
+    (rs, ri), (ps, pi) = expected, got
+    np.testing.assert_allclose(np.asarray(rs), np.asarray(ps),
+                               rtol=rtol, atol=atol)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(pi))
+
+
+class TestIntervalKernel:
+    @pytest.mark.parametrize("b,n,d,k", [
+        (1, 64, 16, 1),
+        (4, 100, 32, 4),      # non-multiple N
+        (3, 517, 64, 2),      # awkward everything
+        (16, 256, 384, 4),    # MiniLM dim
+        (33, 128, 128, 8),    # B > block_b: intervals cross batch blocks
+    ])
+    def test_matches_oracle_mixed_intervals(self, b, n, d, k):
+        r = jax.random.PRNGKey(b * 7919 + n)
+        kq, kk, kv, ki = jax.random.split(r, 4)
+        q = _unit(kq, (b, d))
+        keys = _unit(kk, (n, d))
+        valid = jax.random.bernoulli(kv, 0.8, (n,))
+        starts, sizes = _random_intervals(ki, b, n)
+        exp = ref.cosine_topk_interval_ref(q, keys, valid, starts, sizes, k)
+        got = cosine_topk_interval_pallas(q, keys, valid, starts, sizes,
+                                          k=k, block_b=8, block_n=64,
+                                          interpret=True)
+        _check(exp, got)
+
+    def test_tenant_layout_intervals(self):
+        """Contiguous disjoint regions, exactly the PartitionMap layout:
+        rows of tenant t see only [start_t, start_t + size_t)."""
+        b, n, d, k = 12, 192, 32, 4
+        r = jax.random.PRNGKey(0)
+        kq, kk = jax.random.split(r)
+        q = _unit(kq, (b, d))
+        keys = _unit(kk, (n, d))
+        valid = jnp.ones((n,), bool)
+        region = jnp.array([(0, 64), (64, 96), (160, 32)], dtype=jnp.int32)
+        tid = jnp.arange(b, dtype=jnp.int32) % 3
+        starts, sizes = region[tid, 0], region[tid, 1]
+        exp = ref.cosine_topk_interval_ref(q, keys, valid, starts, sizes, k)
+        got = cosine_topk_interval_pallas(q, keys, valid, starts, sizes,
+                                          k=k, block_b=8, block_n=64,
+                                          interpret=True)
+        _check(exp, got)
+        # structural isolation: every returned slot is inside the row's region
+        _, pi = got
+        pi = np.asarray(pi)
+        st_, sz = np.asarray(starts), np.asarray(sizes)
+        for row in range(b):
+            hits = pi[row][pi[row] >= 0]
+            assert ((hits >= st_[row]) & (hits < st_[row] + sz[row])).all()
+
+    def test_empty_interval_rows_return_neg_inf_minus_one(self):
+        """Satellite: a row whose region has zero visible slots returns
+        exactly (-inf, -1) — kernel == oracle, bit for bit."""
+        b, n, d = 6, 96, 16
+        q = _unit(jax.random.PRNGKey(0), (b, d))
+        keys = _unit(jax.random.PRNGKey(1), (n, d))
+        valid = jnp.ones((n,), bool).at[32:64].set(False)
+        starts = jnp.array([0, 32, 0, 32, 90, 0], dtype=jnp.int32)
+        sizes = jnp.array([32, 32, 0, 0, 6, 96], dtype=jnp.int32)
+        # rows 1-3: empty (region fully dead / size 0); rows 0, 4, 5: live
+        exp = ref.cosine_topk_interval_ref(q, keys, valid, starts, sizes, 3)
+        got = cosine_topk_interval_pallas(q, keys, valid, starts, sizes,
+                                          k=3, block_b=8, block_n=32,
+                                          interpret=True)
+        _check(exp, got)
+        ps, pi = got
+        for row in (1, 2, 3):
+            assert bool(jnp.all(pi[row] == -1))
+            assert bool(jnp.all(ps[row] == -jnp.inf))
+        assert bool(jnp.all(pi[0] >= 0))
+
+    def test_int8_slab_uniform_dequant(self):
+        """Satellite regression: int8 slab keys must score dequantized
+        (x 1/127) — raw-int8 scoring would inflate scores x127."""
+        b, n, d, k = 5, 160, 48, 4
+        q = _unit(jax.random.PRNGKey(2), (b, d))
+        keys = _unit(jax.random.PRNGKey(3), (n, d))
+        keys8 = _slab_int8(keys)
+        valid = jax.random.bernoulli(jax.random.PRNGKey(4), 0.9, (n,))
+        starts, sizes = _random_intervals(jax.random.PRNGKey(5), b, n)
+        exp = ref.cosine_topk_interval_ref(q, keys8, valid, starts, sizes, k)
+        got = cosine_topk_interval_pallas(q, keys8, valid, starts, sizes,
+                                          k=k, block_b=8, block_n=32,
+                                          interpret=True)
+        _check(exp, got)
+        ps, _ = got
+        finite = np.asarray(ps)[np.isfinite(np.asarray(ps))]
+        assert (np.abs(finite) <= 1.01).all()   # cosine range, not x127
+
+    def test_per_row_scale_int8(self):
+        b, n, d, k = 4, 128, 64, 2
+        q = _unit(jax.random.PRNGKey(6), (b, d))
+        keys = _unit(jax.random.PRNGKey(7), (n, d))
+        keys8, scales = quantize_keys(keys)
+        valid = jnp.ones((n,), bool)
+        starts, sizes = _random_intervals(jax.random.PRNGKey(8), b, n)
+        exp = ref.quant_cosine_topk_interval_ref(q, keys8, scales, valid,
+                                                 starts, sizes, k)
+        got = quant_cosine_topk_interval_pallas(q, keys8, scales, valid,
+                                                starts, sizes, k=k,
+                                                block_b=8, block_n=64,
+                                                interpret=True)
+        _check(exp, got, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(1, 9), st.integers(8, 150), st.integers(8, 48),
+           st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+    def test_property_sweep(self, b, n, d, k, seed):
+        r = jax.random.PRNGKey(seed)
+        kq, kk, kv, ki = jax.random.split(r, 4)
+        q = _unit(kq, (b, d))
+        keys = _unit(kk, (n, d))
+        valid = jax.random.bernoulli(kv, 0.7, (n,))
+        starts, sizes = _random_intervals(ki, b, n, empty_every=3)
+        exp = ref.cosine_topk_interval_ref(q, keys, valid, starts, sizes, k)
+        got = cosine_topk_interval_pallas(q, keys, valid, starts, sizes,
+                                          k=k, block_b=8, block_n=64,
+                                          interpret=True)
+        _check(exp, got, rtol=1e-4, atol=1e-4)
+
+
+class TestDenseMaskKernel:
+    """The general blocked (BB, BN) mask path — non-contiguous visibility."""
+
+    @pytest.mark.parametrize("b,n,d,k", [
+        (4, 100, 32, 4),
+        (9, 256, 64, 2),
+        (17, 96, 128, 4),     # B > block_b
+    ])
+    def test_matches_oracle_random_mask(self, b, n, d, k):
+        r = jax.random.PRNGKey(b * 31 + n)
+        kq, kk, km = jax.random.split(r, 3)
+        q = _unit(kq, (b, d))
+        keys = _unit(kk, (n, d))
+        mask = jax.random.bernoulli(km, 0.6, (b, n))
+        mask = mask.at[0].set(False)            # one all-masked row
+        exp = ref.cosine_topk_ref(q, keys, mask, k)
+        got = cosine_topk_masked_pallas(q, keys, mask, k=k, block_b=8,
+                                        block_n=32, interpret=True)
+        _check(exp, got)
+        ps, pi = got
+        assert bool(jnp.all(pi[0] == -1)) and bool(jnp.all(ps[0] == -jnp.inf))
+
+    def test_int8_slab(self):
+        b, n, d, k = 6, 128, 32, 3
+        q = _unit(jax.random.PRNGKey(0), (b, d))
+        keys8 = _slab_int8(_unit(jax.random.PRNGKey(1), (n, d)))
+        mask = jax.random.bernoulli(jax.random.PRNGKey(2), 0.7, (b, n))
+        exp = ref.cosine_topk_ref(q, keys8, mask, k)
+        got = cosine_topk_masked_pallas(q, keys8, mask, k=k, block_b=8,
+                                        block_n=64, interpret=True)
+        _check(exp, got)
+
+    def test_per_row_scale_int8(self):
+        b, n, d, k = 4, 96, 48, 2
+        q = _unit(jax.random.PRNGKey(3), (b, d))
+        keys = _unit(jax.random.PRNGKey(4), (n, d))
+        keys8, scales = quantize_keys(keys)
+        mask = jax.random.bernoulli(jax.random.PRNGKey(5), 0.5, (b, n))
+        keysf = keys8.astype(jnp.float32) * scales[:, None]
+        exp = ref.cosine_topk_ref(q, keysf, mask, k)
+        got = quant_cosine_topk_masked_pallas(q, keys8, scales, mask, k=k,
+                                              block_b=8, block_n=32,
+                                              interpret=True)
+        _check(exp, got, rtol=1e-4, atol=1e-4)
+
+
+class TestOpsDispatch:
+    """REPRO_PALLAS_INTERPRET=1 must route every ops entry point through the
+    Pallas kernels (interpret mode) and still match the oracles — this is
+    what the CPU CI kernel job exercises."""
+
+    @pytest.fixture(autouse=True)
+    def _interpret(self, monkeypatch):
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+
+    def test_shared_mask(self):
+        from repro.kernels import ops
+        q = _unit(jax.random.PRNGKey(0), (4, 32))
+        keys = _unit(jax.random.PRNGKey(1), (64, 32))
+        valid = jax.random.bernoulli(jax.random.PRNGKey(2), 0.8, (64,))
+        _check(ref.cosine_topk_ref(q, keys, valid, 2),
+               ops.cosine_topk(q, keys, valid, k=2))
+
+    def test_shared_mask_int8_slab(self):
+        """Satellite regression at the dispatch level: an int8 slab through
+        ops.cosine_topk returns cosine-range scores, not x127."""
+        from repro.kernels import ops
+        q = _unit(jax.random.PRNGKey(3), (4, 32))
+        keys8 = _slab_int8(_unit(jax.random.PRNGKey(4), (64, 32)))
+        valid = jnp.ones((64,), bool)
+        exp = ref.cosine_topk_ref(q, keys8, valid, 2)
+        got = ops.cosine_topk(q, keys8, valid, k=2)
+        _check(exp, got)
+        assert float(jnp.max(jnp.abs(got[0]))) <= 1.01
+
+    def test_per_row_dense_mask(self):
+        from repro.kernels import ops
+        q = _unit(jax.random.PRNGKey(5), (5, 32))
+        keys = _unit(jax.random.PRNGKey(6), (64, 32))
+        mask = jax.random.bernoulli(jax.random.PRNGKey(7), 0.6, (5, 64))
+        _check(ref.cosine_topk_ref(q, keys, mask, 3),
+               ops.cosine_topk(q, keys, mask, k=3))
+
+    def test_interval(self):
+        from repro.kernels import ops
+        q = _unit(jax.random.PRNGKey(8), (6, 32))
+        keys = _unit(jax.random.PRNGKey(9), (96, 32))
+        valid = jnp.ones((96,), bool)
+        starts, sizes = _random_intervals(jax.random.PRNGKey(10), 6, 96)
+        _check(ref.cosine_topk_interval_ref(q, keys, valid, starts, sizes, 2),
+               ops.cosine_topk_interval(q, keys, valid, starts, sizes, k=2))
+
+    def test_quant_per_row_dense_mask(self):
+        """(B, N) valid through ops.quant_cosine_topk routes to the masked
+        quant kernel instead of crashing on a rank-3 operand."""
+        from repro.kernels import ops
+        q = _unit(jax.random.PRNGKey(11), (4, 32))
+        keys8, scales = quantize_keys(_unit(jax.random.PRNGKey(12), (64, 32)))
+        mask = jax.random.bernoulli(jax.random.PRNGKey(13), 0.6, (4, 64))
+        _check(ref.quant_cosine_topk_ref(q, keys8, scales, mask, 2),
+               ops.quant_cosine_topk(q, keys8, scales, mask, k=2),
+               rtol=1e-4, atol=1e-4)
+
+
+class TestIntervalComposesWithDenseMask:
+    """interval= on top of an already-per-row (B, N) alive mask must be
+    folded in, not dropped — ExactIndex (both backends) and IVF agree."""
+
+    def test_exact_both_backends(self, monkeypatch):
+        from repro.core.index import ExactIndex, ExactState
+        from repro.core.similarity import interval_visibility
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+        q = _unit(jax.random.PRNGKey(0), (5, 16))
+        keys = _unit(jax.random.PRNGKey(1), (64, 16))
+        alive2d = jax.random.bernoulli(jax.random.PRNGKey(2), 0.8, (5, 64))
+        starts, sizes = _random_intervals(jax.random.PRNGKey(3), 5, 64)
+        composed = interval_visibility(alive2d, starts, sizes)
+        for backend in ("jnp", "pallas"):
+            idx = ExactIndex(topk=3, backend=backend)
+            got = idx.search(ExactState(), q, keys, alive2d,
+                             interval=(starts, sizes))
+            exp = idx.search(ExactState(), q, keys, composed)
+            _check(exp, got)
+            # the restriction actually bites: every id is inside its interval
+            pi = np.asarray(got[1])
+            st_, sz = np.asarray(starts), np.asarray(sizes)
+            for row in range(5):
+                hits = pi[row][pi[row] >= 0]
+                assert ((hits >= st_[row])
+                        & (hits < st_[row] + sz[row])).all(), backend
+
+
+class TestEmptyRegionContractAcrossPaths:
+    """Satellite: zero live slots in a row's region -> (-inf, -1) from the
+    Pallas kernel, the jnp ExactIndex path, and IVF — identically."""
+
+    def _setup(self):
+        from repro.core.types import CacheConfig
+        d, n, b = 32, 128, 4
+        keys = _unit(jax.random.PRNGKey(0), (n, d))
+        q = _unit(jax.random.PRNGKey(1), (b, d))
+        valid = jnp.ones((n,), bool).at[64:].set(False)  # second half dead
+        starts = jnp.array([0, 64, 0, 64], dtype=jnp.int32)
+        sizes = jnp.array([64, 64, 64, 64], dtype=jnp.int32)
+        # rows 1 and 3 see only the dead half -> empty
+        return CacheConfig(dim=d, capacity=n), q, keys, valid, starts, sizes
+
+    def test_three_way_agreement(self):
+        from repro.core.index import ExactIndex, ExactState, IVFIndex
+        cfg, q, keys, valid, starts, sizes = self._setup()
+        interval = (starts, sizes)
+
+        kern = cosine_topk_interval_pallas(q, keys, valid, starts, sizes,
+                                           k=2, block_b=8, block_n=32,
+                                           interpret=True)
+        exact = ExactIndex(topk=2, backend="jnp").search(
+            ExactState(), q, keys, valid, interval=interval)
+        ivf = IVFIndex(ncentroids=4, nprobe=4, bucket_cap=128, topk=2)
+        ist = ivf.fit(keys, valid, jax.random.PRNGKey(2))
+        ivf_out = ivf.search(ist, q, keys, valid, interval=interval)
+
+        for name, (s, i) in {"kernel": kern, "exact_jnp": exact,
+                             "ivf": ivf_out}.items():
+            s, i = np.asarray(s), np.asarray(i)
+            assert (i[1] == -1).all() and (i[3] == -1).all(), name
+            assert np.isneginf(s[1]).all() and np.isneginf(s[3]).all(), name
+            assert (i[0] >= 0).all() and (i[2] >= 0).all(), name
+        # live rows agree across all three paths (nprobe covers all buckets)
+        np.testing.assert_allclose(np.asarray(kern[0])[[0, 2]],
+                                   np.asarray(exact[0])[[0, 2]], atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(kern[1])[[0, 2]],
+                                      np.asarray(exact[1])[[0, 2]])
+        np.testing.assert_array_equal(np.asarray(kern[1])[[0, 2]],
+                                      np.asarray(ivf_out[1])[[0, 2]])
+
+
+class TestTenancyLookupOnKernelPath:
+    """Acceptance: with a multi-tenant partition, ExactIndex no longer falls
+    back to the jnp path — the interval kernel (interpret mode here, TPU in
+    prod) produces lookups identical to the jnp backend, on f32 and int8
+    slabs, mixed-tenant batches, and empty-region tenants."""
+
+    @pytest.fixture(autouse=True)
+    def _interpret(self, monkeypatch):
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+
+    @pytest.mark.parametrize("key_dtype", [jnp.float32, jnp.int8])
+    def test_lookup_parity_mixed_tenants(self, key_dtype):
+        from repro.core import CacheConfig, SemanticCache
+        from repro.core.index import ExactIndex
+        from repro.tenancy import TenantRegistry
+
+        d, cap, b = 32, 96, 8
+        reg = TenantRegistry.uniform(["a", "b", "c"])
+        cfg = CacheConfig(dim=d, capacity=cap, value_len=8, ttl=None,
+                          key_dtype=key_dtype)
+        part = reg.partition(cap)
+        emb = jax.random.normal(jax.random.PRNGKey(0), (b, d))
+        vals = jnp.zeros((b, 8), jnp.int32)
+        lens = jnp.full((b,), 8)
+        # tenants a and b get entries; c stays empty
+        tid_seed = jnp.asarray([0, 1, 0, 1, 0, 1, 0, 1], jnp.int32)
+        probe = emb + 0.1 * jax.random.normal(jax.random.PRNGKey(1), emb.shape)
+        tid_mix = jnp.asarray([0, 1, 2, 0, 1, 2, 0, 1], jnp.int32)
+
+        results = {}
+        for backend in ("pallas", "jnp"):
+            cache = SemanticCache(cfg, index=ExactIndex(topk=4,
+                                                        backend=backend),
+                                  partition=part)
+            rt = cache.init()
+            rt = cache.insert(rt, emb, vals, lens, 0.0, tenant_id=tid_seed)
+            res, rt = cache.lookup(rt, probe, 1.0, tenant_id=tid_mix)
+            results[backend] = res
+
+        pl_res, jnp_res = results["pallas"], results["jnp"]
+        np.testing.assert_allclose(np.asarray(pl_res.score),
+                                   np.asarray(jnp_res.score),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(pl_res.index),
+                                      np.asarray(jnp_res.index))
+        np.testing.assert_array_equal(np.asarray(pl_res.hit),
+                                      np.asarray(jnp_res.hit))
+        # tenant c's region is empty: those rows are structural misses
+        c_rows = np.asarray(tid_mix) == 2
+        assert np.isneginf(np.asarray(pl_res.score)[c_rows]).all()
+        assert not np.asarray(pl_res.hit)[c_rows].any()
+        # cross-checks: scores are cosine-range (int8 x127 bug regression)
+        finite = np.asarray(pl_res.score)[~c_rows]
+        assert (np.abs(finite) <= 1.01).all()

@@ -220,6 +220,61 @@ class TestIsolation:
         res, rt = c.step(rt, emb, vals, lens, 0.0)
         assert rt.tenancy is None and int(res.hit.sum()) == 0
 
+    def test_empty_region_tenant_is_structural_miss(self):
+        """Satellite: a tenant whose region has zero live slots gets
+        (-inf, -1, no hit) — not an arbitrary slot with a masked score."""
+        reg = TenantRegistry.uniform(["seeded", "empty"])
+        c, cfg = mk_cache(registry=reg)
+        rt = c.init()
+        emb, vals, lens = corpus(jax.random.PRNGKey(0), 4, cfg.dim)
+        rt = c.insert(rt, emb, vals, lens, 0.0,
+                      tenant_id=jnp.zeros((4,), jnp.int32))
+        res, rt = c.lookup(rt, emb, 1.0,
+                           tenant_id=jnp.ones((4,), jnp.int32))
+        assert bool((np.asarray(res.score) == -np.inf).all())
+        assert not bool(res.hit.any())
+        assert bool((np.asarray(res.topk_index) == -1).all())
+        assert bool((np.asarray(res.topk_score) == -np.inf).all())
+
+    def test_ivf_index_under_tenancy_matches_exact(self):
+        """The interval operands flow through ANY Index plugin: IVF with
+        full probing agrees with exact search on a partitioned cache —
+        isolation included (a cosine-1.0 duplicate in the other region is
+        invisible on both paths)."""
+        from repro.core.index import IVFIndex
+        reg = TenantRegistry.uniform(["a", "b"])
+        cap, dim = 128, 32
+        cfg = CacheConfig(dim=dim, capacity=cap, value_len=8, ttl=None)
+        part = reg.partition(cap)
+        emb, vals, lens = corpus(jax.random.PRNGKey(0), 8, dim)
+        ta = jnp.zeros((8,), jnp.int32)
+        tb = jnp.ones((8,), jnp.int32)
+        probe = emb + 0.05 * jax.random.normal(jax.random.PRNGKey(1),
+                                               emb.shape)
+        results = {}
+        for name, index in (
+                ("exact", None),
+                ("ivf", IVFIndex(ncentroids=4, nprobe=4, bucket_cap=cap,
+                                 topk=4))):
+            c = SemanticCache(cfg, index=index, partition=part)
+            rt = c.init()
+            rt = c.insert(rt, emb, vals, lens, 0.0, tenant_id=ta)
+            rt = c.refit(rt, 0.0, jax.random.PRNGKey(2))
+            res_a, rt = c.lookup(rt, probe, 1.0, tenant_id=ta)
+            res_b, rt = c.lookup(rt, probe, 1.0, tenant_id=tb)
+            results[name] = (res_a, res_b)
+        ex_a, ex_b = results["exact"]
+        iv_a, iv_b = results["ivf"]
+        np.testing.assert_array_equal(np.asarray(ex_a.index),
+                                      np.asarray(iv_a.index))
+        np.testing.assert_allclose(np.asarray(ex_a.score),
+                                   np.asarray(iv_a.score), rtol=1e-5,
+                                   atol=1e-5)
+        # tenant b sees nothing on either path: cross-tenant isolation
+        for res in (ex_b, iv_b):
+            assert bool((np.asarray(res.score) == -np.inf).all())
+            assert not bool(res.hit.any())
+
 
 # --------------------------------------------------------------------- #
 # one compiled program + padding hygiene (engine)
