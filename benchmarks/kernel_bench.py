@@ -102,6 +102,114 @@ def masked_lookup_scaling():
     return rows, {}
 
 
+def fused_ivf_bench():
+    """Fused IVF candidate kernel vs the jnp gather path (DESIGN.md §15).
+
+    On this CPU host we time the jnp IVF search (the path the kernel
+    replaces; interpret-mode kernel timings are Python-bound and not
+    meaningful) and report the *analytic per-lookup HBM operand bytes* of
+    the candidate stage on TPU, per path:
+
+      jnp gather path:  the (B, M, d) gathered-candidate tensor
+                        materializes in HBM — slab rows are read by the
+                        gather (slab dtype), the gathered tensor is written
+                        (f32 after dequant) and re-read by the einsum:
+                        B*M*d * (s + 4 + 4) bytes.
+      fused kernel:     candidate rows stream HBM -> VMEM once (slab
+                        dtype) and are scored from VMEM; the (B, M, d)
+                        tensor never exists in HBM: B*M*d * s bytes
+                        (+ O(B*M) id operands, counted).
+
+    s = slab itemsize. The headline row is the int8 slab — the serving
+    configuration (§14.3: the int8 slab exists precisely because this
+    lookup is memory-bound) — where fused/jnp = 1/9; the f32 slab row
+    (4/12 = 1/3) is reported alongside. Masked-candidate DMA skip and
+    dedup only lower the fused side further; the analytic numbers ignore
+    both (worst case for the kernel).
+    """
+    from repro.core.index import IVFIndex
+
+    b, d, nprobe, cap, c = 128, 768, 8, 128, 64   # the §15 default config
+    n = c * cap                                   # slab fully bucketable
+    m = nprobe * cap
+    rng = jax.random.PRNGKey(0)
+    keys = jax.random.normal(rng, (n, d))
+    keys = keys / jnp.linalg.norm(keys, axis=1, keepdims=True)
+    keys8 = jnp.clip(jnp.round(keys * 127.0), -127, 127).astype(jnp.int8)
+    valid = jnp.ones((n,), bool)
+    queries = keys[:b] + 0.05 * jax.random.normal(jax.random.PRNGKey(1),
+                                                  (b, d))
+    queries = queries / jnp.linalg.norm(queries, axis=1, keepdims=True)
+    ivf = IVFIndex(ncentroids=c, nprobe=nprobe, bucket_cap=cap, topk=4,
+                   backend="jnp")
+    st = ivf.fit(keys, valid, jax.random.PRNGKey(2))
+
+    rows = []
+    id_bytes = 2 * b * m * 4          # cand ids: SMEM + VMEM copies
+    for label, slab, s_item in (("int8", keys8, 1), ("f32", keys, 4)):
+        f = jax.jit(lambda q, kk: ivf.search(st, q, kk, valid))
+        t = _time(f, queries, slab)
+        jnp_bytes = b * m * d * (s_item + 4 + 4)
+        fused_bytes = b * m * d * s_item + id_bytes
+        name = ("kernel/ivf_fused_default" if label == "int8"
+                else f"kernel/ivf_fused_{label}")
+        rows.append({
+            "name": name,
+            "us_per_call": t * 1e6,
+            "derived": (f"slab={label} cpu_jnp_us={t*1e6:.0f} "
+                        f"jnp_gather_bytes={jnp_bytes} "
+                        f"fused_bytes={fused_bytes} "
+                        f"fused_over_jnp={fused_bytes/jnp_bytes:.3f} "
+                        f"B={b} d={d} nprobe={nprobe} cap={cap}"),
+        })
+    return rows, {}
+
+
+def ivf_crossover(full: bool = True):
+    """Exact-vs-IVF wall-clock crossover over slab size N (DESIGN.md §15.5).
+
+    Exact scoring is one dense (B, d) x (d, N) GEMM — unbeatable while the
+    slab fits the arithmetic budget; IVF's probe + gather only pays off
+    once N is large enough that scoring everything costs more than probing
+    nprobe/C of it. This sweep times both jnp paths on the host (same
+    contract as the kernels) and reports IVF recall@1 at each point."""
+    from repro.core.index import ExactIndex, ExactState, IVFIndex
+
+    d, b, c_frac = 384, 32, 64
+    sizes = (4096, 16384, 65536) + ((262144,) if full else ())
+    rows = []
+    for n in sizes:
+        rng = jax.random.PRNGKey(n)
+        keys = jax.random.normal(rng, (n, d))
+        keys = keys / jnp.linalg.norm(keys, axis=1, keepdims=True)
+        valid = jnp.ones((n,), bool)
+        queries = keys[:b] + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(1), (b, d))
+        queries = queries / jnp.linalg.norm(queries, axis=1, keepdims=True)
+        c = min(512, max(16, n // c_frac))
+        ivf = IVFIndex(ncentroids=c, nprobe=8,
+                       bucket_cap=max(128, 2 * n // c), topk=1,
+                       backend="jnp")
+        st = ivf.fit(keys, valid, jax.random.PRNGKey(2))
+        fi = jax.jit(lambda q: ivf.search(st, q, keys, valid))
+        fe = jax.jit(lambda q: ExactIndex(topk=1, backend="jnp").search(
+            ExactState(), q, keys, valid))
+        t_ivf = _time(fi, queries)
+        t_ex = _time(fe, queries)
+        _, i_ivf = fi(queries)
+        _, i_ex = fe(queries)
+        recall = float(jnp.mean((i_ivf[:, 0] == i_ex[:, 0]
+                                 ).astype(jnp.float32)))
+        rows.append({
+            "name": f"kernel/ivf_crossover_n{n}",
+            "us_per_call": t_ivf * 1e6,
+            "derived": (f"ivf_us={t_ivf*1e6:.0f} exact_us={t_ex*1e6:.0f} "
+                        f"speedup={t_ex/t_ivf:.2f}x recall@1={recall:.3f} "
+                        f"ncentroids={c}"),
+        })
+    return rows, {}
+
+
 def hnsw_vs_exact():
     """Paper-faithful HNSW vs the TPU-native exact scoring (DESIGN.md §3)."""
     import numpy as np

@@ -6,18 +6,26 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig3/*          — latency with vs without cache
   sec5.3/*        — threshold sweep 0.60..0.90
   sec2.7/*        — TTL behaviour
-  kernel/*        — scoring-kernel scaling (slab 4k..512k)
+  kernel/*        — scoring-kernel scaling (slab 4k..512k); fused-IVF
+                    operand bytes + exact-vs-IVF crossover (DESIGN.md §15)
   design3/*       — HNSW (paper algorithm) vs exact MXU scoring
   beyond/*        — IVF index (beyond-paper ANN); fused runtime step()
   roofline/*      — per (arch x shape) dominant roofline terms (from dry-run)
   dryrun/*        — dry-run coverage counters
 
 Run ``python -m benchmarks.run --quick`` for a reduced-size pass.
+``--json PATH`` additionally writes the machine-readable artifact
+``{"meta": {...}, "rows": [...], "errors": [...]}`` — the BENCH trajectory
+format CI smokes and perf PRs diff against (every row keeps ``name``,
+``us_per_call`` and the parsed ``key=value`` pairs of ``derived``).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
+import time
 
 
 def _emit(rows):
@@ -26,12 +34,56 @@ def _emit(rows):
         sys.stdout.flush()
 
 
+def _derived_fields(derived: str) -> dict:
+    """Parse the human-oriented ``key=value`` pairs (non-pairs are kept
+    verbatim under ``notes``) so JSON consumers never re-parse strings."""
+    fields, notes = {}, []
+    for tok in str(derived).split():
+        if "=" in tok:
+            k, v = tok.split("=", 1)
+            try:
+                fields[k] = json.loads(v)
+            except (json.JSONDecodeError, ValueError):
+                fields[k] = v
+        else:
+            notes.append(tok)
+    if notes:
+        fields["notes"] = " ".join(notes)
+    return fields
+
+
+def _write_json(path: str, rows: list, errors: list, argv: list) -> None:
+    import jax
+
+    doc = {
+        "meta": {
+            "argv": argv,
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+            "unix_time": time.time(),
+        },
+        "rows": [{
+            "name": r["name"],
+            "us_per_call": float(r["us_per_call"]),
+            "derived": _derived_fields(r["derived"]),
+            "derived_raw": str(r["derived"]),
+        } for r in rows],
+        "errors": errors,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {len(doc['rows'])} rows -> {path}", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced dataset sizes (CI-friendly)")
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark group names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write a machine-readable results artifact")
     args = ap.parse_args()
     full = not args.quick
 
@@ -56,6 +108,8 @@ def main() -> None:
         ("tenancy", lambda: paper_tables.tenant_table(full=full)),
         ("kernel", kernel_bench.cosine_topk_scaling),
         ("kernel-masked", kernel_bench.masked_lookup_scaling),
+        ("kernel-ivf", kernel_bench.fused_ivf_bench),
+        ("kernel-crossover", lambda: kernel_bench.ivf_crossover(full=full)),
         ("design3", kernel_bench.hnsw_vs_exact),
         ("beyond", kernel_bench.ivf_bench),
         ("beyond-fused", kernel_bench.fused_step_bench),
@@ -63,14 +117,20 @@ def main() -> None:
         ("dryrun", roofline_report.dryrun_summary_rows),
     ]
 
+    all_rows, errors = [], []
     for name, fn in groups:
         if args.only and args.only not in name:
             continue
         try:
             rows, _ = fn()
             _emit(rows)
+            all_rows.extend(rows)
         except Exception as e:  # noqa: BLE001 — keep the harness going
             print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+            errors.append({"group": name, "error": f"{type(e).__name__}: {e}"})
+
+    if args.json:
+        _write_json(args.json, all_rows, errors, sys.argv[1:])
 
 
 if __name__ == "__main__":

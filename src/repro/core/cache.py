@@ -142,7 +142,12 @@ class SemanticCache:
         On a partitioned cache each row searches only its own tenant's
         region, passed to the index as per-row ``(start, size)`` interval
         operands (§13.2, §14) so the TPU path stays on the fused
-        interval-masked kernel — no (B, N) mask is ever materialized."""
+        interval-masked kernel — no (B, N) mask is ever materialized.
+        The same transparency holds for IVF: ``IVFIndex.search`` applies
+        the interval to its gathered candidate ids and runs the candidate
+        stage on the fused gather kernel (§15), so neither a (B, N) mask
+        nor the (B, M, d) gathered-candidate tensor ever touches HBM —
+        Exact and IVF caches serve the fused ``step()`` alike."""
         tenant_id = self._require_tenants(tenant_id)
         state, stats = runtime.state, runtime.stats
         b = queries.shape[0]

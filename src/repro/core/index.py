@@ -12,7 +12,17 @@ Two TPU-native index structures replace the paper's HNSW graph:
   centroid scoring and the in-cluster scoring are GEMMs. Cluster membership
   is a padded (ncentroids, bucket_cap) table rebuilt by ``refit`` —
   the analogue of the paper's periodic HNSW "rebalancing" (§2.4) — and kept
-  fresh between rebuilds by ``absorb`` (incremental assignment of new rows).
+  fresh between rebuilds by ``absorb`` (incremental assignment of new rows,
+  vectorized as a sort-by-centroid scatter). Search runs in two stages that
+  both hit fused Pallas kernels on TPU (DESIGN.md §15): the centroid probe
+  goes through ``ops.cosine_topk`` (§3's kernel, centroids as the slab) and
+  the candidate stage through ``ops.ivf_topk``, which gathers the probed
+  slab rows HBM -> VMEM *inside* the kernel — the (B, M, d) gathered-
+  candidate tensor of the jnp formulation never materializes in HBM. All
+  visibility (bucket validity, aliveness, tenancy intervals, per-row
+  duplicate suppression) is folded into the candidate ids by
+  ``IVFIndex.candidates`` so the jnp oracle and the kernel share one
+  contract.
 
 Both conform to the ``repro.core.runtime.Index`` protocol — uniform
 ``init(config) / search(istate, ...) / absorb(istate, ...) /
@@ -112,15 +122,72 @@ class IVFState:
     bucket_valid: Array  # (C, cap) bool
 
 
+def dedup_candidates(cand: Array, visible: Array) -> Array:
+    """Suppress per-row duplicate candidate slot ids (DESIGN.md §15.3).
+
+    A slot recycled across buckets (``absorb`` leaves stale pointers behind
+    by design) can reach ``search`` twice in one row's candidate list with
+    *identical* scores — and without suppression would occupy two of the k
+    result rows. Returns ``visible`` with every duplicate of an
+    already-visible slot id turned off, keeping the *first visible*
+    occurrence per row (matching ``top_k``'s lowest-position tie-break).
+    Invisible occurrences never suppress a visible one.
+
+    cand: (B, M) int32 slot ids; visible: (B, M) bool. O(B·M log M) — a
+    sort over int32 ids, noise next to the candidate gather it protects.
+    """
+    b, m = cand.shape
+    pos = jnp.arange(m, dtype=jnp.int32)[None, :]
+    # invisible entries get unique sentinels so they never collide with a
+    # real id (slot ids < 2**30) or with each other
+    key = jnp.where(visible, cand, jnp.int32(2 ** 30) + pos)
+    order = jnp.argsort(key, axis=1)                 # stable: earliest first
+    skey = jnp.take_along_axis(key, order, axis=1)
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros((b, 1), bool), skey[:, 1:] == skey[:, :-1]], axis=1)
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    dup = jnp.zeros((b, m), bool).at[rows, order].set(dup_sorted)
+    return visible & ~dup
+
+
+def _absorb_serial(buckets: Array, bucket_valid: Array, assign: Array,
+                   slots: Array, mask: Array, cap: int
+                   ) -> tuple[Array, Array]:
+    """Reference serial absorb: the original O(B) ``fori_loop`` scatter.
+
+    Kept as the semantic oracle for the vectorized scatter in
+    ``IVFIndex.absorb`` (parity-tested): rows append *in batch order* to
+    their assigned bucket's fill point; once a bucket is full, later rows
+    overwrite the tail slot (last writer wins).
+    """
+    def body(i, carry):
+        buckets, bucket_valid = carry
+        c = assign[i]
+        fill = jnp.sum(bucket_valid[c]).astype(jnp.int32)
+        pos = jnp.minimum(fill, cap - 1)
+        do = mask[i]
+        buckets = buckets.at[c, pos].set(
+            jnp.where(do, slots[i].astype(jnp.int32), buckets[c, pos]))
+        bucket_valid = bucket_valid.at[c, pos].set(
+            jnp.where(do, True, bucket_valid[c, pos]))
+        return buckets, bucket_valid
+
+    return jax.lax.fori_loop(0, slots.shape[0], body, (buckets, bucket_valid))
+
+
 @dataclasses.dataclass(frozen=True)
 class IVFIndex:
-    """Inverted-file ANN. ``refit`` = k-means rebuild; ``search`` = 2 GEMMs."""
+    """Inverted-file ANN. ``refit`` = k-means rebuild; ``search`` = probe
+    GEMM + fused candidate gather/score (``backend='auto'|'jnp'|'pallas'``
+    pins the candidate stage for parity tests — 'auto' follows the ops
+    dispatch: Pallas on TPU, jnp elsewhere)."""
 
     ncentroids: int = 64
     nprobe: int = 8
     bucket_cap: int = 512
     topk: int = 4
     kmeans_iters: int = 10
+    backend: str = "auto"
 
     def init(self, config: CacheConfig) -> IVFState:
         """Empty index: deterministic random unit centroids, all-invalid
@@ -201,30 +268,85 @@ class IVFIndex:
         Each new key is appended to its nearest centroid's bucket (overwriting
         the bucket tail when full — those entries are the farthest members,
         restored at the next ``refit``). Stale references to a recycled slot
-        elsewhere in the table are harmless: search always scores against the
-        *live* slab key, so a stale pointer can at worst duplicate a
-        candidate, never return a wrong score.
+        elsewhere in the table cost nothing at search time: ``candidates``
+        scores against the *live* slab key and suppresses per-row duplicates
+        (``dedup_candidates``), so a stale pointer can neither return a wrong
+        score nor occupy two of the k result rows.
+
+        Vectorized (DESIGN.md §15.4): instead of the serial O(B) scatter
+        (``_absorb_serial``, kept as the parity oracle) the batch is
+        stable-sorted by assigned centroid, each row's in-bucket position is
+        ``fill + rank`` (rank = position within its centroid's run, so
+        batch order is preserved within a bucket), positions clamp to the
+        bucket tail, and of the rows clamped onto one tail slot only the
+        last in batch order writes — one gather, one sort, two scatters,
+        no sequential dependency.
         """
         q = l2_normalize(keys)
-        assign = jnp.argmax(jnp.einsum("bd,cd->bc", q, istate.centroids), axis=-1)
-        cap = self.bucket_cap
-
-        def body(i, carry):
-            buckets, bucket_valid = carry
-            c = assign[i]
-            fill = jnp.sum(bucket_valid[c]).astype(jnp.int32)
-            pos = jnp.minimum(fill, cap - 1)
-            do = mask[i]
-            buckets = buckets.at[c, pos].set(
-                jnp.where(do, slots[i].astype(jnp.int32), buckets[c, pos]))
-            bucket_valid = bucket_valid.at[c, pos].set(
-                jnp.where(do, True, bucket_valid[c, pos]))
-            return buckets, bucket_valid
-
-        buckets, bucket_valid = jax.lax.fori_loop(
-            0, slots.shape[0], body, (istate.buckets, istate.bucket_valid))
+        assign = jnp.argmax(
+            jnp.einsum("bd,cd->bc", q, istate.centroids), axis=-1)
+        cap, c = self.bucket_cap, self.ncentroids
+        b = slots.shape[0]
+        idx = jnp.arange(b, dtype=jnp.int32)
+        # masked-out rows sort to a sentinel group past every real centroid
+        group = jnp.where(mask, assign.astype(jnp.int32), jnp.int32(c))
+        order = jnp.argsort(group)                     # stable: batch order
+        sorted_g = group[order]
+        is_start = jnp.concatenate(
+            [jnp.array([True]), sorted_g[1:] != sorted_g[:-1]])
+        first = jax.lax.associative_scan(                # cummax: start of
+            jnp.maximum, jnp.where(is_start, idx, 0))    # each group's run
+        rank = idx - first                               # 0,1,2,... per group
+        fill0 = jnp.sum(istate.bucket_valid, axis=1).astype(jnp.int32)  # (C,)
+        pos = jnp.minimum(fill0[jnp.minimum(sorted_g, c - 1)] + rank, cap - 1)
+        # clamped rows pile onto the tail slot; the serial loop's last writer
+        # wins, which in sorted space is the last row of the centroid's run
+        is_end = jnp.concatenate(
+            [sorted_g[1:] != sorted_g[:-1], jnp.array([True])])
+        write = (sorted_g < c) & ((pos < cap - 1) | is_end)
+        tgt = jnp.where(write, sorted_g, jnp.int32(c))   # OOB -> dropped
+        vals = slots[order].astype(jnp.int32)
+        buckets = istate.buckets.at[tgt, pos].set(vals, mode="drop")
+        bucket_valid = istate.bucket_valid.at[tgt, pos].set(True, mode="drop")
         return IVFState(centroids=istate.centroids, buckets=buckets,
                         bucket_valid=bucket_valid)
+
+    def candidates(self, istate: IVFState, q: Array, valid: Array, *,
+                   interval: tuple[Array, Array] | None = None) -> Array:
+        """Probe + visibility: (B, d) normalized queries -> (B, M) int32
+        candidate slot ids, M = nprobe * bucket_cap, with -1 marking every
+        invisible candidate. This is the single source of truth both search
+        backends consume (``ref.ivf_topk_ref`` and the fused kernel), so
+        their parity is structural, not coincidental.
+
+        The centroid probe runs through ``ops.cosine_topk`` — §3's fused
+        kernel on TPU, the jnp oracle elsewhere — with an all-true mask
+        (centroids are always scoreable; dead buckets are filtered per
+        candidate below). Folded into the ids, in order: bucket-slot
+        validity, slab aliveness (``valid``, (N,) shared or (B, N)
+        per-row), the per-row tenancy ``interval`` (O(B·M) compares on the
+        gathered ids — never a (B, N) mask), and per-row duplicate
+        suppression (``dedup_candidates``)."""
+        from repro.kernels import ops  # deferred: kernels are optional deps
+
+        ivf = istate
+        b = q.shape[0]
+        p = min(self.nprobe, self.ncentroids)
+        always = jnp.ones((ivf.centroids.shape[0],), dtype=bool)
+        _, probe = ops.cosine_topk(q, ivf.centroids, always, k=p)  # (B, P)
+        cand = ivf.buckets[probe].reshape(b, -1)          # (B, M)
+        visible = ivf.bucket_valid[probe].reshape(b, -1)  # (B, M)
+        safe = jnp.maximum(cand, 0)
+        if valid.ndim == 2:
+            visible = visible & jnp.take_along_axis(valid, safe, axis=1)
+        else:
+            visible = visible & valid[safe]
+        if interval is not None:
+            starts, sizes = interval
+            visible = visible & (safe >= starts[:, None]) \
+                & (safe < (starts + sizes)[:, None])
+        visible = dedup_candidates(cand, visible)
+        return jnp.where(visible, cand, -1).astype(jnp.int32)
 
     def search(self, istate: IVFState, queries: Array, keys: Array,
                valid: Array, *, interval: tuple[Array, Array] | None = None
@@ -236,38 +358,18 @@ class IVFIndex:
         region on top of a shared (N,) ``valid`` (tenancy: each query sees
         only its own region's slots, whichever buckets they landed in) —
         applied to the gathered candidate slot ids, O(B·M), never a (B, N)
-        mask. Rows with no visible live candidate return (-inf, -1)."""
-        ivf = istate
+        mask. Rows with no visible live candidate return (-inf, -1).
+
+        Both stages stay fused on TPU (DESIGN.md §15): the probe on §3's
+        ``cosine_topk`` kernel and the candidate stage on ``ops.ivf_topk``,
+        which gathers probed slab rows HBM -> VMEM in-kernel — the
+        (B, M, d) gathered tensor of the jnp path never touches HBM."""
+        from repro.kernels import ops  # deferred: kernels are optional deps
+
         q = l2_normalize(queries)
-        csims = jnp.einsum("bd,cd->bc", q, ivf.centroids)      # (B, C)
-        _, probe = jax.lax.top_k(csims, min(self.nprobe, self.ncentroids))  # (B, P)
-        cand = ivf.buckets[probe]          # (B, P, cap)
-        cand_ok = ivf.bucket_valid[probe]  # (B, P, cap)
-        b = q.shape[0]
-        cand_flat = cand.reshape(b, -1)
-        ok_flat = cand_ok.reshape(b, -1)
-        safe = jnp.maximum(cand_flat, 0)
-        cand_keys = keys[safe]                                  # (B, M, d)
-        if cand_keys.dtype == jnp.int8:
-            # uniform slab dequant (store.insert: round(normalized * 127));
-            # scoring raw int8 would inflate every score x127
-            cand_keys = cand_keys.astype(jnp.float32) / 127.0
-        sims = jnp.einsum("bd,bmd->bm", q, cand_keys,
-                          preferred_element_type=jnp.float32)
-        if valid.ndim == 2:
-            alive = jnp.take_along_axis(valid, safe, axis=1) & ok_flat
-        else:
-            alive = valid[safe] & ok_flat
-        if interval is not None:
-            starts, sizes = interval
-            alive = alive & (safe >= starts[:, None]) \
-                & (safe < (starts + sizes)[:, None])
-        sims = jnp.where(alive, sims, NEG_INF)
-        k = min(self.topk, sims.shape[-1])
-        top_s, top_m = jax.lax.top_k(sims, k)
-        top_slot = jnp.take_along_axis(cand_flat, top_m, axis=-1)
-        top_slot = jnp.where(top_s > NEG_INF, top_slot, -1)
-        return top_s, top_slot.astype(jnp.int32)
+        cand = self.candidates(istate, q, valid, interval=interval)
+        k = min(self.topk, cand.shape[1])
+        return ops.ivf_topk(q, keys, cand, k=k, backend=self.backend)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))

@@ -8,6 +8,10 @@ cosine_topk       — fused masked cosine-similarity + top-k over the cache slab
                     non-contiguous visibility), each with f32 and int8 slabs
 quant_cosine_topk — int8-slab variant with per-row dequant scales
                     (beyond-paper: 4x HBM traffic cut)
+ivf_topk          — fused IVF candidate search: probed slab rows gathered
+                    HBM -> VMEM *inside* the kernel and scored with a
+                    running top-k merge, so the (B, M, d) gathered-candidate
+                    tensor never materializes in HBM (DESIGN.md §15)
 flash_attention   — online-softmax blockwise attention for the miss path
                     (prefill), GQA-aware, causal/sliding-window
 decode_attention  — single-token attention over the (optionally int8) KV
@@ -26,9 +30,11 @@ from repro.kernels.cosine_topk import (cosine_topk_interval_pallas,
                                        quantize_keys)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.ivf_topk import ivf_topk_pallas
 
 __all__ = ["ops", "ref", "cosine_topk_pallas",
            "cosine_topk_interval_pallas", "cosine_topk_masked_pallas",
            "quant_cosine_topk_pallas", "quant_cosine_topk_interval_pallas",
            "quant_cosine_topk_masked_pallas", "quantize_keys",
-           "flash_attention_pallas", "decode_attention_pallas"]
+           "ivf_topk_pallas", "flash_attention_pallas",
+           "decode_attention_pallas"]

@@ -1,0 +1,184 @@
+"""Fused Pallas IVF candidate search — in-kernel gather + scoring (DESIGN.md §15).
+
+The IVF index (``repro.core.index.IVFIndex``) probes ``nprobe`` buckets per
+query and scores the probed members. The jnp formulation materializes the
+gathered candidates as a ``(B, M, d)`` tensor in HBM (``keys[cand]``) before
+a separate einsum: at B=128, M=nprobe*cap=1024, d=768 that is ~400 MB of
+slab rows written back to HBM and re-read — 3x the unavoidable traffic —
+purely to satisfy XLA's gather-then-contract structure. This kernel removes
+the round trip: candidate slab rows are DMA'd HBM -> VMEM *inside* the
+kernel, scored on the MXU from VMEM, and folded into a running top-k, so
+the ``(B, M, d)`` tensor never exists in HBM and the slab bytes are read
+exactly once (streamed), skipping masked candidates entirely.
+
+Tiling:
+  grid = (B/BB, M/BM); the candidate axis M is minor (sequential), so the
+  (BB, k) running top-k stays resident in VMEM across candidate tiles —
+  the same running-merge structure as ``cosine_topk`` (§3), with the key
+  *block* stream replaced by a gathered key *tile* stream.
+
+Per grid step:
+  1. the (BB, BM) tile of candidate slot ids arrives twice: an SMEM copy
+     (scalar reads drive the DMA loop) and a VMEM copy (vector mask +
+     result ids). Invisible candidates — dead bucket slots, other tenants'
+     rows, TTL-expired slots, per-row duplicates — are pre-masked to -1 by
+     the caller (``IVFIndex.candidates``), so visibility is one compare.
+  2. gather: for each (row, candidate) with id >= 0, an async copy
+     ``keys[id] -> scratch[row, cand]`` (ANY -> VMEM). All BB*BM copies are
+     started before any is awaited — one semaphore counts completions — so
+     the DMA engine sees the whole tile's worth of row fetches at once.
+     Candidates with id < 0 start no DMA: an empty bucket costs nothing.
+  3. score: the gathered (BB, BM, d) tile is dequantized in VMEM (int8
+     slabs: uniform ``key_scale=1/127`` exactly as §14.3) and contracted
+     row-by-row on the MXU — BB (1, d) x (d, BM) GEMMs.
+  4. merge: masked scores (id < 0 -> NEG_INF) merge into the running
+     (BB, k) top-k via the same k-step argmax-and-suppress as §3.
+
+VMEM budget (BB=8, BM=128): scratch BB*BM*d bytes — 3.0 MiB at d=768 f32,
+6.0 MiB at d=1536 f32, 1.5 MiB at d=1536 int8 — plus the (BB, d) query
+block and (BB, BM) score tile; well under the 16 MiB/core ceiling. BB is
+deliberately small: the scratch tile scales with BB*BM*d, and the batch
+grid axis is parallel (independent row blocks), so small BB costs grid
+steps, not occupancy.
+
+Contract (shared with ``ref.ivf_topk_ref``): candidates with id -1 are
+invisible; rows whose candidates are all -1 return exactly ``(-inf, -1)``
+(§14.4). Returned ids are *slot ids* (the candidate values), not candidate
+positions. int8 slabs dequant in-kernel via the uniform static
+``key_scale = 1/127`` (the slab's symmetric scale from ``store.insert``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.cosine_topk import NEG_INF, _iter_topk, _pad_to
+
+Array = jax.Array
+
+
+def _ivf_topk_kernel(q_ref, ids_smem, ids_vmem, k_ref, ts_ref, ti_ref,
+                     scratch, sem, *, k: int, block_b: int, block_m: int,
+                     key_scale: float | None):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        ts_ref[...] = jnp.full_like(ts_ref, NEG_INF)
+        ti_ref[...] = jnp.full_like(ti_ref, -1)
+
+    # -- gather phase: per-candidate row DMAs, all in flight before any wait.
+    # The copy descriptors are reconstructed in the wait pass (same src/dst/
+    # semaphore triple) — the standard start-here-wait-there Pallas pattern.
+    def _copy(r, c):
+        idx = ids_smem[r, c]
+        return pltpu.make_async_copy(
+            k_ref.at[pl.ds(idx, 1), :],
+            scratch.at[pl.ds(r * block_m + c, 1), :],
+            sem)
+
+    for r in range(block_b):
+        def _start(c, _, r=r):
+            idx = ids_smem[r, c]
+
+            @pl.when(idx >= 0)                      # masked candidate: no DMA
+            def _():
+                _copy(r, c).start()
+            return 0
+        jax.lax.fori_loop(0, block_m, _start, 0)
+    for r in range(block_b):
+        def _wait(c, _, r=r):
+            idx = ids_smem[r, c]
+
+            @pl.when(idx >= 0)
+            def _():
+                _copy(r, c).wait()
+            return 0
+        jax.lax.fori_loop(0, block_m, _wait, 0)
+
+    # -- score phase: dequant in VMEM, then BB row-GEMMs on the MXU.
+    kb = scratch[...].astype(jnp.float32)           # (BB*BM, d)
+    if key_scale is not None:
+        kb = kb * key_scale                         # uniform int8 dequant
+    rows = []
+    for r in range(block_b):
+        qr = q_ref[pl.ds(r, 1), :]                  # (1, d)
+        kr = kb[r * block_m:(r + 1) * block_m]      # (BM, d)
+        rows.append(jax.lax.dot_general(
+            qr, kr, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32))    # (1, BM)
+    s = jnp.concatenate(rows, axis=0)               # (BB, BM)
+
+    ids = ids_vmem[...]                             # (BB, BM) int32, -1 masked
+    s = jnp.where(ids >= 0, s, NEG_INF)             # un-DMA'd scratch rows too
+
+    # -- merge phase: block top-k, then merge with the running (BB, k) set.
+    blk_s, blk_i = _iter_topk(s, ids, k)
+    run_s, run_i = ts_ref[...], ti_ref[...]
+    cand_s = jnp.concatenate([run_s, blk_s], axis=1)    # (BB, 2k)
+    cand_i = jnp.concatenate([run_i, blk_i], axis=1)
+    new_s, new_i = _iter_topk(cand_s, cand_i, k)
+    ts_ref[...] = new_s
+    ti_ref[...] = new_i
+
+
+_STATIC = ("k", "block_b", "block_m", "interpret", "key_scale")
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def ivf_topk_pallas(queries: Array, keys: Array, cand: Array, *, k: int = 4,
+                    block_b: int = 8, block_m: int = 128,
+                    interpret: bool = False, key_scale: float | None = None
+                    ) -> tuple[Array, Array]:
+    """Fused IVF candidate gather + score + top-k. See module docstring.
+
+    queries (B, d) f32 normalized; keys (N, d) f32|bf16|int8 — the *whole*
+    slab, left in HBM (ANY memory space) and gathered row-wise in-kernel;
+    cand (B, M) int32 candidate slot ids with -1 marking invisible
+    candidates (dead bucket slots, foreign tenants, expired, duplicates).
+    Returns (scores (B, k) f32, slot ids (B, k) int32, -1 where empty).
+    """
+    b, d = queries.shape
+    m = cand.shape[1]
+    bb = min(block_b, max(1, b))
+    bm = min(block_m, m)
+    b_pad = -(-b // bb) * bb
+    m_pad = -(-m // bm) * bm
+    if keys.dtype == jnp.int8 and key_scale is None:
+        key_scale = 1.0 / 127.0  # uniform slab dequant (§14.3)
+
+    q = _pad_to(queries.astype(jnp.float32), b_pad, 0, 0.0)
+    ids = _pad_to(_pad_to(cand.astype(jnp.int32), b_pad, 0, -1), m_pad, 1, -1)
+
+    kernel = functools.partial(_ivf_topk_kernel, k=k, block_b=bb, block_m=bm,
+                               key_scale=key_scale)
+    ts, ti = pl.pallas_call(
+        kernel,
+        grid=(b_pad // bb, m_pad // bm),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, bm), lambda i, j: (i, j),
+                         memory_space=pltpu.TPUMemorySpace.SMEM),
+            pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((b_pad, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bb * bm, d), keys.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(q, ids, ids, keys)
+    ts = jnp.where(ts <= NEG_INF, -jnp.inf, ts)
+    return ts[:b], ti[:b]

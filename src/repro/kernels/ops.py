@@ -15,6 +15,10 @@ Per-row visibility (DESIGN.md §14) dispatches by mask shape:
   * ``valid`` (B, N) -> dense blocked-mask kernel — the general path for
     non-contiguous visibility.
 
+``ivf_topk`` dispatches the fused IVF candidate kernel (in-kernel HBM ->
+VMEM gather of probed slab rows, DESIGN.md §15) the same way, with an
+explicit ``backend=`` override for parity tests.
+
 int8 slabs dequant *inside* the kernels (uniform 1/127 — the slab's
 symmetric scale from ``store.insert``) and inside the oracles, so no
 dispatch path ever scores raw int8 keys.
@@ -32,6 +36,7 @@ from repro.kernels.cosine_topk import (cosine_topk_interval_pallas,
                                        quant_cosine_topk_masked_pallas,
                                        quant_cosine_topk_pallas,
                                        quantize_keys)
+from repro.kernels.ivf_topk import ivf_topk_pallas
 
 Array = jax.Array
 
@@ -94,5 +99,25 @@ def quant_cosine_topk(queries: Array, keys_q: Array, scales: Array,
     return ref.quant_cosine_topk_ref(queries, keys_q, scales, valid, k)
 
 
+def ivf_topk(queries: Array, keys: Array, cand: Array, *, k: int = 4,
+             backend: str = "auto") -> tuple[Array, Array]:
+    """Fused IVF candidate search with automatic backend dispatch (§15).
+
+    ``cand`` is (B, M) int32 candidate slot ids with -1 marking invisible
+    candidates (the caller — ``IVFIndex.candidates`` — folds bucket
+    validity, aliveness, tenancy intervals and per-row dedup into the ids).
+    On TPU (or under ``REPRO_PALLAS_INTERPRET=1``) the fused kernel gathers
+    the candidate slab rows HBM -> VMEM in-kernel, so the (B, M, d) gathered
+    tensor of the jnp oracle never materializes in HBM. ``backend`` is
+    ``'auto' | 'jnp' | 'pallas'`` — explicit values pin a path for parity
+    tests and benchmarks.
+    """
+    if backend == "pallas" or (
+            backend == "auto" and (_use_pallas() or _interpret_requested())):
+        return ivf_topk_pallas(queries, keys, cand, k=k,
+                               interpret=not _use_pallas())
+    return ref.ivf_topk_ref(queries, keys, cand, k)
+
+
 __all__ = ["cosine_topk", "cosine_topk_interval", "quant_cosine_topk",
-           "quantize_keys"]
+           "ivf_topk", "quantize_keys"]

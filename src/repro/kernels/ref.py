@@ -10,7 +10,10 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
-NEG_INF = jnp.float32(-jnp.inf)
+# python float, not jnp.float32(...): this module may be first imported
+# *inside* a jit trace (index.py defers its kernels import), and a
+# module-level device constant created under a trace leaks as a tracer
+NEG_INF = float("-inf")
 
 
 def cosine_topk_ref(queries: Array, keys: Array, valid: Array, k: int
@@ -78,6 +81,39 @@ def quant_cosine_topk_interval_ref(queries: Array, keys_q: Array,
     """Interval oracle over a per-row-scale int8 slab."""
     keys = keys_q.astype(jnp.float32) * scales[:, None]
     return cosine_topk_interval_ref(queries, keys, valid, starts, sizes, k)
+
+
+def ivf_topk_ref(queries: Array, keys: Array, cand: Array, k: int
+                 ) -> tuple[Array, Array]:
+    """Oracle for the fused IVF candidate kernel (DESIGN.md §15): gather the
+    candidate rows, score, top-k — the ``(B, M, d)`` HBM materialization the
+    kernel exists to avoid, acceptable here because the oracle defines
+    numerics, not traffic.
+
+    Args:
+      queries: (B, d) float32, assumed L2-normalized.
+      keys: (N, d) slab; int8 is the uniform slab quantization and dequants
+        by 1/127 exactly like ``cosine_topk_ref``.
+      cand: (B, M) int32 candidate slot ids; -1 marks an invisible candidate
+        (dead bucket slot, foreign tenant, expired, per-row duplicate —
+        the caller folds all visibility into the ids, see
+        ``IVFIndex.candidates``).
+      k: neighbours to return.
+    Returns:
+      (scores (B, k) f32 desc-sorted, slot ids (B, k) int32). Rows whose
+      candidates are all -1 return exactly (-inf, -1) — the §14.4 contract.
+    """
+    if keys.dtype == jnp.int8:
+        keys = keys.astype(jnp.float32) / 127.0
+    safe = jnp.maximum(cand, 0)
+    gathered = keys[safe].astype(jnp.float32)            # (B, M, d) — in HBM
+    scores = jnp.einsum("bd,bmd->bm", queries, gathered,
+                        preferred_element_type=jnp.float32)
+    scores = jnp.where(cand >= 0, scores, NEG_INF)
+    vals, pos = jax.lax.top_k(scores, k)
+    ids = jnp.take_along_axis(cand, pos, axis=1)
+    ids = jnp.where(vals > NEG_INF, ids, -1)
+    return vals, ids.astype(jnp.int32)
 
 
 def flash_attention_ref(q: Array, kk: Array, v: Array, *, causal: bool = True,

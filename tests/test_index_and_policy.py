@@ -94,6 +94,51 @@ class TestIVF:
         assert (np.asarray(i_a)[5] == -1).all()
         assert np.isneginf(np.asarray(s_a)[5]).all()
 
+    def test_absorb_vectorized_matches_serial(self):
+        """Satellite parity (DESIGN.md §15.4): the vectorized sort-by-
+        centroid absorb equals the original serial fori_loop scatter —
+        the broad random sweep lives in test_ivf_kernel.py."""
+        from repro.core.index import _absorb_serial
+        from repro.core.similarity import l2_normalize
+        keys = _unit(jax.random.PRNGKey(0), (256, 32))
+        valid = jnp.ones((256,), bool)
+        ivf = IVFIndex(ncentroids=8, nprobe=4, bucket_cap=16, topk=2)
+        st = ivf.fit(keys, valid, jax.random.PRNGKey(1))
+        new_keys = jax.random.normal(jax.random.PRNGKey(2), (24, 32))
+        slots = jax.random.randint(jax.random.PRNGKey(3), (24,), 0, 256)
+        mask = jax.random.bernoulli(jax.random.PRNGKey(4), 0.8, (24,))
+        got = ivf.absorb(st, slots, new_keys, mask)
+        assign = jnp.argmax(jnp.einsum(
+            "bd,cd->bc", l2_normalize(new_keys), st.centroids), axis=-1)
+        exp_b, exp_v = _absorb_serial(st.buckets, st.bucket_valid, assign,
+                                      slots, mask, ivf.bucket_cap)
+        np.testing.assert_array_equal(np.asarray(got.buckets),
+                                      np.asarray(exp_b))
+        np.testing.assert_array_equal(np.asarray(got.bucket_valid),
+                                      np.asarray(exp_v))
+
+    def test_absorbed_rows_searchable_both_backends(self):
+        """Fresh absorb -> immediately findable through the fused kernel
+        path and the jnp path alike (the serve-loop integration seam)."""
+        keys = _unit(jax.random.PRNGKey(5), (128, 16))
+        valid = jnp.zeros((128,), bool)
+        base = IVFIndex(ncentroids=4, nprobe=4, bucket_cap=64, topk=1)
+        st = base.fit(keys, valid, jax.random.PRNGKey(6))
+        fresh = _unit(jax.random.PRNGKey(7), (8, 16))
+        slots = jnp.arange(8, dtype=jnp.int32) + 40
+        keys = keys.at[40:48].set(fresh)
+        valid = valid.at[40:48].set(True)
+        st = base.absorb(st, slots, fresh, jnp.ones((8,), bool))
+        for backend in ("jnp", "pallas"):
+            ivf = IVFIndex(ncentroids=4, nprobe=4, bucket_cap=64, topk=1,
+                           backend=backend)
+            s, i = ivf.search(st, fresh, keys, valid)
+            np.testing.assert_array_equal(np.asarray(i[:, 0]),
+                                          np.asarray(slots),
+                                          err_msg=backend)
+            np.testing.assert_allclose(np.asarray(s[:, 0]), 1.0, rtol=1e-5,
+                                       err_msg=backend)
+
 
 class TestHNSW:
     def test_exact_on_small_sets(self):
