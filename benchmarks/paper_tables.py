@@ -6,6 +6,9 @@ fig4/table1 — cache hits + positive-hit accuracy per category
 threshold_sweep — §5.3: cosine threshold 0.6..0.9 step 0.05
 tenant_table — beyond-paper (DESIGN.md §13): per-tenant hit/miss/latency
                breakdown of a partitioned multi-tenant run
+context_table — beyond-paper (DESIGN.md §16): multi-turn record/replay
+                conversations with context fusion on vs off — follow-up
+                hit conversion and context-hit precision
 
 Each returns (rows, summary) where rows are CSV-able dicts; ``run.py``
 prints them in the harness format.
@@ -185,6 +188,79 @@ def tenant_table(full: bool = False):
                         f" region_slots={d['region_slots']}"),
         })
     return rows, s
+
+
+def context_table(full: bool = False):
+    """Multi-turn context caching (beyond-paper, DESIGN.md §16.6).
+
+    One dialogue state served twice (record, then replay with rephrased
+    follow-ups), through the same engine with context fusion on vs off.
+    The rows the session subsystem stands on: follow-up *replays* convert
+    from 0% hits (stateless — their raw texts are globally unique) to
+    near-100% hits (fused — their dialogue states repeat), while
+    context-hit precision holds the paper-grade >97% bar.
+    """
+    from repro.context import DecayMeanFusion
+    from repro.serving import build_multi_turn_workload, turn_levels
+
+    n = 400 if full else 150
+    n_groups, turns = 10, 3
+    pairs = build_corpus(n, seed=0)
+    convs = build_multi_turn_workload(pairs, n_groups, turns=turns, seed=23)
+    rec, rep = convs[:n_groups], convs[n_groups:]
+    key_by_sid = {p.qa_id: p.semantic_key for p in pairs}
+    for conv in convs:
+        for r in conv:
+            key_by_sid.setdefault(r.source_id, r.semantic_key)
+
+    def judge(req, sid):
+        return key_by_sid.get(sid, "") == req.semantic_key
+
+    rows = []
+    summaries = {}
+    for tag, fusion in (("fusion_on", DecayMeanFusion(window=4)),
+                        ("fusion_off", None)):
+        cfg = CacheConfig(dim=384, capacity=8 * n, value_len=48,
+                          ttl=None, threshold=0.8)
+        eng = CachedEngine(cfg, SimulatedLLMBackend(pairs), judge=judge,
+                           batch_size=32, fusion=fusion)
+        eng.warm(pairs)
+        t0 = time.perf_counter()
+        for half in (rec, rep):           # record first, then replay
+            for level in turn_levels(half):
+                eng.process(level)
+        wall = time.perf_counter() - t0
+        s = eng.metrics.summary()
+        summaries[tag] = s
+        nq = sum(len(c) for c in convs)
+        for cat in ("ctx/open_repeat", "ctx/followup", "ctx/followup_repeat"):
+            m = s["categories"][cat]
+            rows.append({
+                "name": f"context/{tag}/{cat.split('/', 1)[1]}",
+                "us_per_call": 1e6 * wall / nq,
+                "derived": (f"hits={m['cache_hits']}/{m['lookups']}"
+                            f" hit_rate={m['hit_rate']:.3f}"
+                            f" positive_rate={m['positive_rate']:.3f}"),
+            })
+        if s["context"]:
+            c = s["context"]["context"]
+            rows.append({
+                "name": f"context/{tag}/context_rows",
+                "us_per_call": 0.0,
+                "derived": (f"lookups={c['lookups']}"
+                            f" hit_rate={c['hit_rate']:.3f}"
+                            f" positive_rate={c['positive_rate']:.3f}"),
+            })
+    on = summaries["fusion_on"]["categories"]["ctx/followup_repeat"]
+    off = summaries["fusion_off"]["categories"]["ctx/followup_repeat"]
+    rows.append({
+        "name": "context/followup_conversion",
+        "us_per_call": 0.0,
+        "derived": (f"fused_hit_rate={on['hit_rate']:.3f}"
+                    f" stateless_hit_rate={off['hit_rate']:.3f}"
+                    f" fused_positive_rate={on['positive_rate']:.3f}"),
+    })
+    return rows, summaries
 
 
 def ttl_behaviour():

@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig3/*          — latency with vs without cache
   sec5.3/*        — threshold sweep 0.60..0.90
   sec2.7/*        — TTL behaviour
+  context/*       — multi-turn record/replay: fused vs stateless follow-up
+                    hit conversion + context-hit precision (DESIGN.md §16)
   kernel/*        — scoring-kernel scaling (slab 4k..512k); fused-IVF
                     operand bytes + exact-vs-IVF crossover (DESIGN.md §15)
   design3/*       — HNSW (paper algorithm) vs exact MXU scoring
@@ -106,6 +108,7 @@ def main() -> None:
         ("sec5.3", lambda: paper_tables.threshold_sweep(full=False)),
         ("sec2.7", paper_tables.ttl_behaviour),
         ("tenancy", lambda: paper_tables.tenant_table(full=full)),
+        ("context", lambda: paper_tables.context_table(full=full)),
         ("kernel", kernel_bench.cosine_topk_scaling),
         ("kernel-masked", kernel_bench.masked_lookup_scaling),
         ("kernel-ivf", kernel_bench.fused_ivf_bench),

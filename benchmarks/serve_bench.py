@@ -1,6 +1,6 @@
 """Tail-latency + coalescing benchmark for the async serving subsystem.
 
-Four experiments on the simulated backend (DESIGN.md §12.5, §13.5):
+Five experiments on the simulated backend (DESIGN.md §12.5, §13.5, §16.6):
 
   1. **parity** — the async scheduler must reproduce the sync engine's
      results on an identical workload: same per-request hit/miss
@@ -16,6 +16,11 @@ Four experiments on the simulated backend (DESIGN.md §12.5, §13.5):
      cache with DRR admission: cross-tenant isolation (an answer cached by
      one tenant must miss for another even for the byte-identical query),
      per-tenant accounting consistency, and per-tenant hit rates.
+  5. **multi-turn** — record/replay conversations through the async
+     scheduler with context fusion on vs off: replayed follow-up turns
+     (globally unique raw texts) must convert from 0% hits stateless to
+     hits under fusion, while context-hit precision clears the same >97%
+     bar as stateless serving and the session store stays bounded.
 
 Output: ``name,value`` CSV rows, then a JSON metrics summary.
 
@@ -32,10 +37,12 @@ import sys
 
 from repro.core.types import CacheConfig
 from repro.data.qa_dataset import build_corpus
+from repro.context import DecayMeanFusion
 from repro.serving import (AsyncCacheServer, CachedEngine, Request,
                            SchedulerConfig, ServingMetrics,
                            SimulatedLLMBackend, build_multi_tenant_workload,
-                           build_workload, run_open_loop, run_waves)
+                           build_multi_turn_workload, build_workload,
+                           run_open_loop, run_sessions, run_waves)
 from repro.tenancy import TenantRegistry, TenantSpec
 
 
@@ -46,10 +53,11 @@ def _emit(name: str, value) -> None:
 
 def make_engine(pairs, *, batch_size: int, latency_s: float = 0.0,
                 block: bool = False, warm: bool = True,
-                registry=None) -> CachedEngine:
+                registry=None, fusion=None, judge=None,
+                max_sessions: int = 4096) -> CachedEngine:
     by_id = {p.qa_id: p for p in pairs}
 
-    def judge(req, sid):
+    def default_judge(req, sid):
         return sid >= 0 and sid in by_id and \
             by_id[sid].semantic_key == req.semantic_key
 
@@ -60,8 +68,9 @@ def make_engine(pairs, *, batch_size: int, latency_s: float = 0.0,
                       capacity=per_tenant * (len(registry) if registry
                                              else 1),
                       value_len=48, ttl=None, threshold=0.8)
-    eng = CachedEngine(cfg, backend, judge=judge, batch_size=batch_size,
-                       registry=registry)
+    eng = CachedEngine(cfg, backend, judge=judge or default_judge,
+                       batch_size=batch_size, registry=registry,
+                       fusion=fusion, max_sessions=max_sessions)
     if warm:
         if registry is None:
             eng.warm(pairs)
@@ -203,6 +212,54 @@ def bench_tenancy(pairs, *, batch: int, n_req: int, rate_qps: float) -> dict:
     return out
 
 
+def bench_multi_turn(pairs, *, batch: int, n_groups: int,
+                     turns: int) -> dict:
+    """Record/replay conversations through the async scheduler, context
+    fusion on vs off (DESIGN.md §16.6)."""
+    convs = build_multi_turn_workload(pairs, n_groups, turns=turns, seed=23)
+    rec, rep = convs[:n_groups], convs[n_groups:]
+    key_by_sid = {p.qa_id: p.semantic_key for p in pairs}
+    for conv in convs:
+        for r in conv:
+            key_by_sid.setdefault(r.source_id, r.semantic_key)
+
+    def judge(req, sid):
+        return key_by_sid.get(sid, "") == req.semantic_key
+
+    out = {}
+    for tag, fusion in (("fusion_on", DecayMeanFusion(window=4)),
+                        ("fusion_off", None)):
+        eng = make_engine(pairs, batch_size=batch, fusion=fusion,
+                          judge=judge)
+
+        async def drive():
+            sched = SchedulerConfig(max_batch=batch, max_wait_ms=2.0)
+            async with AsyncCacheServer(eng, sched) as server:
+                # replay only after every recording is fully served — a
+                # replay's hits ARE the recording's inserts
+                await run_sessions(server.submit_request, rec,
+                                   concurrency=max(2, batch // 2))
+                return await run_sessions(server.submit_request, rep,
+                                          concurrency=max(2, batch // 2))
+        res = asyncio.run(drive())
+        s = eng.metrics.summary()
+        m = s["categories"]["ctx/followup_repeat"]
+        out[f"{tag}_followup_repeat_hit_rate"] = m["hit_rate"]
+        out[f"{tag}_followup_repeat_positive_rate"] = m["positive_rate"]
+        out[f"{tag}_backend_calls"] = eng.backend.calls
+        if fusion is not None:
+            replay_context = sum(
+                r.context for r in res.responses if r is not None)
+            c = s["context"]["context"]
+            out["context_hit_rate"] = c["hit_rate"]
+            out["context_positive_rate"] = c["positive_rate"]
+            out["replay_context_rows"] = replay_context
+            out["session_store"] = eng.sessions.stats()
+            out["sessions_bounded"] = (
+                len(eng.sessions) <= eng.sessions.max_sessions)
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -251,6 +308,12 @@ def main(argv=None) -> int:
     for k, v in ten.items():
         _emit(f"serve/tenancy_{k}", v)
 
+    # 5. multi-turn sessions: record/replay, fusion on vs off
+    ctx = bench_multi_turn(pairs, batch=batch,
+                           n_groups=8 if args.smoke else 10, turns=3)
+    for k, v in ctx.items():
+        _emit(f"serve/context_{k}", v)
+
     ok = True
     if not parity["decisions_match"] or not parity["answers_match"]:
         print("FAIL: async scheduler diverged from sync engine", file=sys.stderr)
@@ -266,6 +329,24 @@ def main(argv=None) -> int:
         ok = False
     if not (ten["served_all"] and ten["accounting_ok"]):
         print("FAIL: tenancy serving/accounting broken", file=sys.stderr)
+        ok = False
+    # multi-turn expectations are hard requirements (§16.6): fused replays
+    # must convert, stateless replays must not hit at all, and context-hit
+    # precision must clear the paper-grade bar
+    if ctx["fusion_on_followup_repeat_hit_rate"] < 0.5:
+        print("FAIL: fused follow-up replays did not convert to hits",
+              file=sys.stderr)
+        ok = False
+    if ctx["fusion_off_followup_repeat_hit_rate"] != 0.0:
+        print("FAIL: stateless cache hit an elliptical follow-up",
+              file=sys.stderr)
+        ok = False
+    if ctx["context_positive_rate"] <= 0.97:
+        print("FAIL: context-hit precision below the 97% bar",
+              file=sys.stderr)
+        ok = False
+    if not ctx["sessions_bounded"]:
+        print("FAIL: session store exceeded its LRU cap", file=sys.stderr)
         ok = False
     _emit("serve/ok", ok)
     return 0 if ok else 1

@@ -1,0 +1,14 @@
+"""Session subsystem: context-aware multi-turn caching (DESIGN.md §16).
+
+``SessionStore`` (host) keeps per-session ring buffers of raw turn
+embeddings; ``ContextFusion`` strategies (device) pool a ``(B, W, d)``
+window of them into the ``(B, d)`` lookup key inside the fused cache step,
+so semantically equivalent *dialogue states* hit where isolated follow-up
+texts never could.
+"""
+from repro.context.fusion import (AttentionFusion, ContextFusion,
+                                  DecayMeanFusion, FusionState, fuse_op)
+from repro.context.session import SessionStore
+
+__all__ = ["AttentionFusion", "ContextFusion", "DecayMeanFusion",
+           "FusionState", "SessionStore", "fuse_op"]

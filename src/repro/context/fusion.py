@@ -1,0 +1,223 @@
+"""Context fusion — pooling a session's recent turns into the lookup key
+(DESIGN.md §16.2).
+
+The seed paper keys the cache on single isolated queries; multi-turn chat
+traffic breaks that: "what about the second one?" embeds nowhere near the
+dialogue state it actually asks about, so it can never hit — and worse, the
+*same* follow-up text under two different conversations would collide.
+ContextCache (arxiv 2506.22791) shows the fix: fuse the last ``W`` turn
+embeddings into the query embedding so semantically equivalent *dialogue
+states* — not texts — share a key.
+
+This module is the device half of the session subsystem: one jitted pooling
+op ``(B, W, d) -> (B, d)`` that runs *inside* the fused ``step()`` (the
+window tensor is a traced operand, so every session mix — all-sessionless,
+all-deep, interleaved — shares ONE compiled program). Two strategies behind
+the ``ContextFusion`` protocol:
+
+  * ``DecayMeanFusion`` — exponential-decay mean over the turn window
+    (recent turns weigh more), mixed with the query;
+  * ``AttentionFusion`` — the current query attends over the turn window
+    (scaled dot-product softmax), so only the turns the query actually
+    refers back to contribute.
+
+Both carry their (few, scalar) weights in a ``FusionState`` pytree that
+lives as the ``fusion`` leaf group of ``CacheRuntime`` — ``None`` keeps the
+pre-session treedef, so single-turn checkpoints and compiled programs are
+untouched (the ``tenancy`` pattern, §13.2).
+
+Contract shared by every strategy (tested in ``tests/test_context.py``):
+rows with an empty window (``window_len == 0``) return the query embedding
+*bit-identically* — a sessionless request through a fusion-enabled cache
+behaves exactly like today's stateless path, which is what lets mixed
+session/sessionless batches share the compiled step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_EPS = 1e-12
+
+
+def _unit(x: Array, axis: int = -1) -> Array:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=axis, keepdims=True), _EPS)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FusionState:
+    """Fusion weights — one more ``CacheRuntime`` leaf group.
+
+    Leaves (all f32 scalars, so they checkpoint and could be tuned from
+    judge feedback like the adaptive threshold, §10):
+      context_weight — energy fraction of (rotated) pooled context in the
+                       fused key — the query keeps ``1 - cw`` (see ``_mix``);
+      decay          — per-turn exponential decay (DecayMeanFusion);
+      temp           — attention temperature (AttentionFusion).
+
+    One uniform state class for both strategies keeps the checkpoint
+    template identical across strategies: a snapshot taken under decay-mean
+    restores into an attention cache (the unused leaf simply rides along).
+    """
+
+    context_weight: Array
+    decay: Array
+    temp: Array
+
+    @staticmethod
+    def make(context_weight: float, decay: float = 0.6,
+             temp: float = 0.25) -> "FusionState":
+        f = jnp.float32
+        return FusionState(context_weight=f(context_weight), decay=f(decay),
+                           temp=f(temp))
+
+
+@runtime_checkable
+class ContextFusion(Protocol):
+    """Pluggable pooling strategy (the ``Index``/``Policy`` pattern, §8/§10).
+
+    A strategy is a static frozen dataclass (hashable — it is baked into
+    the compiled step like the index); its numeric weights live in the
+    ``FusionState`` it creates, threaded through the runtime.
+    """
+
+    window: int   # W — turns pooled per session
+
+    def init_state(self) -> FusionState:
+        ...
+
+    def fuse(self, fstate: FusionState, queries: Array, window: Array,
+             window_len: Array) -> Array:
+        """(B, d) queries + (B, W, d) turn windows -> (B, d) fused keys.
+
+        ``window`` is left-aligned oldest-to-newest: row ``b``'s turns
+        occupy ``window[b, :window_len[b]]``; the tail is zeros. Rows with
+        ``window_len == 0`` must return ``queries`` bit-identically.
+        """
+        ...
+
+
+def _mix(fstate: FusionState, queries: Array, ctx: Array,
+         window_len: Array) -> Array:
+    """Shared final stage: embed the pooled context in a *rotated* subspace
+    and mix with the query at energy split ``context_weight`` (§16.2):
+
+        fused = unit( sqrt(1-cw)·q̂  +  sqrt(cw)·roll(ĉ, d/2) )
+
+    The half-dimension roll decorrelates context from every raw key
+    (``v · roll(v) ≈ 0`` for hash embeddings), which is what makes the
+    similarity between two fused keys *separable*:
+
+        cos(f1, f2) ≈ (1-cw)·cos(q1,q2) + cw·cos(c1,c2)
+
+    with no cross terms — and the similarity of a fused key to any RAW
+    slab key at most ``sqrt(1-cw)``. Consequences, at the paper's 0.8
+    threshold with the default cw=0.8: a follow-up can never false-hit
+    the entry of a *previous turn* (its key is ≥ 80% rotated context,
+    ≈ orthogonal to that raw key), identical follow-up *texts* under two
+    different dialogue states score ≈ (1-cw)·1 = 0.2 apart, while two
+    phrasings of the same follow-up under the SAME context score
+    ≈ cw + (1-cw)·cos(q1,q2) > 0.8. A plain convex mix has none of these
+    guarantees — its cross terms drag every follow-up toward the opening
+    turn's raw key.
+
+    Empty-window rows pass through untouched (bit-identical)."""
+    cw = fstate.context_weight
+    a = jnp.sqrt(jnp.maximum(1.0 - cw, 0.0))
+    b = jnp.sqrt(cw)
+    rot = jnp.roll(_unit(ctx), ctx.shape[-1] // 2, axis=-1)
+    fused = _unit(a * _unit(queries) + b * rot)
+    return jnp.where((window_len > 0)[:, None], fused, queries)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecayMeanFusion:
+    """Exponential-decay mean pooling: turn at age ``a`` (0 = most recent)
+    weighs ``decay**a``. Cheap, parameter-light, order-aware."""
+
+    window: int = 4
+    context_weight: float = 0.8
+    decay: float = 0.6
+
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError("fusion window must be >= 1")
+        if not 0.0 <= self.context_weight < 1.0:
+            raise ValueError("context_weight must be in [0, 1)")
+        if not 0.0 < self.decay <= 1.0:
+            raise ValueError("decay must be in (0, 1]")
+
+    def init_state(self) -> FusionState:
+        return FusionState.make(self.context_weight, decay=self.decay)
+
+    def fuse(self, fstate: FusionState, queries: Array, window: Array,
+             window_len: Array) -> Array:
+        b, w, _ = window.shape
+        pos = jnp.arange(w, dtype=jnp.int32)[None, :]            # (1, W)
+        valid = pos < window_len[:, None]                        # (B, W)
+        # turn j (left-aligned) has age L-1-j; clamp keeps pow well-defined
+        # on masked lanes
+        age = jnp.maximum(window_len[:, None] - 1 - pos, 0).astype(jnp.float32)
+        wgt = jnp.where(valid, jnp.power(fstate.decay, age), 0.0)  # (B, W)
+        ctx = jnp.einsum("bw,bwd->bd", wgt, _unit(window))
+        return _mix(fstate, queries, ctx, window_len)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionFusion:
+    """Attention-weighted pooling: the query attends over the turn window
+    (scaled dot-product softmax at temperature ``temp``), so a follow-up
+    that refers back two turns pulls exactly that turn into the key."""
+
+    window: int = 4
+    context_weight: float = 0.8
+    temp: float = 0.25
+
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError("fusion window must be >= 1")
+        if not 0.0 <= self.context_weight < 1.0:
+            raise ValueError("context_weight must be in [0, 1)")
+        if self.temp <= 0.0:
+            raise ValueError("temp must be positive")
+
+    def init_state(self) -> FusionState:
+        return FusionState.make(self.context_weight, temp=self.temp)
+
+    def fuse(self, fstate: FusionState, queries: Array, window: Array,
+             window_len: Array) -> Array:
+        b, w, _ = window.shape
+        turns = _unit(window)                                    # (B, W, d)
+        valid = jnp.arange(w, dtype=jnp.int32)[None, :] \
+            < window_len[:, None]                                # (B, W)
+        logits = jnp.einsum("bd,bwd->bw", _unit(queries), turns) / fstate.temp
+        logits = jnp.where(valid, logits, -1e9)
+        # empty rows: uniform garbage softmax over -1e9 lanes — harmless,
+        # _mix routes those rows straight through
+        alpha = jax.nn.softmax(logits, axis=-1)                  # (B, W)
+        ctx = jnp.einsum("bw,bwd->bd", alpha, turns)
+        return _mix(fstate, queries, ctx, window_len)
+
+
+def fuse_op(fusion: Any, fstate: FusionState, queries: Array, window: Array,
+            window_len: Array) -> Array:
+    """The standalone jitted ``(B, W, d) -> (B, d)`` pooling op.
+
+    ``SemanticCache.step`` inlines ``fusion.fuse`` into its own jit; this
+    wrapper is the same op compiled on its own — parity between the two is
+    what ``tests/test_context.py`` pins (the in-step fusion must be the
+    plain op, not a divergent reimplementation).
+    """
+    return jax.jit(
+        lambda fs, q, w, wl: fusion.fuse(fs, q, w, wl))(
+            fstate, queries, window, window_len)
+
+
+__all__ = ["ContextFusion", "FusionState", "DecayMeanFusion",
+           "AttentionFusion", "fuse_op"]

@@ -32,6 +32,16 @@ regions. A per-row ``tenant_id`` vector — the only traced tenancy input —
 masks every lookup to its row's own region and routes every insert into
 its row's own per-tenant ring, so one compiled ``step()`` serves every
 tenant mix with zero retraces and structural cross-tenant isolation.
+
+Multi-turn context (DESIGN.md §16): an optional ``fusion`` plugin
+(``repro.context.ContextFusion``) pools each row's session turn window —
+a traced ``(B, W, d)`` tensor + ``(B,)`` length vector — into the lookup
+key *inside* the compiled step, before the search and before the insert,
+so the slab keys ARE dialogue-state embeddings. Rows with an empty window
+pass through bit-identically (the stateless path), which is what lets one
+compiled ``step()`` serve mixed session/sessionless batches with zero
+retraces. Fusion weights live in the runtime's ``fusion`` leaf group
+(``None`` = single-turn, old treedef).
 """
 from __future__ import annotations
 
@@ -59,6 +69,7 @@ class SemanticCache:
     index: Any = None          # Index protocol plugin (None -> ExactIndex)
     policy: Any = None         # Policy protocol plugin (None -> FixedThreshold)
     partition: Any = None      # PartitionMap for multi-tenant regions (§13)
+    fusion: Any = None         # ContextFusion plugin for session windows (§16)
 
     def __post_init__(self):
         if self.index is None:
@@ -82,7 +93,8 @@ class SemanticCache:
     # -- state ------------------------------------------------------------
     def init(self) -> CacheRuntime:
         """Fresh runtime: empty slab, zero counters, init policy/index state
-        (+ per-tenant ring pointers/counters when partitioned)."""
+        (+ per-tenant ring pointers/counters when partitioned, + fusion
+        weights when context-fused)."""
         tenancy = None
         if self.partition is not None:
             from repro.tenancy.partition import TenancyState
@@ -93,7 +105,23 @@ class SemanticCache:
             policy_state=self.policy.init_state(),
             index_state=self.index.init(self.config),
             tenancy=tenancy,
+            fusion=None if self.fusion is None else self.fusion.init_state(),
         )
+
+    # -- context fusion (no-op when fusion is None) ------------------------
+    def _maybe_fuse(self, runtime: CacheRuntime, queries: Array,
+                    window: Array | None, window_len: Array | None) -> Array:
+        """Pool each row's turn window into its lookup key (§16.2). The
+        fusion op is inlined here — inside whatever jit the caller wrapped
+        around lookup/step — so context pooling batches with the search
+        instead of costing a second dispatch. ``window=None`` (or a
+        fusion-less cache) is the stateless fast path: queries unchanged."""
+        if self.fusion is None or window is None:
+            return queries
+        if window_len is None:
+            raise ValueError("window without window_len")
+        return self.fusion.fuse(runtime.fusion, queries, window,
+                                jnp.asarray(window_len, dtype=jnp.int32))
 
     # -- tenancy helpers (no-ops when partition is None) -------------------
     def _require_tenants(self, tenant_id: Array | None) -> Array | None:
@@ -134,10 +162,17 @@ class SemanticCache:
         *,
         update_counters: bool = True,
         tenant_id: Array | None = None,  # (B,) required when partitioned
+        window: Array | None = None,     # (B, W, d) session turn windows (§16)
+        window_len: Array | None = None,  # (B,) turns per row; 0 = stateless
     ) -> tuple[LookupResult, CacheRuntime]:
         """ANN search + threshold decision. ``update_counters=False`` gives a
         pure peek (no LRU touch, no stats, no policy-state commit) — the
         engine uses it to learn the miss set before the fused ``step``.
+
+        On a context-fused cache, ``window``/``window_len`` carry each
+        row's session turns and the search key becomes the fused
+        dialogue-state embedding (§16.2); rows with ``window_len == 0``
+        search on the raw query, bit-identical to a fusion-less cache.
 
         On a partitioned cache each row searches only its own tenant's
         region, passed to the index as per-row ``(start, size)`` interval
@@ -149,6 +184,7 @@ class SemanticCache:
         nor the (B, M, d) gathered-candidate tensor ever touches HBM —
         Exact and IVF caches serve the fused ``step()`` alike."""
         tenant_id = self._require_tenants(tenant_id)
+        queries = self._maybe_fuse(runtime, queries, window, window_len)
         state, stats = runtime.state, runtime.stats
         b = queries.shape[0]
         now = jnp.asarray(now, dtype=jnp.float32)
@@ -321,6 +357,8 @@ class SemanticCache:
         peeked: LookupResult | None = None,
         valid: Array | None = None,
         tenant_id: Array | None = None,
+        window: Array | None = None,
+        window_len: Array | None = None,
     ) -> tuple[LookupResult, CacheRuntime]:
         """Lookup, then insert exactly the missed queries' fresh responses.
 
@@ -341,7 +379,14 @@ class SemanticCache:
         ``tenant_id`` (required on a partitioned cache) is a traced (B,)
         vector, so *every* tenant mix — all-one-tenant, interleaved,
         padded — shares this one compiled program (§13.2).
+
+        ``window``/``window_len`` (context-fused cache, §16) pool each
+        row's session turns into its key ONCE here — the same fused
+        embedding searches the slab and, on a miss, becomes the inserted
+        key, so a later equivalent dialogue state finds it. Both are
+        traced, so every session mix shares this one compiled program.
         """
+        queries = self._maybe_fuse(runtime, queries, window, window_len)
         if peeked is None and valid is None:
             result, runtime = self.lookup(runtime, queries, now,
                                           tenant_id=tenant_id)

@@ -102,6 +102,12 @@ class CacheRuntime:
                      DESIGN.md §13.2); ``None`` for a single-tenant cache,
                      which keeps the treedef — and thus every compiled
                      program — identical to the pre-tenancy layout.
+      fusion       — context-fusion weights (``FusionState``, DESIGN.md
+                     §16.2) pooling a session's turn window into the lookup
+                     key; ``None`` for a single-turn cache — the same
+                     None-keeps-the-treedef contract as ``tenancy``, so
+                     pre-session checkpoints and compiled programs are
+                     untouched.
     """
 
     state: CacheState
@@ -109,6 +115,7 @@ class CacheRuntime:
     policy_state: Array
     index_state: Any
     tenancy: Any = None
+    fusion: Any = None
 
     def replace(self, **kw) -> "CacheRuntime":
         return dataclasses.replace(self, **kw)

@@ -4,19 +4,22 @@ from repro.serving.engine import Batcher, CachedEngine, Request, Response
 from repro.serving.llm_backend import (BackendResult, ModelBackend,
                                        SimulatedLLMBackend)
 from repro.serving.loadgen import (LoadResult, build_multi_tenant_workload,
-                                   build_workload, run_closed_loop,
-                                   run_open_loop, run_waves, tenant_rng,
-                                   zipf_weights)
-from repro.serving.metrics import (CategoryMetrics, ServingMetrics,
-                                   TenantMetrics)
+                                   build_multi_turn_workload, build_workload,
+                                   run_closed_loop, run_open_loop,
+                                   run_sessions, run_waves, tenant_rng,
+                                   turn_levels, zipf_weights)
+from repro.serving.metrics import (CategoryMetrics, ContextMetrics,
+                                   ServingMetrics, TenantMetrics)
 from repro.serving.scheduler import (AsyncScheduler, SchedulerConfig,
                                      coalesce_key, normalize_query)
 from repro.serving.server import AsyncCacheServer
 
 __all__ = ["Batcher", "CachedEngine", "Request", "Response", "BackendResult",
            "ModelBackend", "SimulatedLLMBackend", "CategoryMetrics",
-           "ServingMetrics", "TenantMetrics", "AsyncScheduler",
-           "SchedulerConfig", "coalesce_key", "normalize_query",
-           "AsyncCacheServer", "LoadResult", "build_workload",
-           "build_multi_tenant_workload", "tenant_rng", "zipf_weights",
-           "run_closed_loop", "run_open_loop", "run_waves"]
+           "ContextMetrics", "ServingMetrics", "TenantMetrics",
+           "AsyncScheduler", "SchedulerConfig", "coalesce_key",
+           "normalize_query", "AsyncCacheServer", "LoadResult",
+           "build_workload", "build_multi_tenant_workload",
+           "build_multi_turn_workload", "tenant_rng", "turn_levels",
+           "zipf_weights", "run_closed_loop", "run_open_loop",
+           "run_sessions", "run_waves"]

@@ -25,6 +25,14 @@ each request's ``tenant`` through the same compiled step — same batch
 shapes, same jit cache, but lookups/inserts are masked to each row's own
 region and both ``ServingMetrics`` and the device-side ``TenancyState``
 keep per-tenant accounting.
+
+Multi-turn sessions (DESIGN.md §16): constructing the engine with a
+``ContextFusion`` strategy attaches a ``SessionStore`` and threads each
+request's ``session`` through the same compiled step — a (B, W, d) window
+of the session's prior raw turn embeddings rides along as one more traced
+operand, the fused key searches AND populates the slab, and sessionless
+rows (empty ``session``) pass through bit-identically, so session and
+stateless traffic share one compiled program.
 """
 from __future__ import annotations
 
@@ -52,6 +60,9 @@ class Request:
     semantic_key: str = ""
     tenant: str = "default"      # isolation domain (multi-tenant serving,
                                  # DESIGN.md §13); ignored without a registry
+    session: str = ""            # conversation id (multi-turn context,
+                                 # DESIGN.md §16); "" = stateless request;
+                                 # ignored without a fusion strategy
 
 
 @dataclasses.dataclass
@@ -62,6 +73,8 @@ class Response:
     latency_s: float
     coalesced: bool = False   # served by attaching to an in-flight duplicate
                               # (async scheduler, DESIGN.md §12.3)
+    context: bool = False     # looked up under a non-empty session turn
+                              # window, i.e. the key was context-fused (§16)
 
 
 #: Row used to right-pad a partial batch up to the engine's fixed batch
@@ -106,7 +119,10 @@ class CachedEngine:
                  index=None,
                  rebuild_every: int = 2048,
                  use_fused_step: bool = True,
-                 registry=None):
+                 registry=None,
+                 fusion=None,
+                 session_ttl_s: float | None = 1800.0,
+                 max_sessions: int = 4096):
         # ``policy``: optional threshold policy (e.g. AdaptiveThreshold —
         # paper §2.10 future work). With an adaptive policy the engine feeds
         # judged hit outcomes back after every batch, closing the paper's
@@ -117,6 +133,11 @@ class CachedEngine:
         # ``registry``: optional TenantRegistry — partitions the slab into
         # per-tenant regions and routes each Request.tenant through the
         # compiled step (DESIGN.md §13). None = single-tenant (unchanged).
+        # ``fusion``: optional ContextFusion strategy (DESIGN.md §16) —
+        # attaches a SessionStore (TTL ``session_ttl_s`` on the engine's
+        # tick clock, LRU-capped at ``max_sessions``) and fuses each
+        # session row's turn window into its lookup/insert key inside the
+        # compiled step. None = single-turn (unchanged).
         self.registry = registry
         partition = None
         if registry is not None:
@@ -131,7 +152,14 @@ class CachedEngine:
                     "or the tenant's share/quota")
             self._tenant_index = {n: i for i, n in enumerate(partition.names)}
         self.cache = SemanticCache(cache_config, policy=policy, index=index,
-                                   partition=partition)
+                                   partition=partition, fusion=fusion)
+        self.fusion = fusion
+        self.sessions = None
+        if fusion is not None:
+            from repro.context.session import SessionStore
+            self.sessions = SessionStore(
+                window=fusion.window, dim=cache_config.dim,
+                ttl=session_ttl_s, max_sessions=max_sessions)
         self.runtime: CacheRuntime = self.cache.init()
         self.use_fused_step = use_fused_step
         self.rebuild_every = rebuild_every
@@ -152,22 +180,31 @@ class CachedEngine:
         # batch. The peek must NOT donate — the same runtime is fed to the
         # fused step right after.
         # ``tid`` is the per-row tenant-id vector (None on a single-tenant
-        # engine — an empty pytree, so the compiled signature is unchanged)
+        # engine — an empty pytree, so the compiled signature is unchanged).
+        # ``w``/``wl`` are the per-row session turn windows (None on a
+        # fusion-less engine — same empty-pytree trick, §16.3).
         self._lookup_jit = jax.jit(
-            lambda rt, q, t, tid: self.cache.lookup(rt, q, t, tenant_id=tid),
+            lambda rt, q, t, tid, w, wl: self.cache.lookup(
+                rt, q, t, tenant_id=tid, window=w, window_len=wl),
             donate_argnums=(0,))
         self._peek_jit = jax.jit(
-            lambda rt, q, t, tid: self.cache.lookup(
-                rt, q, t, update_counters=False, tenant_id=tid)[0])
+            lambda rt, q, t, tid, w, wl: self.cache.lookup(
+                rt, q, t, update_counters=False, tenant_id=tid,
+                window=w, window_len=wl)[0])
         self._insert_jit = jax.jit(
             lambda rt, q, v, vl, t, sid, m, tid: self.cache.insert(
                 rt, q, v, vl, t, source_id=sid, mask=m, tenant_id=tid),
             donate_argnums=(0,))
         self._step_jit = jax.jit(
-            lambda rt, q, mv, mvl, t, sid, peek, valid, tid: self.cache.step(
+            lambda rt, q, mv, mvl, t, sid, peek, valid, tid, w, wl:
+            self.cache.step(
                 rt, q, mv, mvl, t, source_id=sid, peeked=peek, valid=valid,
-                tenant_id=tid),
+                tenant_id=tid, window=w, window_len=wl),
             donate_argnums=(0,))
+        # standalone fusion op for the separate (reference) path, which
+        # must insert the same fused keys the fused step would
+        self._fuse_jit = jax.jit(
+            lambda rt, q, w, wl: self.cache._maybe_fuse(rt, q, w, wl))
         self._refit_jit = jax.jit(
             lambda rt, t, k: self.cache.refit(rt, t, k),
             donate_argnums=(0,))
@@ -222,15 +259,42 @@ class CachedEngine:
                                   # built with the same tenant layout or the
                                   # per-tenant ring pointers/regions disagree
                                   "partition": None if part is None
-                                  else part.manifest()})
+                                  else part.manifest(),
+                                  "fusion": None if self.fusion is None
+                                  else type(self.fusion).__name__})
 
     def load_cache(self, path: str) -> None:
         import json
         import os
         from repro.training.checkpoint import load_checkpoint
-        template = {"runtime": self.runtime}
+        # Fusion-aware restore (§16.5). The fusion leaf group follows the
+        # tenancy None-keeps-the-treedef contract, so the npz either has
+        # "runtime/fusion/..." keys (session-era snapshot) or none at all.
+        data_path = path if path.endswith(".npz") else path + ".npz"
+        saved_keys = np.load(data_path).files
+        has_fusion_keys = any(k.startswith("runtime/fusion/")
+                              for k in saved_keys)
+        template_runtime = self.runtime
+        if has_fusion_keys and self.fusion is None:
+            # silently dropping learned fusion weights would change every
+            # fused key this snapshot's slab entries were stored under
+            raise ValueError(
+                f"snapshot {path!r} carries context-fusion weights "
+                "(runtime/fusion/*) but this engine has no fusion "
+                "strategy; construct the engine with fusion=... to load it")
+        if not has_fusion_keys and self.fusion is not None:
+            # pre-session snapshot into a session-enabled engine is fine:
+            # restore the shared leaves, keep this engine's fresh fusion
+            # state (slab keys in that snapshot were never fused, and raw
+            # single-turn lookups still match them bit-identically)
+            template_runtime = self.runtime.replace(fusion=None)
+        template = {"runtime": template_runtime}
         restored = load_checkpoint(path, template)
-        self.runtime = restored["runtime"]
+        restored_runtime = restored["runtime"]
+        if restored_runtime.fusion is None and self.runtime.fusion is not None:
+            restored_runtime = restored_runtime.replace(
+                fusion=self.runtime.fusion)
+        self.runtime = restored_runtime
         # restore the TTL clock: slab expiries are *absolute* deadlines, so
         # resuming at now=0 would extend every entry's remaining lifetime.
         # save_checkpoint names the manifest after the path it was *given*
@@ -266,6 +330,56 @@ class CachedEngine:
     def tick(self, seconds: float) -> None:
         """Advance the TTL clock (tests drive expiry deterministically)."""
         self._now += seconds
+
+    def _session_windows(self, batch):
+        """Per-row session turn windows for a (possibly padded) batch.
+
+        Returns ``(window (B, W, d), window_len (B,), has_ctx)`` — or
+        ``(None, None, [False]*B)`` on a fusion-less engine (None is an
+        empty pytree, so the compiled signature is unchanged). Sessionless
+        and pad rows get a zero window with length 0, which the fusion op
+        passes through bit-identically (§16.3) — session and stateless
+        rows share one compiled program at every mix.
+        """
+        if self.sessions is None:
+            return None, None, [False] * len(batch)
+        win = np.zeros((len(batch), self.sessions.window_size,
+                        self.sessions.dim), dtype=np.float32)
+        wlen = np.zeros((len(batch),), dtype=np.int32)
+        for i, r in enumerate(batch):
+            if r is PAD_REQUEST or not r.session:
+                continue
+            w, c = self.sessions.window_for(r.tenant, r.session, self._now)
+            win[i] = w
+            wlen[i] = c
+        return (jnp.asarray(win), jnp.asarray(wlen),
+                [bool(c) for c in wlen])
+
+    def _canonical_keys(self, result, emb, win, wlen) -> np.ndarray:
+        """(B, d) canonical slab key per row (§16.1): the matched entry's
+        stored key on a hit, the row's own fused key — exactly what the
+        step inserted — on a miss. Appending these (not raw embeddings)
+        makes two conversations in the same dialogue state converge to
+        identical turn windows, so their fused keys match at every depth."""
+        fused = self._fuse_jit(self.runtime, emb, win, wlen)
+        matched = jnp.take(self.runtime.state.keys, result.index,
+                           axis=0).astype(jnp.float32)
+        if self.cache.config.key_dtype == jnp.int8:
+            matched = matched / 127.0          # symmetric unit-row quant
+        return np.asarray(jnp.where(result.hit[:, None], matched, fused),
+                          dtype=np.float32)
+
+    def _append_turns(self, batch, n_valid: int, keys_np: np.ndarray) -> None:
+        """Push each served session row's canonical turn key (§16.1) —
+        after the batch, so a turn's own key never fuses into its own
+        lookup and co-batched turns of one session can't race."""
+        if self.sessions is None:
+            return
+        for i in range(n_valid):
+            r = batch[i]
+            if r.session:
+                self.sessions.append(r.tenant, r.session, keys_np[i],
+                                     self._now)
 
     def _tenant_ids(self, batch) -> "jax.Array | None":
         """(B,) int32 tenant ids for a (possibly padded) batch; None on a
@@ -374,8 +488,13 @@ class CachedEngine:
         cfg = self.cache.config
         n = len(batch)
         tid = self._tenant_ids(batch)
+        if self.sessions is not None:
+            # flush-path TTL sweep (§16.4): abandoned sessions die on the
+            # next admission, not only if someone happens to touch them
+            self.sessions.expire(self._now)
         t0 = time.perf_counter()
         emb = jnp.asarray(self.embedder.embed_batch([r.query for r in batch]))
+        win, wlen, has_ctx = self._session_windows(batch)
         now = jnp.float32(self._now)
         self._maybe_refit()
 
@@ -386,7 +505,7 @@ class CachedEngine:
         if self.use_fused_step:
             # 1. pure peek: learn the miss set without committing any state
             #    (the only slab search this batch — step commits it, §7)
-            peek = self._peek_jit(self.runtime, emb, now, tid)
+            peek = self._peek_jit(self.runtime, emb, now, tid, win, wlen)
             peek_hit = np.asarray(peek.hit)
             miss_idx = [i for i in range(n_valid) if not peek_hit[i]]
             cache_time = time.perf_counter() - t0
@@ -406,20 +525,25 @@ class CachedEngine:
             result, self.runtime = self._step_jit(
                 self.runtime, emb, jnp.asarray(miss_values),
                 jnp.asarray(miss_lens), now, sid, peek, jnp.asarray(valid),
-                tid)
+                tid, win, wlen)
             jax.block_until_ready(result.hit)  # count the commit in cache_time
             cache_time += time.perf_counter() - t1
             self._inserts_since_rebuild += len(miss_idx)
         else:
-            result, self.runtime = self._lookup_jit(self.runtime, emb, now,
-                                                    tid)
+            # reference path: pre-fuse once so the miss insert stores the
+            # SAME fused key the lookup searched (parity with the fused
+            # step, which fuses in-step)
+            femb = emb if win is None else \
+                self._fuse_jit(self.runtime, emb, win, wlen)
+            result, self.runtime = self._lookup_jit(self.runtime, femb, now,
+                                                    tid, None, None)
             lookup_hit = np.asarray(result.hit)
             miss_idx = [i for i in range(n) if not lookup_hit[i]]
             cache_time = time.perf_counter() - t0
             if miss_idx:
                 toks, lens, answers, llm_time, llm_cost = \
                     self._generate_misses(batch, miss_idx)
-                memb = emb[jnp.asarray(miss_idx)]
+                memb = femb[jnp.asarray(miss_idx)]
                 sid = jnp.asarray([batch[i].source_id for i in miss_idx],
                                   dtype=jnp.int32)
                 mtid = None if tid is None else tid[jnp.asarray(miss_idx)]
@@ -428,6 +552,10 @@ class CachedEngine:
                     jnp.asarray(lens), now, sid,
                     jnp.ones((len(miss_idx),), dtype=bool), mtid)
                 self._inserts_since_rebuild += len(miss_idx)
+
+        if self.sessions is not None:
+            self._append_turns(batch, n_valid,
+                               self._canonical_keys(result, emb, win, wlen))
 
         hit = np.asarray(result.hit)
         scores = np.asarray(result.score)
@@ -468,7 +596,8 @@ class CachedEngine:
             llm_cost=llm_cost, baseline_cost=per_cost * n_valid,
             baseline_time=baseline_time,
             tenants=None if self.registry is None else
-            [batch[i].tenant for i in range(n_valid)])
+            [batch[i].tenant for i in range(n_valid)],
+            contexts=None if self.sessions is None else has_ctx[:n_valid])
 
         per_q_latency = (cache_time + llm_time) / max(n_valid, 1)
         if record_path_latency:
@@ -478,5 +607,6 @@ class CachedEngine:
                     tenant=None if self.registry is None
                     else batch[i].tenant)
         return [Response(answer=answers[i], cached=bool(hit[i]),
-                         score=float(scores[i]), latency_s=per_q_latency)
+                         score=float(scores[i]), latency_s=per_q_latency,
+                         context=has_ctx[i])
                 for i in range(n_valid)]

@@ -17,6 +17,14 @@ same contract: ``record_batch(..., tenants=...)`` and
 ``record_latency(..., tenant=...)`` accumulate per-tenant hit/miss counts,
 coalesced counts and per-tenant latency percentiles, surfaced under
 ``summary()["tenants"]`` without touching any existing row.
+
+Multi-turn serving (DESIGN.md §16) adds context-hit rows the same way:
+``record_batch(..., contexts=...)`` splits every lookup into the
+*context-fused* bucket (the row was looked up under a non-empty session
+turn window) vs the *single-turn* bucket, surfaced under
+``summary()["context"]`` — the quantities the context table reports
+(context hit rate vs single-turn hit rate, and context positive-hit
+precision, which must clear the same >97% bar as stateless serving).
 """
 from __future__ import annotations
 
@@ -81,11 +89,40 @@ class TenantMetrics:
 
 
 @dataclasses.dataclass
+class ContextMetrics:
+    """One bucket of the context-fused vs single-turn split (§16)."""
+
+    lookups: int = 0
+    hits: int = 0
+    positive_hits: int = 0
+    judged_hits: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    @property
+    def positive_rate(self) -> float:
+        return self.positive_hits / self.judged_hits if self.judged_hits else 0.0
+
+    def row(self) -> dict:
+        return {"lookups": self.lookups, "cache_hits": self.hits,
+                "hit_rate": round(self.hit_rate, 4),
+                "positive_hits": self.positive_hits,
+                "positive_rate": round(self.positive_rate, 4)}
+
+
+@dataclasses.dataclass
 class ServingMetrics:
     per_category: dict = dataclasses.field(
         default_factory=lambda: defaultdict(CategoryMetrics))
     per_tenant: dict = dataclasses.field(
         default_factory=lambda: defaultdict(TenantMetrics))
+    context: ContextMetrics = dataclasses.field(
+        default_factory=ContextMetrics)       # session rows with a window
+    single_turn: ContextMetrics = dataclasses.field(
+        default_factory=ContextMetrics)       # stateless / first-turn rows
+    context_seen: bool = False                # any contexts=... recorded?
     total_cost_usd: float = 0.0
     baseline_cost_usd: float = 0.0          # what 100% API calls would cost
     cache_path_time_s: float = 0.0          # embed + lookup wall time
@@ -117,7 +154,10 @@ class ServingMetrics:
     def record_batch(self, categories, hits, positives, *, judged,
                      cache_time_s: float, llm_time_s: float,
                      llm_cost: float, baseline_cost: float,
-                     baseline_time: float, tenants=None) -> None:
+                     baseline_time: float, tenants=None,
+                     contexts=None) -> None:
+        if contexts is not None:
+            self.context_seen = True
         for i, cat in enumerate(categories):
             m = self.per_category[cat]
             m.lookups += 1
@@ -133,6 +173,15 @@ class ServingMetrics:
                 t = self.per_tenant[tenants[i]]
                 t.lookups += 1
                 t.hits += int(bool(hits[i]))
+            if contexts is not None:
+                c = self.context if bool(contexts[i]) else self.single_turn
+                c.lookups += 1
+                if bool(hits[i]):
+                    c.hits += 1
+                    if judged is None or judged[i]:
+                        c.judged_hits += 1
+                        if bool(positives[i]):
+                            c.positive_hits += 1
         self.total_cost_usd += llm_cost
         self.baseline_cost_usd += baseline_cost
         self.cache_path_time_s += cache_time_s
@@ -166,9 +215,14 @@ class ServingMetrics:
                     path: percentiles(xs)
                     for path, xs in sorted(t.latency_samples.items())},
             }
+        context = {}
+        if self.context_seen:
+            context = {"context": self.context.row(),
+                       "single_turn": self.single_turn.row()}
         return {
             "categories": cats,
             "tenants": tenants,
+            "context": context,
             "queries": self.queries,
             "total_cost_usd": round(self.total_cost_usd, 4),
             "baseline_cost_usd": round(self.baseline_cost_usd, 4),

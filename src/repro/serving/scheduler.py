@@ -61,13 +61,21 @@ def normalize_query(text: str) -> str:
 
 
 def coalesce_key(request: Request) -> str:
-    """Semantic identity for in-flight dedup: (tenant, normalized query).
+    """Semantic identity for in-flight dedup: (tenant, session, normalized
+    query).
 
     The tenant prefix makes cross-tenant coalescing structurally impossible
     — two tenants asking the same question must not share an answer object,
-    let alone a cache decision (§13.3). The embedding-similarity upgrade is
-    named in ROADMAP open items."""
-    return f"{request.tenant}\x1f{normalize_query(request.query)}"
+    let alone a cache decision (§13.3). The session component does the same
+    for multi-turn context (§16.3): two sessions asking the identical
+    follow-up *text* ("what about the second one?") are different dialogue
+    states with different fused keys, so they must not share a leader —
+    without it one session would receive an answer fused under the *other*
+    session's context. Sessionless requests keep the exact pre-session key
+    shape (empty middle component), so their coalescing is unchanged. The
+    embedding-similarity upgrade is named in ROADMAP open items."""
+    return (f"{request.tenant}\x1f{request.session}\x1f"
+            f"{normalize_query(request.query)}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,6 +22,13 @@ The wire format keeps to the engine's ``Request``/``Response`` fields::
 multi-tenant engine (DESIGN.md §13): lookups/inserts stay inside that
 tenant's slab region and coalescing never crosses tenants.
 
+``session`` (optional) names a conversation on a session-enabled engine
+(DESIGN.md §16): the request's lookup key is fused with the session's
+prior-turn window, and the response line gains a ``context`` flag (true
+when a non-empty window was fused in). A request line *without* the field
+is today's stateless behaviour byte-for-byte — same Request defaults, same
+response payload keys.
+
 Responses may arrive out of request order (coalesced waiters resolve with
 their leader's batch), so pipelined clients should send an ``id`` — it is
 echoed verbatim in the matching response line.
@@ -72,10 +79,10 @@ class AsyncCacheServer:
     # -- in-process API --------------------------------------------------- #
     async def submit(self, query: str, *, category: str = "default",
                      source_id: int = -1, semantic_key: str = "",
-                     tenant: str = "default") -> Response:
+                     tenant: str = "default", session: str = "") -> Response:
         return await self.scheduler.submit(Request(
             query=query, category=category, source_id=source_id,
-            semantic_key=semantic_key, tenant=tenant))
+            semantic_key=semantic_key, tenant=tenant, session=session))
 
     async def submit_request(self, request: Request) -> Response:
         return await self.scheduler.submit(request)
@@ -100,10 +107,16 @@ class AsyncCacheServer:
                     category=obj.get("category", "default"),
                     source_id=int(obj.get("source_id", -1)),
                     semantic_key=obj.get("semantic_key", ""),
-                    tenant=obj.get("tenant", "default"))
+                    tenant=obj.get("tenant", "default"),
+                    session=obj.get("session", ""))
                 payload = {"answer": resp.answer, "cached": resp.cached,
                            "score": resp.score, "latency_s": resp.latency_s,
                            "coalesced": resp.coalesced}
+                if "session" in obj:
+                    # the context flag only exists for clients that opted
+                    # into sessions — a sessionless request line gets
+                    # exactly the pre-session payload, byte for byte
+                    payload["context"] = resp.context
             except Exception as exc:   # malformed line / scheduler stopped
                 payload = {"error": str(exc)}
             if req_id is not None:     # echo: responses can be out of order

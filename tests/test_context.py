@@ -1,0 +1,525 @@
+"""Session subsystem tests (DESIGN.md §16): context-fusion ops, the
+SessionStore lifecycle (TTL/LRU/tenant namespacing), one-compiled-step
+acceptance across session mixes, fused-key parity between step and the
+standalone op, record/replay hit conversion, session-scoped coalescing,
+checkpoint compatibility, and the flush-path expiry + bounded-memory
+guarantees."""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.context import (AttentionFusion, DecayMeanFusion, FusionState,
+                           SessionStore, fuse_op)
+from repro.core.types import CacheConfig
+from repro.data.qa_dataset import build_corpus
+from repro.serving import (AsyncCacheServer, CachedEngine, Request,
+                           SchedulerConfig, SimulatedLLMBackend,
+                           build_multi_turn_workload, coalesce_key,
+                           turn_levels)
+
+STRATEGIES = [DecayMeanFusion(window=4), AttentionFusion(window=4)]
+
+
+@pytest.fixture(scope="module")
+def pairs():
+    return build_corpus(40, seed=0)
+
+
+def mk_engine(pairs, *, fusion=None, batch_size=8, capacity=2048, **kw):
+    key_by_sid = {p.qa_id: p.semantic_key for p in pairs}
+
+    def judge(req, sid):
+        return key_by_sid.get(sid, "") == req.semantic_key
+
+    cfg = CacheConfig(dim=384, capacity=capacity, value_len=48,
+                      ttl=None, threshold=0.8)
+    return CachedEngine(cfg, SimulatedLLMBackend(pairs), judge=judge,
+                        batch_size=batch_size, fusion=fusion, **kw), \
+        key_by_sid
+
+
+def serve_conversations(eng, conversations):
+    """Record-first ordering contract: all recordings, then all replays,
+    each half level-by-level (a turn must land before the next looks up)."""
+    n = len(conversations) // 2
+    for half in (conversations[:n], conversations[n:]):
+        for level in turn_levels(half):
+            eng.process(level)
+
+
+def register_followup_keys(key_by_sid, conversations):
+    for conv in conversations:
+        for r in conv:
+            key_by_sid.setdefault(r.source_id, r.semantic_key)
+
+
+# --------------------------------------------------------------------- #
+# fusion ops
+# --------------------------------------------------------------------- #
+class TestFusionOps:
+    def _batch(self, seed=0, b=6, w=4, d=384):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        q = jax.random.normal(k1, (b, d))
+        q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+        win = jax.random.normal(k2, (b, w, d))
+        return q, win
+
+    @pytest.mark.parametrize("fusion", STRATEGIES,
+                             ids=["decay", "attention"])
+    def test_empty_window_rows_pass_through_bit_identically(self, fusion):
+        """The contract that lets session and stateless rows share one
+        compiled step: window_len == 0 -> the query embedding, untouched."""
+        q, win = self._batch()
+        wl = jnp.zeros((q.shape[0],), dtype=jnp.int32)
+        out = fuse_op(fusion, fusion.init_state(), q,
+                      jnp.zeros_like(win), wl)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(q))
+        # and per-row: a mixed batch only passes its empty rows through
+        wl = jnp.asarray([0, 2, 0, 4, 1, 0], dtype=jnp.int32)
+        out = np.asarray(fuse_op(fusion, fusion.init_state(), q, win, wl))
+        qn = np.asarray(q)
+        for i, n_turns in enumerate([0, 2, 0, 4, 1, 0]):
+            if n_turns == 0:
+                np.testing.assert_array_equal(out[i], qn[i])
+            else:
+                assert not np.array_equal(out[i], qn[i])
+
+    @pytest.mark.parametrize("fusion", STRATEGIES,
+                             ids=["decay", "attention"])
+    def test_fused_keys_are_unit_and_context_bounded(self, fusion):
+        """Rotated-subspace geometry (§16.2): fused keys are unit rows and
+        their similarity to the RAW query is about sqrt(1-cw) — a fused
+        key can never clear the 0.8 threshold against any raw slab key."""
+        q, win = self._batch(seed=3)
+        wl = jnp.full((q.shape[0],), 3, dtype=jnp.int32)
+        out = np.asarray(fuse_op(fusion, fusion.init_state(), q, win, wl))
+        np.testing.assert_allclose(np.linalg.norm(out, axis=-1), 1.0,
+                                   atol=1e-5)
+        sims = np.sum(out * np.asarray(q), axis=-1)
+        bound = np.sqrt(1.0 - fusion.context_weight) + 0.12  # small overlap
+        assert (np.abs(sims) <= bound).all(), sims
+
+    def test_same_context_dominates_same_text(self):
+        """The separability the record/replay bar stands on: two phrasings
+        under ONE context score above threshold; the SAME text under two
+        different contexts scores far below it."""
+        fusion = DecayMeanFusion(window=4)
+        fs = fusion.init_state()
+        d = 384
+        k = jax.random.PRNGKey(7)
+        qa, qb, ca, cb, cc, cd = jax.random.normal(k, (6, d))
+        qb = 0.9 * qa + jnp.sqrt(1 - 0.81) * qb    # paraphrase: cos ~ 0.9
+        win_a = jnp.stack([ca, cb, ca, cb])[None]  # one shared context
+        win_c = jnp.stack([cc, cd, cc, cd])[None]  # an unrelated context
+        wl = jnp.asarray([4], dtype=jnp.int32)
+        fa = np.asarray(fuse_op(fusion, fs, qa[None], win_a, wl))[0]
+        fb = np.asarray(fuse_op(fusion, fs, qb[None], win_a, wl))[0]
+        fc = np.asarray(fuse_op(fusion, fs, qa[None], win_c, wl))[0]
+        same_state = float(fa @ fb)      # rephrased, same dialogue state
+        other_state = float(fa @ fc)     # identical text, other state
+        assert same_state > 0.9
+        assert other_state < 0.5
+
+    def test_decay_mean_weighs_recent_turns_more(self):
+        fusion = DecayMeanFusion(window=4, decay=0.5)
+        fs = fusion.init_state()
+        d = 384
+        old, new = jax.random.normal(jax.random.PRNGKey(1), (2, d))
+        q = jax.random.normal(jax.random.PRNGKey(2), (1, d))
+        win = jnp.stack([old, new])[None]            # oldest-to-newest
+        pad = jnp.zeros((1, 2, d))
+        win = jnp.concatenate([win, pad], axis=1)    # (1, 4, d)
+        wl = jnp.asarray([2], dtype=jnp.int32)
+        fused = np.asarray(fuse_op(fusion, fs, q, win, wl))[0]
+        rot = lambda v: np.roll(np.asarray(v) / np.linalg.norm(v), d // 2)
+        assert float(fused @ rot(new)) > float(fused @ rot(old))
+
+    def test_attention_pools_the_referred_turn(self):
+        """A query aligned with one turn pulls that turn into the key."""
+        fusion = AttentionFusion(window=4, temp=0.25)
+        fs = fusion.init_state()
+        d = 384
+        t0, t1, noise = jax.random.normal(jax.random.PRNGKey(4), (3, d))
+        q = (t1 + 0.1 * noise)[None]                 # refers back to t1
+        win = jnp.stack([t0, t1, jnp.zeros(d), jnp.zeros(d)])[None]
+        wl = jnp.asarray([2], dtype=jnp.int32)
+        fused = np.asarray(fuse_op(fusion, fs, q, win, wl))[0]
+        rot = lambda v: np.roll(np.asarray(v) / np.linalg.norm(v), d // 2)
+        assert float(fused @ rot(t1)) > float(fused @ rot(t0)) + 0.2
+
+    def test_fusion_state_checkpoints_both_strategies(self):
+        """One FusionState template for both strategies (§16.5): a state
+        made by one strategy has the other's leaf riding along."""
+        for fusion in STRATEGIES:
+            fs = fusion.init_state()
+            assert isinstance(fs, FusionState)
+            leaves = jax.tree_util.tree_leaves(fs)
+            assert len(leaves) == 3
+            assert all(l.dtype == jnp.float32 for l in leaves)
+
+    def test_strategy_validation(self):
+        with pytest.raises(ValueError, match="window"):
+            DecayMeanFusion(window=0)
+        with pytest.raises(ValueError, match="context_weight"):
+            DecayMeanFusion(context_weight=1.0)
+        with pytest.raises(ValueError, match="decay"):
+            DecayMeanFusion(decay=0.0)
+        with pytest.raises(ValueError, match="temp"):
+            AttentionFusion(temp=0.0)
+
+
+# --------------------------------------------------------------------- #
+# SessionStore: rings, TTL, LRU, tenancy
+# --------------------------------------------------------------------- #
+class TestSessionStore:
+    def test_ring_window_left_aligned_oldest_to_newest(self):
+        st = SessionStore(window=3, dim=4, ttl=None, max_sessions=8)
+        embs = [np.full((4,), float(i), dtype=np.float32) for i in range(5)]
+        win, n = st.window_for("t", "s", 0.0)
+        assert n == 0 and not win.any()
+        for i, e in enumerate(embs):
+            st.append("t", "s", e, float(i))
+        win, n = st.window_for("t", "s", 5.0)
+        assert n == 3                       # capped at the window size
+        # last W turns, oldest first: 2, 3, 4
+        np.testing.assert_array_equal(win[:, 0], [2.0, 3.0, 4.0])
+
+    def test_partial_window_zero_padded(self):
+        st = SessionStore(window=4, dim=4, ttl=None)
+        st.append("t", "s", np.ones(4, np.float32), 0.0)
+        win, n = st.window_for("t", "s", 0.0)
+        assert n == 1
+        assert win[0].all() and not win[1:].any()
+
+    def test_tenant_namespacing(self):
+        """Same wire-level session id under two tenants = two sessions —
+        a session can never read another tenant's turns (§16.1)."""
+        st = SessionStore(window=2, dim=4, ttl=None)
+        st.append("acme", "chat-1", np.ones(4, np.float32), 0.0)
+        assert st.turns("acme", "chat-1") == 1
+        assert st.turns("globex", "chat-1") == 0
+        win, n = st.window_for("globex", "chat-1", 0.0)
+        assert n == 0 and not win.any()
+        assert len(st) == 2                 # two distinct sessions exist
+
+    def test_ttl_stale_on_touch_restarts_session(self):
+        st = SessionStore(window=2, dim=4, ttl=10.0)
+        st.append("t", "s", np.ones(4, np.float32), 0.0)
+        _, n = st.window_for("t", "s", 5.0)     # within TTL: turns kept
+        assert n == 1
+        _, n = st.window_for("t", "s", 100.0)   # reused id, long idle
+        assert n == 0
+        assert st.expired_ttl == 1
+
+    def test_expire_sweeps_only_dead_sessions(self):
+        st = SessionStore(window=2, dim=4, ttl=10.0)
+        st.append("t", "old", np.ones(4, np.float32), 0.0)
+        st.append("t", "new", np.ones(4, np.float32), 95.0)
+        assert st.expire(100.0) == 1
+        assert st.turns("t", "old") == 0
+        assert st.turns("t", "new") == 1
+        assert st.expire(100.0) == 0            # idempotent
+        assert st.stats()["expired_ttl"] == 1
+
+    def test_lru_cap_bounds_sessions(self):
+        st = SessionStore(window=2, dim=4, ttl=None, max_sessions=3)
+        for i in range(5):
+            st.append("t", f"s{i}", np.ones(4, np.float32), float(i))
+        assert len(st) == 3
+        assert st.evicted_lru == 2
+        assert st.turns("t", "s0") == 0 and st.turns("t", "s1") == 0
+        assert st.turns("t", "s4") == 1
+        # touching refreshes recency: s2 survives the next eviction
+        st.window_for("t", "s2", 10.0)
+        st.append("t", "s5", np.ones(4, np.float32), 11.0)
+        assert st.turns("t", "s2") == 1 and st.turns("t", "s3") == 0
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            SessionStore(window=0, dim=4)
+        with pytest.raises(ValueError):
+            SessionStore(window=2, dim=4, max_sessions=0)
+        with pytest.raises(ValueError):
+            SessionStore(window=2, dim=4, ttl=0.0)
+
+
+# --------------------------------------------------------------------- #
+# engine integration: one compiled step, key parity, hit conversion
+# --------------------------------------------------------------------- #
+class TestEngineSessions:
+    def test_no_recompile_across_session_mixes(self, pairs):
+        """Acceptance criterion (§16.3): the turn window is a traced
+        operand, so all-sessionless, mixed and all-session batches — full
+        or padded — share ONE compiled fused step."""
+        eng, _ = mk_engine(pairs, fusion=DecayMeanFusion(window=4))
+        eng.process([Request(query=f"stateless {i}") for i in range(8)])
+        traces = eng._step_jit._cache_size()
+        assert traces == 1
+        eng.process([Request(query=f"mixed {i}",
+                             session="conv-a" if i % 2 else "")
+                     for i in range(8)])
+        eng.process([Request(query=f"deep {i}", session="conv-b")
+                     for i in range(3)])     # padded partial batch
+        assert eng._step_jit._cache_size() == traces
+        assert eng._peek_jit._cache_size() == 1
+
+    def test_sessionless_traffic_identical_with_and_without_fusion(self,
+                                                                   pairs):
+        """A fusion-enabled engine serving only sessionless requests is
+        byte-for-byte today's stateless engine (§16.3)."""
+        reqs = [Request(query=p.question, source_id=p.qa_id,
+                        semantic_key=p.semantic_key) for p in pairs[:16]]
+        results = {}
+        for fusion in (DecayMeanFusion(window=4), None):
+            eng, _ = mk_engine(pairs, fusion=fusion)
+            eng.warm(pairs)
+            resp = eng.process(reqs)
+            results[fusion is None] = [
+                (r.answer, r.cached, round(r.score, 5), r.context)
+                for r in resp]
+        assert results[True] == results[False]
+        assert all(not ctx for *_, ctx in results[False])
+
+    @pytest.mark.parametrize("fusion", STRATEGIES,
+                             ids=["decay", "attention"])
+    def test_step_inserts_exactly_the_standalone_fused_key(self, pairs,
+                                                           fusion):
+        """Parity pin: the in-step fusion must be the plain ``fuse_op``,
+        not a divergent reimplementation — the key the fused step inserts
+        for a session miss equals the standalone op's output."""
+        eng, _ = mk_engine(pairs, fusion=fusion)
+        sess = "parity-conv"
+        eng.process([Request(query="seed turn for context", session=sess)])
+        win, n = eng.sessions.window_for("default", sess, eng._now)
+        assert n == 1
+        q = "a brand new follow-up that must miss"
+        eng.process([Request(query=q, session=sess)])
+        emb = jnp.asarray(eng.embedder.embed_batch([q]))
+        expect = np.asarray(fuse_op(
+            fusion, eng.runtime.fusion, emb, jnp.asarray(win[None]),
+            jnp.asarray([n], dtype=jnp.int32)))[0]
+        keys = np.asarray(eng.state.keys, dtype=np.float32)
+        sims = keys @ expect
+        np.testing.assert_allclose(float(sims.max()), 1.0, atol=1e-5)
+
+    def test_record_replay_follow_ups_convert_to_hits(self, pairs):
+        """The tentpole behaviour (§16.6): replayed follow-ups — globally
+        unique raw texts — hit the recording's fused entries with fusion
+        and CANNOT hit without it, at paper-grade precision."""
+        convs = build_multi_turn_workload(pairs, 4, turns=3, seed=11)
+        summaries = {}
+        for tag, fusion in (("on", DecayMeanFusion(window=4)),
+                            ("off", None)):
+            eng, key_by_sid = mk_engine(pairs, fusion=fusion)
+            register_followup_keys(key_by_sid, convs)
+            eng.warm(pairs)
+            serve_conversations(eng, convs)
+            summaries[tag] = eng.metrics.summary()
+        on = summaries["on"]["categories"]
+        off = summaries["off"]["categories"]
+        # replayed opener: identical text — hits either way
+        assert on["ctx/open_repeat"]["hit_rate"] == 1.0
+        assert off["ctx/open_repeat"]["hit_rate"] == 1.0
+        # replayed follow-ups: the conversion the subsystem exists for
+        assert on["ctx/followup_repeat"]["hit_rate"] == 1.0
+        assert on["ctx/followup_repeat"]["positive_rate"] == 1.0
+        assert off["ctx/followup_repeat"]["hit_rate"] == 0.0
+        # context-bucket metrics rode along and clear the >97% bar
+        ctx = summaries["on"]["context"]["context"]
+        assert ctx["lookups"] > 0
+        assert ctx["positive_rate"] > 0.97
+        assert summaries["off"]["context"] == {}
+
+    def test_separate_path_matches_fused_path_with_sessions(self, pairs):
+        """The reference (separate) path pre-fuses with the same op the
+        fused step inlines — both serve identical hit patterns."""
+        convs = build_multi_turn_workload(pairs, 3, turns=3, seed=5)
+        patterns = {}
+        for fused in (True, False):
+            eng, key_by_sid = mk_engine(pairs,
+                                        fusion=DecayMeanFusion(window=4),
+                                        use_fused_step=fused)
+            register_followup_keys(key_by_sid, convs)
+            eng.warm(pairs)
+            serve_conversations(eng, convs)
+            s = eng.metrics.summary()["categories"]
+            patterns[fused] = {c: (s[c]["cache_hits"], s[c]["lookups"])
+                               for c in s}
+        assert patterns[True] == patterns[False]
+
+    def test_responses_flag_context_rows(self, pairs):
+        eng, _ = mk_engine(pairs, fusion=DecayMeanFusion(window=4))
+        r0 = eng.process([Request(query="first turn", session="c")])[0]
+        assert not r0.context                # empty window on turn 0
+        r1 = eng.process([Request(query="second turn", session="c"),
+                          Request(query="stateless neighbour")])
+        assert r1[0].context and not r1[1].context
+
+    def test_session_requires_fusion_to_matter(self, pairs):
+        """On a fusion-less engine the session field is inert: no store is
+        attached and responses never carry the context flag."""
+        eng, _ = mk_engine(pairs, fusion=None)
+        assert eng.sessions is None
+        resp = eng.process([Request(query="hello", session="c")] * 2)
+        assert all(not r.context for r in resp)
+
+
+# --------------------------------------------------------------------- #
+# checkpoint compatibility (§16.5)
+# --------------------------------------------------------------------- #
+class TestSessionCheckpoint:
+    def test_fusion_round_trip_preserves_replay_hits(self, pairs, tmp_path):
+        convs = build_multi_turn_workload(pairs, 3, turns=3, seed=9)
+        n = len(convs) // 2
+        eng, key_by_sid = mk_engine(pairs, fusion=DecayMeanFusion(window=4))
+        register_followup_keys(key_by_sid, convs)
+        eng.warm(pairs)
+        for level in turn_levels(convs[:n]):     # recordings only
+            eng.process(level)
+        path = str(tmp_path / "session_era")
+        eng.save_cache(path)
+
+        eng2, key2 = mk_engine(pairs, fusion=DecayMeanFusion(window=4))
+        register_followup_keys(key2, convs)
+        eng2.load_cache(path)
+        # fusion leaves restored (not re-initialised junk)
+        assert eng2.runtime.fusion is not None
+        np.testing.assert_allclose(
+            float(eng2.runtime.fusion.context_weight), 0.8, atol=1e-6)
+        for level in turn_levels(convs[n:]):     # replays against restore
+            eng2.process(level)
+        s = eng2.metrics.summary()["categories"]
+        assert s["ctx/followup_repeat"]["hit_rate"] == 1.0
+        assert s["ctx/followup_repeat"]["positive_rate"] == 1.0
+
+    def test_pre_session_snapshot_loads_into_session_engine(self, pairs,
+                                                            tmp_path):
+        """Forward compatibility: a single-turn era snapshot restores into
+        a session-enabled engine — shared leaves load, the engine keeps
+        its fresh fusion state, and warm raw keys still hit."""
+        old, _ = mk_engine(pairs, fusion=None)
+        old.warm(pairs)
+        path = str(tmp_path / "pre_session")
+        old.save_cache(path)
+
+        eng, _ = mk_engine(pairs, fusion=AttentionFusion(window=4))
+        eng.load_cache(path)
+        assert eng.runtime.fusion is not None    # kept, not dropped
+        resp = eng.process([Request(query=p.question, source_id=p.qa_id,
+                                    semantic_key=p.semantic_key)
+                            for p in pairs[:8]])
+        assert all(r.cached for r in resp)
+
+    def test_fusion_snapshot_into_fusionless_engine_fails_loudly(
+            self, pairs, tmp_path):
+        """Backward direction must NOT silently drop learned fusion
+        weights — every fused slab key was stored under them."""
+        eng, _ = mk_engine(pairs, fusion=DecayMeanFusion(window=4))
+        eng.process([Request(query="turn one", session="c")])
+        path = str(tmp_path / "fused_era")
+        eng.save_cache(path)
+
+        plain, _ = mk_engine(pairs, fusion=None)
+        with pytest.raises(ValueError, match="fusion"):
+            plain.load_cache(path)
+
+
+# --------------------------------------------------------------------- #
+# session-scoped coalescing (§16.3)
+# --------------------------------------------------------------------- #
+class TestSessionCoalescing:
+    def test_coalesce_key_shape(self):
+        a = coalesce_key(Request(query="What  About the second one?",
+                                 session="s1"))
+        b = coalesce_key(Request(query="what about the second one?",
+                                 session="s1"))
+        c = coalesce_key(Request(query="what about the second one?",
+                                 session="s2"))
+        d = coalesce_key(Request(query="what about the second one?"))
+        assert a == b           # normalization still applies within a session
+        assert len({b, c, d}) == 3
+        # sessionless keys keep the (tenant, "", query) shape — pre-session
+        # coalescing behaviour is unchanged
+        assert d == "default\x1f\x1fwhat about the second one?"
+
+    def test_identical_followup_text_does_not_coalesce_across_sessions(
+            self, pairs):
+        """Regression (§16.3): two sessions asking the same follow-up TEXT
+        are different dialogue states — sharing one in-flight leader would
+        hand one session an answer fused under the other's context."""
+        eng, _ = mk_engine(pairs, fusion=DecayMeanFusion(window=4))
+
+        async def drive():
+            sched = SchedulerConfig(max_batch=8, max_wait_ms=5.0)
+            async with AsyncCacheServer(eng, sched) as server:
+                # distinct openers: the two sessions diverge
+                await asyncio.gather(
+                    server.submit(pairs[0].question, session="conv-a"),
+                    server.submit(pairs[1].question, session="conv-b"))
+                calls0 = eng.backend.calls
+                # identical elliptical follow-up text, both sessions at once
+                follow = await asyncio.gather(
+                    server.submit("what about the second one?",
+                                  session="conv-a"),
+                    server.submit("what about the second one?",
+                                  session="conv-b"))
+                return calls0, follow
+
+        calls0, follow = asyncio.run(drive())
+        # neither coalesced with the other, and neither hit the other's
+        # fused entry: each paid its own backend call
+        assert not any(r.coalesced for r in follow)
+        assert eng.backend.calls - calls0 == 2
+        assert all(r.context for r in follow)
+
+    def test_same_session_duplicates_still_coalesce(self, pairs):
+        eng, _ = mk_engine(pairs, fusion=DecayMeanFusion(window=4))
+
+        async def drive():
+            sched = SchedulerConfig(max_batch=8, max_wait_ms=5.0)
+            async with AsyncCacheServer(eng, sched) as server:
+                await server.submit(pairs[0].question, session="conv")
+                calls0 = eng.backend.calls
+                dup = await asyncio.gather(*(
+                    server.submit("and what about pricing?", session="conv")
+                    for _ in range(4)))
+                return calls0, dup
+
+        calls0, dup = asyncio.run(drive())
+        assert eng.backend.calls - calls0 == 1   # one leader, three waiters
+        assert sum(r.coalesced for r in dup) == 3
+
+
+# --------------------------------------------------------------------- #
+# flush-path expiry + bounded memory (§16.4)
+# --------------------------------------------------------------------- #
+class TestSessionHygiene:
+    def test_flush_path_expires_abandoned_sessions(self, pairs):
+        """An abandoned session dies on the next admission flush — nobody
+        has to touch it (the serve_batch expire sweep)."""
+        eng, _ = mk_engine(pairs, fusion=DecayMeanFusion(window=4),
+                           session_ttl_s=60.0)
+        eng.process([Request(query="opening turn", session="abandoned")])
+        assert eng.sessions.turns("default", "abandoned") == 1
+        eng.tick(120.0)                          # idle past the TTL
+        # serve OTHER traffic: the sweep runs on the flush, not on touch
+        eng.process([Request(query="unrelated stateless request")])
+        assert eng.sessions.turns("default", "abandoned") == 0
+        assert eng.sessions.stats()["expired_ttl"] == 1
+
+    def test_session_memory_bounded_under_many_conversations(self, pairs):
+        """LRU cap: serving far more distinct sessions than max_sessions
+        never grows the store past the bound."""
+        eng, _ = mk_engine(pairs, fusion=DecayMeanFusion(window=4),
+                           max_sessions=16)
+        for i in range(0, 64, 8):
+            eng.process([Request(query=f"opening turn {i + j}",
+                                 session=f"conv-{i + j}")
+                         for j in range(8)])
+        st = eng.sessions.stats()
+        assert st["sessions"] <= 16
+        assert st["created"] == 64
+        assert st["evicted_lru"] == 48
