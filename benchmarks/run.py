@@ -83,7 +83,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced dataset sizes (CI-friendly)")
     ap.add_argument("--only", default=None,
-                    help="substring filter on benchmark group names")
+                    help="comma-separated substring filters on benchmark "
+                         "group names (a group runs if any filter matches)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write a machine-readable results artifact")
     args = ap.parse_args()
@@ -109,6 +110,7 @@ def main() -> None:
         ("sec2.7", paper_tables.ttl_behaviour),
         ("tenancy", lambda: paper_tables.tenant_table(full=full)),
         ("context", lambda: paper_tables.context_table(full=full)),
+        ("near", lambda: paper_tables.near_hit_table(full=full)),
         ("kernel", kernel_bench.cosine_topk_scaling),
         ("kernel-masked", kernel_bench.masked_lookup_scaling),
         ("kernel-ivf", kernel_bench.fused_ivf_bench),
@@ -120,9 +122,10 @@ def main() -> None:
         ("dryrun", roofline_report.dryrun_summary_rows),
     ]
 
+    only = [s.strip() for s in args.only.split(",")] if args.only else None
     all_rows, errors = [], []
     for name, fn in groups:
-        if args.only and args.only not in name:
+        if only and not any(o and o in name for o in only):
             continue
         try:
             rows, _ = fn()

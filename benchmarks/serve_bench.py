@@ -1,6 +1,7 @@
 """Tail-latency + coalescing benchmark for the async serving subsystem.
 
-Five experiments on the simulated backend (DESIGN.md §12.5, §13.5, §16.6):
+Six experiments on the simulated backend (DESIGN.md §12.5, §13.5, §16.6,
+§17.6):
 
   1. **parity** — the async scheduler must reproduce the sync engine's
      results on an identical workload: same per-request hit/miss
@@ -21,6 +22,10 @@ Five experiments on the simulated backend (DESIGN.md §12.5, §13.5, §16.6):
      (globally unique raw texts) must convert from 0% hits stateless to
      hits under fusion, while context-hit precision clears the same >97%
      bar as stateless serving and the session store stays bounded.
+  6. **near-hit** — the generative band (§17) against an exact-reuse-only
+     baseline on the same workload: judged near-hits must convert, cut
+     backend calls strictly beyond exact reuse at >0.9 judge precision,
+     and leave every exact-hit row byte-identical.
 
 Output: ``name,value`` CSV rows, then a JSON metrics summary.
 
@@ -38,6 +43,7 @@ import sys
 from repro.core.types import CacheConfig
 from repro.data.qa_dataset import build_corpus
 from repro.context import DecayMeanFusion
+from repro.generative import BandPolicy, TemplateSplice
 from repro.serving import (AsyncCacheServer, CachedEngine, Request,
                            SchedulerConfig, ServingMetrics,
                            SimulatedLLMBackend, build_multi_tenant_workload,
@@ -54,7 +60,8 @@ def _emit(name: str, value) -> None:
 def make_engine(pairs, *, batch_size: int, latency_s: float = 0.0,
                 block: bool = False, warm: bool = True,
                 registry=None, fusion=None, judge=None,
-                max_sessions: int = 4096) -> CachedEngine:
+                max_sessions: int = 4096, synthesizer=None,
+                policy=None) -> CachedEngine:
     by_id = {p.qa_id: p for p in pairs}
 
     def default_judge(req, sid):
@@ -70,7 +77,8 @@ def make_engine(pairs, *, batch_size: int, latency_s: float = 0.0,
                       value_len=48, ttl=None, threshold=0.8)
     eng = CachedEngine(cfg, backend, judge=judge or default_judge,
                        batch_size=batch_size, registry=registry,
-                       fusion=fusion, max_sessions=max_sessions)
+                       fusion=fusion, max_sessions=max_sessions,
+                       synthesizer=synthesizer, policy=policy)
     if warm:
         if registry is None:
             eng.warm(pairs)
@@ -260,6 +268,42 @@ def bench_multi_turn(pairs, *, batch: int, n_groups: int,
     return out
 
 
+def bench_near_hit(pairs, workload, *, batch: int) -> dict:
+    """Generative near-hit band vs exact-reuse-only baseline (§17).
+
+    Same workload through (a) a plain exact-reuse engine and (b) a banded
+    engine with a TemplateSplice synthesizer. The band engine must convert
+    judged band rows into served near-hits, cut backend calls *strictly
+    below* the exact-reuse baseline, keep judge-verified near precision
+    high, and — because bands only touch rows the exact path would have
+    missed — serve byte-identical answers on every row the baseline hit.
+    """
+    base = make_engine(pairs, batch_size=batch)
+    base_resp = base.process(workload)
+
+    banded = make_engine(pairs, batch_size=batch,
+                         synthesizer=TemplateSplice(rival_margin=0.12),
+                         policy=BandPolicy(tau_lo=0.75, tau_hi=0.8))
+    band_resp = banded.process(workload)
+
+    near = banded.metrics.near
+    exact_rows_identical = all(
+        b.cached and a.answer == b.answer and a.score == b.score
+        for a, b in zip(base_resp, band_resp) if a.cached)
+    return {
+        "baseline_backend_calls": base.backend.calls,
+        "band_backend_calls": banded.backend.calls,
+        "calls_saved_beyond_exact": base.backend.calls - banded.backend.calls,
+        "band_lookups": near.band,
+        "near_hits_served": near.served,
+        "near_conversion_rate": round(near.conversion_rate, 4),
+        "near_precision": round(near.precision, 4),
+        "synthesis_cost_usd": round(near.synthesis_cost_usd, 6),
+        "exact_rows_identical": exact_rows_identical,
+        "band_lo_final": round(float(banded.policy_state[0]), 4),
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -314,6 +358,13 @@ def main(argv=None) -> int:
     for k, v in ctx.items():
         _emit(f"serve/context_{k}", v)
 
+    # 6. generative near-hit band: judged synthesis vs exact-reuse baseline
+    near_wl = build_workload(pairs, min(n_req, 256 if args.smoke else 1000),
+                             paraphrase_ratio=0.8, burst_prob=0.0, seed=29)
+    nh = bench_near_hit(pairs, near_wl, batch=batch)
+    for k, v in nh.items():
+        _emit(f"serve/near_{k}", v)
+
     ok = True
     if not parity["decisions_match"] or not parity["answers_match"]:
         print("FAIL: async scheduler diverged from sync engine", file=sys.stderr)
@@ -347,6 +398,24 @@ def main(argv=None) -> int:
         ok = False
     if not ctx["sessions_bounded"]:
         print("FAIL: session store exceeded its LRU cap", file=sys.stderr)
+        ok = False
+    # near-hit band expectations are hard requirements (§17): the band must
+    # convert, its savings must be strictly beyond exact reuse, the judge
+    # must confirm the synthesized answers, and exact-path serving must be
+    # byte-identical to a cache without bands
+    if nh["near_hits_served"] <= 0:
+        print("FAIL: near-hit band served nothing", file=sys.stderr)
+        ok = False
+    if nh["near_precision"] <= 0.9:
+        print("FAIL: near-hit judge precision below the 0.9 bar",
+              file=sys.stderr)
+        ok = False
+    if nh["band_backend_calls"] >= nh["baseline_backend_calls"]:
+        print("FAIL: band did not cut backend calls beyond exact reuse",
+              file=sys.stderr)
+        ok = False
+    if not nh["exact_rows_identical"]:
+        print("FAIL: band engine diverged on exact-hit rows", file=sys.stderr)
         ok = False
     _emit("serve/ok", ok)
     return 0 if ok else 1

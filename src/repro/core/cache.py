@@ -153,6 +153,25 @@ class SemanticCache:
         thr = self.partition.thresholds_array()[tenant_id]      # (B,)
         return jnp.where(thr >= 0.0, score >= thr, hit)
 
+    # -- near-hit band (no-op unless the policy defines one — §17) ----------
+    def _near_mask(self, hit: Array, score: Array,
+                   tenant_id: Array | None, pstate: Array) -> Array:
+        """[τ_lo, τ_hi) band membership for each row, or all-False on a
+        band-less policy. The ``hasattr`` probe is a trace-time Python
+        constant, so a band-less cache compiles the exact same program as
+        before this subsystem existed. ``& ~hit`` makes the upper band edge
+        *definitionally* the effective hit edge — including per-tenant τ_hi
+        overrides — and a per-tenant ``band_lo`` override (sentinel < 0 =
+        none) replaces the lower edge the same way τ_hi overrides replace
+        the hit threshold."""
+        if not hasattr(self.policy, "near"):
+            return jnp.zeros_like(hit)
+        near = self.policy.near(score, pstate)
+        if tenant_id is not None:
+            lo = self.partition.band_lo_array()[tenant_id]      # (B,)
+            near = jnp.where(lo >= 0.0, score >= lo, near)
+        return near & ~hit & (score > -jnp.inf)
+
     # -- lookup (paper §2.5 step 1) ----------------------------------------
     def lookup(
         self,
@@ -205,6 +224,8 @@ class SemanticCache:
         if tenant_id is not None:
             hit = self._apply_threshold_overrides(hit, best_score, tenant_id)
         hit = hit & (best_score > -jnp.inf)
+        near = self._near_mask(hit, best_score, tenant_id,
+                               runtime.policy_state)
 
         result = LookupResult(
             index=best_idx.astype(jnp.int32),
@@ -215,6 +236,7 @@ class SemanticCache:
             source_id=state.source_id[best_idx],
             topk_index=top_i,
             topk_score=top_s,
+            near=near,
         )
         if not update_counters:
             return result, runtime
@@ -224,6 +246,26 @@ class SemanticCache:
                                         hit=hit, valid=None)
         return result, runtime.replace(state=state, stats=stats,
                                        policy_state=pstate, tenancy=tenancy)
+
+    def gather_topk(self, runtime: CacheRuntime, result: LookupResult
+                    ) -> dict[str, Array]:
+        """Materialize the top-k neighbour payload for a lookup result —
+        the device half of the near-hit path (§17.3): cached responses,
+        lengths, provenance and scores for every visible neighbour, ready
+        to hand to a host-side ``Synthesizer``. Invalid neighbour slots
+        (index -1: empty cache / region smaller than k) come back with
+        length 0, source -1 and score -inf, so the host can trust the
+        payload without re-checking the slab. Pure gather — jit it with
+        the peek; it never touches counters."""
+        idx = jnp.maximum(result.topk_index, 0)
+        ok = result.topk_index >= 0
+        state = runtime.state
+        return {
+            "values": jnp.where(ok[..., None], state.values[idx], 0),
+            "value_lens": jnp.where(ok, state.value_lens[idx], 0),
+            "source_id": jnp.where(ok, state.source_id[idx], -1),
+            "score": jnp.where(ok, result.topk_score, -jnp.inf),
+        }
 
     def _account_lookups(self, tenancy, tenant_id: Array | None, *,
                          hit: Array, valid: Array | None):
@@ -309,6 +351,18 @@ class SemanticCache:
             runtime.policy_state, was_positive=was_positive, was_hit=was_hit)
         return runtime.replace(policy_state=pstate)
 
+    def update_band(self, runtime: CacheRuntime, *, was_positive: Array,
+                    was_near: Array) -> CacheRuntime:
+        """Judged synthesized-answer outcomes into the band edge (§17.2) —
+        the near-hit analogue of ``update_policy``. A no-op (structurally,
+        at trace time) on a band-less policy."""
+        if not hasattr(self.policy, "update_band"):
+            return runtime
+        pstate = self.policy.update_band(
+            runtime.policy_state, was_positive=was_positive,
+            was_near=was_near)
+        return runtime.replace(policy_state=pstate)
+
     # -- fused serve-side step (beyond-paper: single jit — DESIGN.md §7) -----
     def commit(self, runtime: CacheRuntime, peeked: LookupResult,
                now: Array | float, *, valid: Array | None = None,
@@ -331,12 +385,15 @@ class SemanticCache:
             hit = self._apply_threshold_overrides(hit, peeked.score,
                                                   tenant_id)
         hit = hit & (peeked.score > -jnp.inf)
+        near = self._near_mask(hit, peeked.score, tenant_id,
+                               runtime.policy_state)
         if valid is None:
             n_lookups = peeked.score.shape[0]
         else:
             hit = hit & valid
+            near = near & valid
             n_lookups = jnp.sum(valid).astype(jnp.int32)
-        result = dataclasses.replace(peeked, hit=hit)
+        result = dataclasses.replace(peeked, hit=hit, near=near)
         state = store.touch(runtime.state, peeked.index, now, hit)
         stats = runtime.stats.record_lookups(
             n_lookups, jnp.sum(hit).astype(jnp.int32))

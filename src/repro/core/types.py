@@ -107,6 +107,8 @@ class LookupResult:
     source_id: Array   # (B,) int32 provenance of the matched entry
     topk_index: Array  # (B, k) int32
     topk_score: Array  # (B, k) float32
+    near: Array     # (B,) bool score in [τ_lo, τ_hi) band — always False
+                    # unless the policy defines a band (DESIGN.md §17)
 
 
 @jax.tree_util.register_dataclass

@@ -3,6 +3,7 @@ encoder. Both produce L2-normalized vectors compatible with the cache."""
 from repro.embedding.hash_embedder import HashEmbedder
 from repro.embedding.encoder import (EncoderConfig, MINILM_L6, encode,
                                      init_encoder_params)
+from repro.embedding.lsh import SimHashLSH, cosine
 
 __all__ = ["HashEmbedder", "EncoderConfig", "MINILM_L6", "encode",
-           "init_encoder_params"]
+           "init_encoder_params", "SimHashLSH", "cosine"]

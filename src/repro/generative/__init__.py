@@ -1,0 +1,23 @@
+"""Generative near-hit cache: tiered threshold bands + answer synthesis
+from top-k neighbours (DESIGN.md §17)."""
+from repro.generative.policy import BandPolicy
+from repro.generative.synthesize import (
+    Neighbour,
+    SmallModelRewrite,
+    SmallRewriteBackend,
+    Synthesis,
+    Synthesizer,
+    TemplateSplice,
+    rewrite_prompt,
+)
+
+__all__ = [
+    "BandPolicy",
+    "Neighbour",
+    "SmallModelRewrite",
+    "SmallRewriteBackend",
+    "Synthesis",
+    "Synthesizer",
+    "TemplateSplice",
+    "rewrite_prompt",
+]

@@ -1,0 +1,118 @@
+"""BandPolicy — tiered threshold bands for the generative near-hit cache
+(DESIGN.md §17.2).
+
+The paper's lookup is binary: one cosine threshold τ (0.8, §5.3) splits
+hit from miss, and a query scoring 0.79 discards its top-k neighbours and
+pays a full LLM call. The Generative Caching system (arxiv 2503.17603)
+shows that band — *similar but not identical* — is exactly where cheap
+answer synthesis from the neighbours recovers most of the remaining
+backend calls. ``BandPolicy`` adds the band as a second threshold edge:
+
+    score >= τ_hi          — exact reuse (today's hit path, unchanged)
+    τ_lo <= score < τ_hi   — near-hit: surface the top-k neighbours to a
+                             host-side ``Synthesizer`` (§17.3)
+    score < τ_lo           — miss (full backend call)
+
+Edge semantics are closed-open: a score exactly at τ_lo is a near-hit, a
+score exactly at τ_hi is an exact hit (never both — the near mask is
+defined with ``& ~hit`` at the cache level, so a per-tenant τ_hi override
+moves the upper band edge automatically).
+
+``BandPolicy`` conforms to the ``repro.core.runtime.Policy`` protocol —
+``decide`` is byte-identical to ``FixedThreshold(τ_hi)``, so a band cache
+with the synthesizer disabled makes exactly today's hit/miss decisions —
+and adds two band-specific methods the cache discovers structurally
+(``hasattr``, a trace-time constant, so band choice never recompiles or
+forks the fused step):
+
+  * ``near(scores, state)`` — the [τ_lo, τ_hi) membership mask;
+  * ``update_band(state, was_positive, was_near)`` — judged near-hit
+    outcomes nudge τ_lo exactly like ``AdaptiveThreshold`` nudges its
+    threshold (paper §2.10; MeanCache arxiv 2403.02694 motivates learning
+    the edge from hit-quality feedback): synthesis precision below target
+    raises τ_lo (shrinks the band), precision above target with headroom
+    lowers it to harvest more near-hits.
+
+State layout: ``[τ_lo, τ_hi, ema_near_precision]`` (f32). τ_hi is static
+— it is the paper's exact-reuse threshold, already tunable via
+``AdaptiveThreshold`` if desired — only the band's lower edge adapts.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class BandPolicy:
+    """Two-edge threshold band; exact path identical to FixedThreshold(τ_hi).
+
+    Defaults calibrated on the hash-embedder workload (DESIGN.md §17.2):
+    τ_lo=0.70 puts ~19% of paper-mixture queries in the band, and with the
+    default ``TemplateSplice`` rival gating the synthesized answers hold
+    ~0.99 judged precision — comfortably above the 0.9 acceptance bar.
+    """
+
+    tau_lo: float = 0.70
+    tau_hi: float = 0.80
+    # judged near-hit feedback loop (0 lr = static edges)
+    target_precision: float = 0.92
+    lr: float = 0.02
+    ema: float = 0.9
+    lo_min: float = 0.55
+    min_width: float = 0.01     # τ_lo can never cross τ_hi - min_width
+
+    def __post_init__(self):
+        if not (0.0 <= self.tau_lo <= self.tau_hi <= 1.0):
+            raise ValueError(
+                f"need 0 <= tau_lo <= tau_hi <= 1, got "
+                f"({self.tau_lo}, {self.tau_hi})")
+        if self.lo_min > self.tau_lo:
+            raise ValueError("lo_min must not exceed tau_lo")
+
+    # -- Policy protocol (uniform with Fixed/AdaptiveThreshold) ----------- #
+    def init_state(self) -> Array:
+        return jnp.asarray([self.tau_lo, self.tau_hi, self.target_precision],
+                           dtype=jnp.float32)
+
+    def decide(self, scores: Array, state: Array) -> tuple[Array, Array]:
+        """Exact-reuse decision: hit iff score >= τ_hi (today's path)."""
+        return scores >= state[1], state
+
+    def update(self, state: Array, *, was_positive: Array, was_hit: Array
+               ) -> Array:
+        return state  # exact edge is static; the band edge adapts below
+
+    # -- band seam (discovered via hasattr — trace-time, no recompile) ---- #
+    def near(self, scores: Array, state: Array) -> Array:
+        """[τ_lo, τ_hi) membership. τ_lo inclusive, τ_hi exclusive; the
+        cache additionally strips hit rows (``& ~hit``), which is what
+        keeps the upper edge consistent under per-tenant τ_hi overrides."""
+        return (scores >= state[0]) & (scores < state[1])
+
+    def update_band(self, state: Array, *, was_positive: Array,
+                    was_near: Array) -> Array:
+        """Judged synthesized-answer outcomes for a batch -> new τ_lo.
+
+        Mirrors ``AdaptiveThreshold.update``: an EMA of near-hit precision
+        tracks ``target_precision``; too many judged-negative syntheses
+        raise τ_lo (shrink the band), surplus precision lowers it. Bounds:
+        ``[lo_min, τ_hi - min_width]`` so the band can tighten to (almost)
+        nothing but never inverts.
+        """
+        lo, hi, prec = state[0], state[1], state[2]
+        n_near = jnp.sum(was_near.astype(jnp.float32))
+        batch_prec = jnp.where(
+            n_near > 0,
+            jnp.sum((was_positive & was_near).astype(jnp.float32))
+            / jnp.maximum(n_near, 1.0),
+            prec,  # no near-hits -> no evidence
+        )
+        prec = self.ema * prec + (1.0 - self.ema) * batch_prec
+        step = self.lr * (self.target_precision - prec)
+        lo = jnp.clip(lo + step, self.lo_min, hi - self.min_width)
+        return jnp.stack([lo, hi, prec])

@@ -9,14 +9,16 @@ from repro.serving.loadgen import (LoadResult, build_multi_tenant_workload,
                                    run_sessions, run_waves, tenant_rng,
                                    turn_levels, zipf_weights)
 from repro.serving.metrics import (CategoryMetrics, ContextMetrics,
-                                   ServingMetrics, TenantMetrics)
+                                   NearHitMetrics, ServingMetrics,
+                                   TenantMetrics)
 from repro.serving.scheduler import (AsyncScheduler, SchedulerConfig,
                                      coalesce_key, normalize_query)
 from repro.serving.server import AsyncCacheServer
 
 __all__ = ["Batcher", "CachedEngine", "Request", "Response", "BackendResult",
            "ModelBackend", "SimulatedLLMBackend", "CategoryMetrics",
-           "ContextMetrics", "ServingMetrics", "TenantMetrics",
+           "ContextMetrics", "NearHitMetrics", "ServingMetrics",
+           "TenantMetrics",
            "AsyncScheduler", "SchedulerConfig", "coalesce_key",
            "normalize_query", "AsyncCacheServer", "LoadResult",
            "build_workload", "build_multi_tenant_workload",

@@ -33,6 +33,15 @@ of the session's prior raw turn embeddings rides along as one more traced
 operand, the fused key searches AND populates the slab, and sessionless
 rows (empty ``session``) pass through bit-identically, so session and
 stateless traffic share one compiled program.
+
+Generative near-hits (DESIGN.md §17): constructing the engine with a
+``Synthesizer`` (and a band policy — defaulted when ``policy=None``)
+routes lookups scoring in [τ_lo, τ_hi) through host-side answer synthesis
+from their top-k neighbours instead of a full backend call. Converted
+rows are admitted back into the slab under their own key with the
+dominant neighbour's provenance, judged like exact hits, and fed back
+into the band's lower edge. Without a synthesizer the band masks are
+all-False and every path is bit-identical to binary hit/miss serving.
 """
 from __future__ import annotations
 
@@ -75,6 +84,10 @@ class Response:
                               # (async scheduler, DESIGN.md §12.3)
     context: bool = False     # looked up under a non-empty session turn
                               # window, i.e. the key was context-fused (§16)
+    near_hit: bool = False    # synthesized from top-k neighbours in the
+                              # [τ_lo, τ_hi) band (§17) — ``cached`` stays
+                              # False: near-hits are provenance-distinct
+                              # from exact reuse
 
 
 #: Row used to right-pad a partial batch up to the engine's fixed batch
@@ -122,7 +135,8 @@ class CachedEngine:
                  registry=None,
                  fusion=None,
                  session_ttl_s: float | None = 1800.0,
-                 max_sessions: int = 4096):
+                 max_sessions: int = 4096,
+                 synthesizer=None):
         # ``policy``: optional threshold policy (e.g. AdaptiveThreshold —
         # paper §2.10 future work). With an adaptive policy the engine feeds
         # judged hit outcomes back after every batch, closing the paper's
@@ -138,6 +152,18 @@ class CachedEngine:
         # tick clock, LRU-capped at ``max_sessions``) and fuses each
         # session row's turn window into its lookup/insert key inside the
         # compiled step. None = single-turn (unchanged).
+        # ``synthesizer``: optional near-hit Synthesizer (DESIGN.md §17) —
+        # band rows ([τ_lo, τ_hi) scores) are served by composing from
+        # their top-k neighbours instead of a full backend call, and the
+        # synthesized answer is admitted into the slab under the query's
+        # own key. Requires a band policy; passing a synthesizer with
+        # policy=None defaults the policy to BandPolicy(tau_hi=threshold).
+        # None = binary hit/miss (unchanged — the band masks are all-False
+        # and the compiled step is identical to the band-less program).
+        if synthesizer is not None and policy is None:
+            from repro.generative.policy import BandPolicy
+            policy = BandPolicy(tau_hi=cache_config.threshold)
+        self.synthesizer = synthesizer
         self.registry = registry
         partition = None
         if registry is not None:
@@ -205,6 +231,11 @@ class CachedEngine:
         # must insert the same fused keys the fused step would
         self._fuse_jit = jax.jit(
             lambda rt, q, w, wl: self.cache._maybe_fuse(rt, q, w, wl))
+        # top-k neighbour payload gather for the near-hit path (§17.3):
+        # pure read of the slab, never donated — the runtime is reused by
+        # the fused step right after, exactly like the peek
+        self._gather_topk_jit = jax.jit(
+            lambda rt, res: self.cache.gather_topk(rt, res))
         self._refit_jit = jax.jit(
             lambda rt, t, k: self.cache.refit(rt, t, k),
             donate_argnums=(0,))
@@ -455,6 +486,45 @@ class CachedEngine:
                    for j, i in enumerate(miss_idx)}
         return toks, lens, answers, res.latency_s, res.cost_usd
 
+    def _synthesize_near(self, batch, n_valid: int, result):
+        """Host-side near-hit synthesis (§17.3), shared by both serve paths.
+
+        For every band row ([τ_lo, τ_hi) score) of ``result``, gather the
+        row's visible top-k neighbours (one jitted slab read) and offer
+        them to the synthesizer. Returns ``(syn_by_row, syn_time, syn_cost)``
+        — ``syn_by_row`` maps row index -> ``Synthesis`` for the rows it
+        converted; abstained rows are simply absent and fall back to the
+        full backend call like any miss.
+        """
+        if self.synthesizer is None:
+            return {}, 0.0, 0.0
+        near = np.asarray(result.near)
+        if not near[:n_valid].any():
+            return {}, 0.0, 0.0
+        from repro.generative.synthesize import Neighbour
+        payload = self._gather_topk_jit(self.runtime, result)
+        nb_slot = np.asarray(result.topk_index)
+        nb_score = np.asarray(payload["score"])
+        nb_sid = np.asarray(payload["source_id"])
+        nb_vals = np.asarray(payload["values"])
+        syn_by_row: dict[int, object] = {}
+        syn_time = syn_cost = 0.0
+        for i in range(n_valid):
+            if not near[i]:
+                continue
+            neighbours = [
+                Neighbour(slot=int(nb_slot[i, j]),
+                          score=float(nb_score[i, j]),
+                          source_id=int(nb_sid[i, j]),
+                          answer=self.tokenizer.decode(nb_vals[i, j]))
+                for j in range(nb_slot.shape[1]) if nb_slot[i, j] >= 0]
+            syn = self.synthesizer.synthesize(batch[i].query, neighbours)
+            if syn is not None:
+                syn_by_row[i] = syn
+                syn_time += syn.latency_s
+                syn_cost += syn.cost_usd
+        return syn_by_row, syn_time, syn_cost
+
     def serve_batch(self, batch: list[Request], *,
                     record_path_latency: bool = True) -> list[Response]:
         """Serve ONE admission batch: peek -> backend -> fused step commit.
@@ -507,8 +577,13 @@ class CachedEngine:
             #    (the only slab search this batch — step commits it, §7)
             peek = self._peek_jit(self.runtime, emb, now, tid, win, wlen)
             peek_hit = np.asarray(peek.hit)
-            miss_idx = [i for i in range(n_valid) if not peek_hit[i]]
             cache_time = time.perf_counter() - t0
+            # 1b. near-hit synthesis (§17.3): band rows the synthesizer
+            #     converts skip the backend; abstained rows stay misses
+            syn_by_row, syn_time, syn_cost = \
+                self._synthesize_near(batch, n_valid, peek)
+            miss_idx = [i for i in range(n_valid)
+                        if not peek_hit[i] and i not in syn_by_row]
             # 2. backend answers the misses (paper §2.5 step 2)
             miss_values = np.zeros((n, cfg.value_len), dtype=np.int32)
             miss_lens = np.zeros((n,), dtype=np.int32)
@@ -517,7 +592,21 @@ class CachedEngine:
                     self._generate_misses(batch, miss_idx)
                 miss_values[miss_idx] = np.asarray(toks)
                 miss_lens[miss_idx] = np.asarray(lens)
-            sid = jnp.asarray([r.source_id for r in batch], dtype=jnp.int32)
+            # synthesized rows ride the same masked insert (insert mask is
+            # ~hit, which includes band rows): the near-hit answer is
+            # admitted under the query's own key (§17.4), carrying the
+            # dominant neighbour's source_id as provenance
+            sid_np = np.asarray([r.source_id for r in batch], dtype=np.int32)
+            if syn_by_row:
+                rows = sorted(syn_by_row)
+                stoks, slens = self.tokenizer.encode_batch(
+                    [syn_by_row[i].answer for i in rows], cfg.value_len)
+                miss_values[rows] = np.asarray(stoks)
+                miss_lens[rows] = np.asarray(slens)
+                for j, i in enumerate(rows):
+                    answers[i] = self.tokenizer.decode(stoks[j])
+                    sid_np[i] = syn_by_row[i].source_id
+            sid = jnp.asarray(sid_np)
             valid = np.zeros((n,), dtype=bool)
             valid[:n_valid] = True
             # 3. one fused compiled step: commit the peek + masked insert
@@ -528,7 +617,7 @@ class CachedEngine:
                 tid, win, wlen)
             jax.block_until_ready(result.hit)  # count the commit in cache_time
             cache_time += time.perf_counter() - t1
-            self._inserts_since_rebuild += len(miss_idx)
+            self._inserts_since_rebuild += len(miss_idx) + len(syn_by_row)
         else:
             # reference path: pre-fuse once so the miss insert stores the
             # SAME fused key the lookup searched (parity with the fused
@@ -538,20 +627,45 @@ class CachedEngine:
             result, self.runtime = self._lookup_jit(self.runtime, femb, now,
                                                     tid, None, None)
             lookup_hit = np.asarray(result.hit)
-            miss_idx = [i for i in range(n) if not lookup_hit[i]]
             cache_time = time.perf_counter() - t0
+            syn_by_row, syn_time, syn_cost = \
+                self._synthesize_near(batch, n, result)
+            miss_idx = [i for i in range(n)
+                        if not lookup_hit[i] and i not in syn_by_row]
+            # per-row insert payload: backend answers for misses, admitted
+            # syntheses (§17.4) for converted band rows
+            row_toks: dict[int, np.ndarray] = {}
+            row_lens: dict[int, int] = {}
+            row_sid: dict[int, int] = {}
             if miss_idx:
                 toks, lens, answers, llm_time, llm_cost = \
                     self._generate_misses(batch, miss_idx)
-                memb = femb[jnp.asarray(miss_idx)]
-                sid = jnp.asarray([batch[i].source_id for i in miss_idx],
-                                  dtype=jnp.int32)
-                mtid = None if tid is None else tid[jnp.asarray(miss_idx)]
+                for j, i in enumerate(miss_idx):
+                    row_toks[i] = np.asarray(toks[j])
+                    row_lens[i] = int(lens[j])
+                    row_sid[i] = batch[i].source_id
+            if syn_by_row:
+                rows = sorted(syn_by_row)
+                stoks, slens = self.tokenizer.encode_batch(
+                    [syn_by_row[i].answer for i in rows], cfg.value_len)
+                for j, i in enumerate(rows):
+                    row_toks[i] = np.asarray(stoks[j])
+                    row_lens[i] = int(slens[j])
+                    row_sid[i] = syn_by_row[i].source_id
+                    answers[i] = self.tokenizer.decode(np.asarray(stoks[j]))
+            # one subset insert in row order — the same slot-assignment
+            # order the fused step's masked full-batch insert produces
+            ins = sorted(row_toks)
+            if ins:
+                memb = femb[jnp.asarray(ins)]
+                sid = jnp.asarray([row_sid[i] for i in ins], dtype=jnp.int32)
+                mtid = None if tid is None else tid[jnp.asarray(ins)]
                 self.runtime = self._insert_jit(
-                    self.runtime, memb, jnp.asarray(toks),
-                    jnp.asarray(lens), now, sid,
-                    jnp.ones((len(miss_idx),), dtype=bool), mtid)
-                self._inserts_since_rebuild += len(miss_idx)
+                    self.runtime, memb,
+                    jnp.asarray(np.stack([row_toks[i] for i in ins])),
+                    jnp.asarray([row_lens[i] for i in ins], dtype=jnp.int32),
+                    now, sid, jnp.ones((len(ins),), dtype=bool), mtid)
+                self._inserts_since_rebuild += len(ins)
 
         if self.sessions is not None:
             self._append_turns(batch, n_valid,
@@ -560,6 +674,10 @@ class CachedEngine:
         hit = np.asarray(result.hit)
         scores = np.asarray(result.score)
         matched_sid = np.asarray(result.source_id)
+        near_row = np.asarray(result.near)
+        near_served = np.zeros((n,), dtype=bool)
+        for i in syn_by_row:
+            near_served[i] = True
 
         # hit path: detokenize cached responses (real rows only)
         vals = np.asarray(result.values)
@@ -568,18 +686,30 @@ class CachedEngine:
                 answers[i] = self.tokenizer.decode(vals[i])
 
         # judge hits (ground-truth oracle replaces GPT-4o-mini); pad rows
-        # are never hits (valid-masked), so they contribute no feedback
+        # are never hits (valid-masked), so they contribute no feedback.
+        # Synthesized near-hits are judged against their *synthesis*
+        # provenance — the dominant neighbour's source_id (§17.3)
         positives = np.zeros((n,), dtype=bool)
         if self.judge is not None:
             for i in range(n_valid):
                 if hit[i]:
                     positives[i] = self.judge(batch[i], int(matched_sid[i]))
+                elif near_served[i]:
+                    positives[i] = self.judge(
+                        batch[i], int(syn_by_row[i].source_id))
             # adaptive-threshold feedback (paper §2.10): judged precision
             # nudges the threshold toward the target
             self.runtime = self.cache.update_policy(
                 self.runtime,
-                was_positive=jnp.asarray(positives),
+                was_positive=jnp.asarray(positives & hit),
                 was_hit=jnp.asarray(hit))
+            if self.synthesizer is not None:
+                # judged near-hit outcomes nudge the band's lower edge
+                # (§17.2) — the near analogue of the adaptive threshold
+                self.runtime = self.cache.update_band(
+                    self.runtime,
+                    was_positive=jnp.asarray(positives),
+                    was_near=jnp.asarray(near_served))
 
         # metrics: baseline = every query pays the LLM call. Only the
         # n_valid real rows are recorded — pad rows must not move counters.
@@ -590,23 +720,32 @@ class CachedEngine:
         self.metrics.record_batch(
             [batch[i].category for i in range(n_valid)],
             hit[:n_valid], positives[:n_valid],
-            judged=[self.judge is not None and bool(hit[i])
+            judged=[self.judge is not None
+                    and (bool(hit[i]) or bool(near_served[i]))
                     for i in range(n_valid)],
-            cache_time_s=cache_time, llm_time_s=llm_time,
-            llm_cost=llm_cost, baseline_cost=per_cost * n_valid,
+            cache_time_s=cache_time, llm_time_s=llm_time + syn_time,
+            llm_cost=llm_cost + syn_cost,
+            baseline_cost=per_cost * n_valid,
             baseline_time=baseline_time,
             tenants=None if self.registry is None else
             [batch[i].tenant for i in range(n_valid)],
-            contexts=None if self.sessions is None else has_ctx[:n_valid])
+            contexts=None if self.sessions is None else has_ctx[:n_valid],
+            nears=None if self.synthesizer is None else near_row[:n_valid],
+            near_served=None if self.synthesizer is None
+            else near_served[:n_valid],
+            syn_cost=syn_cost, syn_time=syn_time)
 
-        per_q_latency = (cache_time + llm_time) / max(n_valid, 1)
+        per_q_latency = (cache_time + llm_time + syn_time) / max(n_valid, 1)
         if record_path_latency:
             for i in range(n_valid):
+                path = "hit" if hit[i] else (
+                    "near" if near_served[i] else "miss")
                 self.metrics.record_latency(
-                    "hit" if hit[i] else "miss", per_q_latency,
+                    path, per_q_latency,
                     tenant=None if self.registry is None
                     else batch[i].tenant)
         return [Response(answer=answers[i], cached=bool(hit[i]),
                          score=float(scores[i]), latency_s=per_q_latency,
-                         context=has_ctx[i])
+                         context=has_ctx[i],
+                         near_hit=bool(near_served[i]))
                 for i in range(n_valid)]

@@ -25,6 +25,13 @@ turn window) vs the *single-turn* bucket, surfaced under
 ``summary()["context"]`` — the quantities the context table reports
 (context hit rate vs single-turn hit rate, and context positive-hit
 precision, which must clear the same >97% bar as stateless serving).
+
+Generative near-hit serving (DESIGN.md §17) rides the same contract:
+``record_batch(..., nears=..., near_served=...)`` counts band rows
+([τ_lo, τ_hi) lookups), how many of them the synthesizer actually served
+(vs abstained back to the full backend call), judged synthesis precision
+and the marginal synthesis cost/latency, surfaced under
+``summary()["near"]`` without touching any existing row.
 """
 from __future__ import annotations
 
@@ -113,6 +120,43 @@ class ContextMetrics:
 
 
 @dataclasses.dataclass
+class NearHitMetrics:
+    """Band-row accounting for the generative near-hit path (§17.5).
+
+    ``band`` counts lookups landing in [τ_lo, τ_hi); ``served`` is the
+    subset the synthesizer converted (the backend calls saved beyond exact
+    reuse); the rest abstained back to a full call. ``positives/judged``
+    is synthesis precision under the ground-truth judge — the quantity the
+    serve-bench near-hit stage asserts > 0.9.
+    """
+
+    band: int = 0
+    served: int = 0
+    positives: int = 0
+    judged: int = 0
+    synthesis_cost_usd: float = 0.0
+    synthesis_time_s: float = 0.0
+
+    @property
+    def conversion_rate(self) -> float:
+        return self.served / self.band if self.band else 0.0
+
+    @property
+    def precision(self) -> float:
+        return self.positives / self.judged if self.judged else 0.0
+
+    def row(self) -> dict:
+        return {"band_lookups": self.band,
+                "near_hits_served": self.served,
+                "abstained": self.band - self.served,
+                "conversion_rate": round(self.conversion_rate, 4),
+                "positive_near_hits": self.positives,
+                "near_precision": round(self.precision, 4),
+                "synthesis_cost_usd": round(self.synthesis_cost_usd, 6),
+                "synthesis_time_s": round(self.synthesis_time_s, 6)}
+
+
+@dataclasses.dataclass
 class ServingMetrics:
     per_category: dict = dataclasses.field(
         default_factory=lambda: defaultdict(CategoryMetrics))
@@ -123,6 +167,9 @@ class ServingMetrics:
     single_turn: ContextMetrics = dataclasses.field(
         default_factory=ContextMetrics)       # stateless / first-turn rows
     context_seen: bool = False                # any contexts=... recorded?
+    near: NearHitMetrics = dataclasses.field(
+        default_factory=NearHitMetrics)       # band-row accounting (§17)
+    near_seen: bool = False                   # any nears=... recorded?
     total_cost_usd: float = 0.0
     baseline_cost_usd: float = 0.0          # what 100% API calls would cost
     cache_path_time_s: float = 0.0          # embed + lookup wall time
@@ -155,9 +202,26 @@ class ServingMetrics:
                      cache_time_s: float, llm_time_s: float,
                      llm_cost: float, baseline_cost: float,
                      baseline_time: float, tenants=None,
-                     contexts=None) -> None:
+                     contexts=None, nears=None, near_served=None,
+                     syn_cost: float = 0.0, syn_time: float = 0.0) -> None:
         if contexts is not None:
             self.context_seen = True
+        if nears is not None:
+            # band rows ([τ_lo, τ_hi) lookups) and the synthesized subset;
+            # a served row's judged outcome arrives in ``positives`` at the
+            # same index, exactly like an exact hit's does
+            self.near_seen = True
+            for i in range(len(categories)):
+                if bool(nears[i]):
+                    self.near.band += 1
+                if near_served is not None and bool(near_served[i]):
+                    self.near.served += 1
+                    if judged is None or judged[i]:
+                        self.near.judged += 1
+                        if bool(positives[i]):
+                            self.near.positives += 1
+            self.near.synthesis_cost_usd += syn_cost
+            self.near.synthesis_time_s += syn_time
         for i, cat in enumerate(categories):
             m = self.per_category[cat]
             m.lookups += 1
@@ -223,6 +287,7 @@ class ServingMetrics:
             "categories": cats,
             "tenants": tenants,
             "context": context,
+            "near": self.near.row() if self.near_seen else {},
             "queries": self.queries,
             "total_cost_usd": round(self.total_cost_usd, 4),
             "baseline_cost_usd": round(self.baseline_cost_usd, 4),

@@ -8,14 +8,26 @@ event loop, wait in a bounded FIFO queue, and are flushed to the engine's
 oldest request's ``max_wait_ms`` deadline, whichever comes first.
 
 **In-flight coalescing** (DESIGN.md §12.3): concurrent requests with the
-same semantic key (exact query string today; embedding-similarity
-coalescing is a ROADMAP follow-up) attach as *waiters* to the one pending
-entry — queued or already dispatched to the backend — so a thundering herd
-of N identical misses costs ONE LLM call instead of N. Without a semantic
-cache in front, this is the classic request-dedup proxy; with one, it
-closes the window the paper leaves open between "first miss starts
-generating" and "response is inserted", during which every duplicate would
-also miss.
+same semantic key attach as *waiters* to the one pending entry — queued or
+already dispatched to the backend — so a thundering herd of N identical
+misses costs ONE LLM call instead of N. Without a semantic cache in front,
+this is the classic request-dedup proxy; with one, it closes the window
+the paper leaves open between "first miss starts generating" and "response
+is inserted", during which every duplicate would also miss.
+
+**Embedding-similarity coalescing** (``SchedulerConfig.coalesce_sim``):
+with a cosine threshold set, a request whose normalized text matches no
+pending leader is additionally probed against the leaders' *embeddings* —
+a SimHash LSH bucket collision (cheap prefilter, ``repro.embedding.lsh``)
+nominates candidate leaders and an exact host-side cosine >=
+``coalesce_sim`` verifies before attaching, so in-flight *paraphrases*
+("how do I sort a list" / "how to sort lists") share one backend call too.
+The verification step is what keeps the guarantee one-sided: an LSH false
+collision is rejected by exact cosine, so distinct-meaning queries never
+share a leader; a missed collision merely forfeits a dedup. Buckets are
+scoped by (tenant, session), so similarity coalescing obeys exactly the
+same isolation boundaries as the text path. ``None`` (default) keeps
+today's text-equality behaviour bit for bit.
 
 **Multi-tenant admission** (DESIGN.md §13.3): requests queue per tenant
 and micro-batches are formed by *deficit round robin* over the backlogged
@@ -48,6 +60,8 @@ import dataclasses
 import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
 
 from repro.serving.engine import CachedEngine, Request, Response
 
@@ -86,6 +100,8 @@ class SchedulerConfig:
     max_wait_ms: float = 5.0   # ... or when the oldest one has waited this long
     max_queue: int = 1024      # bounded total backlog; full -> immediate flush
     coalesce: bool = True      # in-flight duplicate merging (§12.3)
+    coalesce_sim: float | None = None  # cosine bound for embedding-similarity
+                                       # coalescing; None = text-equality only
     max_queue_per_tenant: int | None = None  # per-tenant backlog bound
                                              # (None -> max_queue)
     tenant_weights: dict | None = None       # DRR quanta by tenant name;
@@ -96,6 +112,9 @@ class SchedulerConfig:
             raise ValueError("max_batch and max_queue must be positive")
         if self.max_wait_ms < 0:
             raise ValueError("max_wait_ms must be >= 0")
+        if self.coalesce_sim is not None \
+                and not 0.0 < self.coalesce_sim <= 1.0:
+            raise ValueError("coalesce_sim must be within (0, 1]")
         if self.max_queue_per_tenant is not None \
                 and self.max_queue_per_tenant <= 0:
             raise ValueError("max_queue_per_tenant must be positive")
@@ -145,6 +164,16 @@ class AsyncScheduler:
         # enqueue until its response is delivered (covers queued AND
         # dispatched-to-backend windows — that is the "in-flight" part)
         self._pending: dict[str, list[tuple[asyncio.Future, float]]] = {}
+        # embedding-similarity coalescing state (coalesce_sim, §12.3): the
+        # LSH prefilter plus, per pending leader, its embedding and bucket
+        # registrations (for cosine verification and cleanup)
+        self._lsh = None
+        self._leader_emb: dict[str, np.ndarray] = {}
+        self._leader_buckets: dict[str, list[tuple]] = {}
+        self._sim_buckets: dict[tuple, set[str]] = {}
+        if self.config.coalesce_sim is not None:
+            from repro.embedding.lsh import SimHashLSH
+            self._lsh = SimHashLSH(engine.embedder.dim)
         self._cond: asyncio.Condition | None = None
         self._loop_task: asyncio.Task | None = None
         self._executor: ThreadPoolExecutor | None = None
@@ -165,6 +194,48 @@ class AsyncScheduler:
 
     def _oldest_arrival(self) -> float:
         return min(q[0].arrival for q in self._queues.values() if q)
+
+    # -- embedding-similarity coalescing (coalesce_sim, §12.3) ----------- #
+    def _similar_leader(self, request: Request,
+                        emb: np.ndarray) -> str | None:
+        """Pending leader whose embedding verifies cosine >= coalesce_sim
+        against ``emb``, or None. The LSH bucket probe only *nominates*
+        candidates (scoped to this request's tenant+session); the exact
+        cosine check is what admits — a colliding-but-dissimilar leader is
+        rejected here, so distinct-meaning queries never share a leader."""
+        scope = (request.tenant, request.session)
+        cands: set[str] = set()
+        for t, b in enumerate(self._lsh.buckets(emb)):
+            cands |= self._sim_buckets.get(scope + (t, b), set())
+        from repro.embedding.lsh import cosine
+        best, best_sim = None, float(self.config.coalesce_sim)
+        for k in sorted(cands):            # deterministic tie-break
+            if k in self._pending:
+                sim = cosine(emb, self._leader_emb[k])
+                if sim >= best_sim:
+                    best, best_sim = k, sim
+        return best
+
+    def _register_leader(self, request: Request, key: str,
+                         emb: np.ndarray) -> None:
+        scope = (request.tenant, request.session)
+        buckets = [scope + (t, b)
+                   for t, b in enumerate(self._lsh.buckets(emb))]
+        self._leader_emb[key] = emb
+        self._leader_buckets[key] = buckets
+        for bk in buckets:
+            self._sim_buckets.setdefault(bk, set()).add(key)
+
+    def _unregister_leader(self, key: str) -> None:
+        """Drop a resolved leader's similarity state (no-op for keys that
+        never registered — LSH off, or a pre-LSH leader)."""
+        self._leader_emb.pop(key, None)
+        for bk in self._leader_buckets.pop(key, ()):
+            members = self._sim_buckets.get(bk)
+            if members is not None:
+                members.discard(key)
+                if not members:
+                    del self._sim_buckets[bk]
 
     # -- lifecycle ------------------------------------------------------- #
     async def start(self) -> None:
@@ -222,8 +293,22 @@ class AsyncScheduler:
             # an entry enqueued after the drain would strand its future
             if not self._running or self._stopping:
                 raise RuntimeError("scheduler is not running")
+            sim_leader = None
+            emb = None
+            if self.config.coalesce and self._lsh is not None \
+                    and key not in self._pending:
+                # embedding probe only when the exact-text key missed: the
+                # host-side hash embedding is cheap but not free
+                emb = np.asarray(self.engine.embedder.embed(request.query),
+                                 dtype=np.float32)
+                sim_leader = self._similar_leader(request, emb)
             if self.config.coalesce and key in self._pending:
                 self._pending[key].append((fut, arrival))
+                self.engine.metrics.record_coalesced(
+                    1, tenant=self._tenant_of(request))
+            elif sim_leader is not None:
+                # cosine-verified paraphrase of an in-flight leader (§12.3)
+                self._pending[sim_leader].append((fut, arrival))
                 self.engine.metrics.record_coalesced(
                     1, tenant=self._tenant_of(request))
             else:
@@ -243,6 +328,8 @@ class AsyncScheduler:
                     self._rr.append(tenant)
                 if self.config.coalesce:
                     self._pending.setdefault(key, [])
+                    if self._lsh is not None and emb is not None:
+                        self._register_leader(request, key, emb)
                 self._cond.notify_all()
         # awaited OUTSIDE the condition lock: the serve loop needs the lock
         # to resolve this future
@@ -322,8 +409,9 @@ class AsyncScheduler:
         except Exception as exc:                    # resolve, never strand
             async with self._cond:
                 for e in entries:
-                    for fut, _ in self._pending.pop(
-                            coalesce_key(e.request), []):
+                    key = coalesce_key(e.request)
+                    self._unregister_leader(key)
+                    for fut, _ in self._pending.pop(key, []):
                         if not fut.done():
                             fut.set_exception(exc)
                     if not e.future.done():
@@ -336,15 +424,19 @@ class AsyncScheduler:
                 tenant = self._tenant_of(e.request)
                 # end-to-end latency: queue wait + service (the sync path's
                 # samples are service-only; these are what a client sees)
+                path = "hit" if r.cached else (
+                    "near" if r.near_hit else "miss")
                 self.engine.metrics.record_latency(
-                    "hit" if r.cached else "miss", done - e.arrival,
-                    tenant=tenant)
+                    path, done - e.arrival, tenant=tenant)
                 if not e.future.done():
                     e.future.set_result(
                         dataclasses.replace(r, latency_s=done - e.arrival))
                 # waiters inherit the leader's answer/decision; they paid
                 # no lookup and no backend call (and shared the leader's
-                # tenant — the coalesce key guarantees it)
+                # tenant — the coalesce key guarantees it; similarity
+                # waiters additionally passed the cosine >= coalesce_sim
+                # verification against this leader)
+                self._unregister_leader(coalesce_key(e.request))
                 for fut, w_arrival in self._pending.pop(
                         coalesce_key(e.request), []):
                     self.engine.metrics.record_latency(

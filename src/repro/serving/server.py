@@ -29,6 +29,12 @@ when a non-empty window was fused in). A request line *without* the field
 is today's stateless behaviour byte-for-byte — same Request defaults, same
 response payload keys.
 
+On a near-hit-enabled engine (a ``Synthesizer`` was attached, DESIGN.md
+§17) every response line additionally carries ``near_hit`` (true when the
+answer was synthesized from the band's top-k neighbours rather than served
+verbatim or generated). Band-less engines emit exactly the pre-band
+payload, byte for byte.
+
 Responses may arrive out of request order (coalesced waiters resolve with
 their leader's batch), so pipelined clients should send an ``id`` — it is
 echoed verbatim in the matching response line.
@@ -117,6 +123,11 @@ class AsyncCacheServer:
                     # into sessions — a sessionless request line gets
                     # exactly the pre-session payload, byte for byte
                     payload["context"] = resp.context
+                if self.engine.synthesizer is not None:
+                    # additive, gated on the server actually serving
+                    # near-hits — band-less deployments keep the exact
+                    # pre-band payload keys (§17.5)
+                    payload["near_hit"] = resp.near_hit
             except Exception as exc:   # malformed line / scheduler stopped
                 payload = {"error": str(exc)}
             if req_id is not None:     # echo: responses can be out of order

@@ -29,7 +29,10 @@ class PartitionMap:
     ``[starts[t], starts[t] + sizes[t])``; regions are disjoint and cover
     the slab exactly (enforced by the registry that builds the map).
 
-    ``thresholds[t] < 0`` means "no override" (use the policy's decision).
+    ``thresholds[t] < 0`` means "no override" (use the policy's decision);
+    ``band_lo[t] < 0`` likewise means "no override" for the near-hit band's
+    lower edge (DESIGN.md §17.2). ``band_lo`` defaults to all-no-override so
+    every pre-band construction site keeps working unchanged.
     """
 
     names: tuple[str, ...]
@@ -37,10 +40,13 @@ class PartitionMap:
     sizes: tuple[int, ...]
     thresholds: tuple[float, ...]
     capacity: int
+    band_lo: tuple[float, ...] = ()
 
     def __post_init__(self):
+        if not self.band_lo:
+            object.__setattr__(self, "band_lo", (-1.0,) * len(self.names))
         if not (len(self.names) == len(self.starts) == len(self.sizes)
-                == len(self.thresholds)):
+                == len(self.thresholds) == len(self.band_lo)):
             raise ValueError("partition field lengths disagree")
         if sum(self.sizes) != self.capacity:
             raise ValueError(f"regions sum to {sum(self.sizes)}, "
@@ -68,10 +74,16 @@ class PartitionMap:
 
     def manifest(self) -> dict:
         """JSON-able layout record — the single definition used both when
-        writing a checkpoint manifest and when verifying one on restore."""
-        return {"names": list(self.names), "starts": list(self.starts),
-                "sizes": list(self.sizes),
-                "thresholds": list(self.thresholds)}
+        writing a checkpoint manifest and when verifying one on restore.
+        ``band_lo`` appears only when some tenant overrides the band edge,
+        so manifests of band-less partitions stay byte-identical to those
+        written before the near-hit subsystem existed (checkpoint compat)."""
+        m = {"names": list(self.names), "starts": list(self.starts),
+             "sizes": list(self.sizes),
+             "thresholds": list(self.thresholds)}
+        if any(b >= 0.0 for b in self.band_lo):
+            m["band_lo"] = list(self.band_lo)
+        return m
 
     # -- trace-time constant arrays -------------------------------------- #
     def slot_owner(self) -> np.ndarray:
@@ -87,6 +99,11 @@ class PartitionMap:
     def thresholds_array(self) -> Array:
         """(T,) float32; negative entries mean "no override"."""
         return jnp.asarray(self.thresholds, dtype=jnp.float32)
+
+    def band_lo_array(self) -> Array:
+        """(T,) float32 near-band lower-edge overrides; negative entries
+        mean "no override" (use the band policy's τ_lo)."""
+        return jnp.asarray(self.band_lo, dtype=jnp.float32)
 
 
 @functools.lru_cache(maxsize=64)

@@ -40,6 +40,10 @@ class TenantSpec:
       threshold: per-tenant cosine hit-threshold override; ``None`` = use
         the cache-wide policy's threshold (a stricter tenant can demand
         higher-precision hits without forking the compiled step).
+      band_lo: per-tenant near-hit band lower-edge override (DESIGN.md
+        §17.2); ``None`` = use the band policy's τ_lo. The band's *upper*
+        edge is definitionally the tenant's effective hit threshold, so a
+        tenant overrides both edges via ``threshold`` + ``band_lo``.
     """
 
     name: str
@@ -47,6 +51,7 @@ class TenantSpec:
     weight: float = 1.0
     quota: int | None = None
     threshold: float | None = None
+    band_lo: float | None = None
 
     def __post_init__(self):
         if not self.name:
@@ -59,6 +64,13 @@ class TenantSpec:
         if self.threshold is not None and not 0.0 <= self.threshold <= 1.0:
             raise ValueError(f"tenant {self.name!r}: threshold must be "
                              "within [0, 1]")
+        if self.band_lo is not None:
+            if not 0.0 <= self.band_lo <= 1.0:
+                raise ValueError(f"tenant {self.name!r}: band_lo must be "
+                                 "within [0, 1]")
+            if self.threshold is not None and self.band_lo > self.threshold:
+                raise ValueError(f"tenant {self.name!r}: band_lo must not "
+                                 "exceed the hit threshold")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,6 +171,9 @@ class TenantRegistry:
         thresholds = tuple(
             NO_OVERRIDE if t.threshold is None else float(t.threshold)
             for t in self.tenants)
+        band_lo = tuple(
+            NO_OVERRIDE if t.band_lo is None else float(t.band_lo)
+            for t in self.tenants)
         return PartitionMap(names=self.names, starts=tuple(starts),
                             sizes=tuple(sizes), thresholds=thresholds,
-                            capacity=capacity)
+                            capacity=capacity, band_lo=band_lo)

@@ -1,0 +1,511 @@
+"""Generative near-hit cache tests (DESIGN.md §17): band-edge semantics
+(scores exactly at τ_lo/τ_hi), empty-slab near requests, per-tenant band
+overrides, fused-vs-separate parity with bands enabled, synthesizer
+gating/abstention, admission of synthesized answers, judged band-edge
+feedback, metrics/wire surfacing, and LSH similarity coalescing (§12.3)
+including the distinct-meaning-never-share-a-leader guarantee."""
+import asyncio
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import SemanticCache
+from repro.core.types import CacheConfig, LookupResult
+from repro.data.qa_dataset import build_corpus, build_test_queries
+from repro.embedding.lsh import SimHashLSH, cosine
+from repro.generative import (BandPolicy, Neighbour, SmallModelRewrite,
+                              SmallRewriteBackend, Synthesis, TemplateSplice)
+from repro.serving import (AsyncCacheServer, CachedEngine, Request,
+                           SchedulerConfig, SimulatedLLMBackend)
+from repro.serving.scheduler import AsyncScheduler
+from repro.tenancy import TenantRegistry, TenantSpec
+
+
+@pytest.fixture(scope="module")
+def pairs():
+    return build_corpus(80, seed=0)
+
+
+@pytest.fixture(scope="module")
+def queries(pairs):
+    return build_test_queries(pairs, 50, paraphrase_ratio=0.8, seed=2)
+
+
+def mk_judge(pairs):
+    key_by_sid = {p.qa_id: p.semantic_key for p in pairs}
+
+    def judge(req, sid):
+        return key_by_sid.get(sid, "") == req.semantic_key
+    return judge
+
+
+def mk_engine(pairs, *, synthesizer=None, policy=None, use_fused_step=True,
+              batch_size=8, threshold=0.8, **kw):
+    cfg = CacheConfig(dim=384, capacity=2048, value_len=48, ttl=None,
+                      threshold=threshold)
+    backend = SimulatedLLMBackend(pairs)
+    return CachedEngine(cfg, backend, judge=mk_judge(pairs),
+                        batch_size=batch_size, synthesizer=synthesizer,
+                        policy=policy, use_fused_step=use_fused_step,
+                        **kw), backend
+
+
+def requests_of(queries):
+    return [Request(query=q.query, category=q.category,
+                    source_id=q.source_id, semantic_key=q.semantic_key)
+            for q in queries]
+
+
+def peeked_result(scores, k=4):
+    """Hand-built LookupResult so commit() sees exact score bit patterns."""
+    b = len(scores)
+    s = jnp.asarray(scores, dtype=jnp.float32)
+    return LookupResult(
+        index=jnp.zeros((b,), dtype=jnp.int32), score=s,
+        hit=jnp.zeros((b,), dtype=bool),
+        values=jnp.zeros((b, 8), dtype=jnp.int32),
+        value_lens=jnp.zeros((b,), dtype=jnp.int32),
+        source_id=jnp.full((b,), -1, dtype=jnp.int32),
+        topk_index=jnp.full((b, k), -1, dtype=jnp.int32),
+        topk_score=jnp.full((b, k), -jnp.inf, dtype=jnp.float32),
+        near=jnp.zeros((b,), dtype=bool))
+
+
+# --------------------------------------------------------------------- #
+# band policy + edge semantics
+# --------------------------------------------------------------------- #
+class TestBandPolicy:
+    def test_edges_closed_open(self):
+        p = BandPolicy(tau_lo=0.7, tau_hi=0.8)
+        st = p.init_state()
+        lo = jnp.float32(0.7)
+        hi = jnp.float32(0.8)
+        scores = jnp.asarray([lo, hi, 0.75, 0.6, 0.9], dtype=jnp.float32)
+        near = np.asarray(p.near(scores, st))
+        hit = np.asarray(p.decide(scores, st)[0])
+        # exactly τ_lo -> near; exactly τ_hi -> hit, never near
+        assert near.tolist() == [True, False, True, False, False]
+        assert hit.tolist() == [False, True, False, False, True]
+        assert not (near & hit).any()
+
+    def test_decide_matches_fixed_threshold(self):
+        from repro.core.policy import FixedThreshold
+        p = BandPolicy(tau_lo=0.7, tau_hi=0.8)
+        f = FixedThreshold(threshold=0.8)
+        scores = jnp.asarray(np.random.default_rng(0).uniform(0, 1, 64),
+                             dtype=jnp.float32)
+        assert np.array_equal(
+            np.asarray(p.decide(scores, p.init_state())[0]),
+            np.asarray(f.decide(scores, f.init_state())[0]))
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            BandPolicy(tau_lo=0.9, tau_hi=0.8)
+        with pytest.raises(ValueError):
+            BandPolicy(tau_lo=0.7, tau_hi=1.5)
+        with pytest.raises(ValueError):
+            BandPolicy(tau_lo=0.6, lo_min=0.65)
+
+    def test_update_band_feedback_direction(self):
+        p = BandPolicy(tau_lo=0.7, tau_hi=0.8, lr=0.05, ema=0.5)
+        st = p.init_state()
+        bad = p.update_band(st,
+                            was_positive=jnp.zeros((8,), dtype=bool),
+                            was_near=jnp.ones((8,), dtype=bool))
+        assert float(bad[0]) > float(st[0])      # poor precision -> shrink
+        good = p.update_band(st,
+                             was_positive=jnp.ones((8,), dtype=bool),
+                             was_near=jnp.ones((8,), dtype=bool))
+        assert float(good[0]) < float(st[0])     # surplus precision -> widen
+        # no near evidence -> edge untouched
+        none = p.update_band(st,
+                             was_positive=jnp.zeros((8,), dtype=bool),
+                             was_near=jnp.zeros((8,), dtype=bool))
+        assert float(none[0]) == pytest.approx(float(st[0]))
+
+    def test_update_band_clips(self):
+        p = BandPolicy(tau_lo=0.7, tau_hi=0.8, lr=0.5, ema=0.0,
+                       lo_min=0.55, min_width=0.01)
+        st = p.init_state()
+        for _ in range(50):
+            st = p.update_band(st,
+                               was_positive=jnp.zeros((8,), dtype=bool),
+                               was_near=jnp.ones((8,), dtype=bool))
+        assert float(st[0]) <= 0.8 - 0.01 + 1e-6     # never crosses τ_hi
+        st = p.init_state()
+        for _ in range(50):
+            st = p.update_band(st,
+                               was_positive=jnp.ones((8,), dtype=bool),
+                               was_near=jnp.ones((8,), dtype=bool))
+        assert float(st[0]) >= 0.55 - 1e-6           # floor
+
+
+class TestCacheBandEdges:
+    def test_commit_band_edges_exact(self):
+        cache = SemanticCache(CacheConfig(dim=16, capacity=32, value_len=8,
+                                          threshold=0.8),
+                              policy=BandPolicy(tau_lo=0.7, tau_hi=0.8))
+        rt = cache.init()
+        scores = [jnp.float32(0.7), jnp.float32(0.8), 0.6999, 0.7999,
+                  -np.inf]
+        res, _ = cache.commit(rt, peeked_result(scores), 0.0)
+        assert np.asarray(res.near).tolist() == \
+            [True, False, False, True, False]
+        assert np.asarray(res.hit).tolist() == \
+            [False, True, False, False, False]
+
+    def test_bandless_policy_near_all_false(self):
+        cache = SemanticCache(CacheConfig(dim=16, capacity=32, value_len=8))
+        rt = cache.init()
+        res, _ = cache.commit(rt, peeked_result([0.75, 0.9, 0.1]), 0.0)
+        assert not np.asarray(res.near).any()
+
+    def test_tenant_band_lo_override(self):
+        reg = TenantRegistry((TenantSpec(name="strict"),
+                              TenantSpec(name="loose", band_lo=0.6)))
+        part = reg.partition(64)
+        cache = SemanticCache(CacheConfig(dim=16, capacity=64, value_len=8,
+                                          threshold=0.8),
+                              policy=BandPolicy(tau_lo=0.7, tau_hi=0.8),
+                              partition=part)
+        rt = cache.init()
+        # same 0.65 score: in-band only for the tenant that lowered τ_lo
+        tid = jnp.asarray([0, 1], dtype=jnp.int32)
+        res, _ = cache.commit(rt, peeked_result([0.65, 0.65]), 0.0,
+                              tenant_id=tid)
+        assert np.asarray(res.near).tolist() == [False, True]
+        # ... and the override is the lower edge, closed: exactly 0.6 is in
+        res, _ = cache.commit(rt, peeked_result([0.6, 0.6]), 0.0,
+                              tenant_id=tid)
+        assert np.asarray(res.near).tolist() == [False, True]
+
+    def test_tenant_tau_hi_override_moves_upper_edge(self):
+        # a tenant with a stricter hit threshold keeps band rows up to it:
+        # 0.85 is a hit for the default tenant but near for the strict one
+        reg = TenantRegistry((TenantSpec(name="default"),
+                              TenantSpec(name="strict", threshold=0.9)))
+        part = reg.partition(64)
+        cache = SemanticCache(CacheConfig(dim=16, capacity=64, value_len=8,
+                                          threshold=0.8),
+                              policy=BandPolicy(tau_lo=0.7, tau_hi=0.8),
+                              partition=part)
+        rt = cache.init()
+        tid = jnp.asarray([0, 1], dtype=jnp.int32)
+        res, _ = cache.commit(rt, peeked_result([0.85, 0.85]), 0.0,
+                              tenant_id=tid)
+        assert np.asarray(res.hit).tolist() == [True, False]
+        # strict tenant's 0.85 is not near under the global band ([0.7,0.8))
+        # unless it also lowers band_lo to keep a band below its τ_hi
+        reg2 = TenantRegistry((TenantSpec(name="default"),
+                               TenantSpec(name="strict", threshold=0.9,
+                                          band_lo=0.7)))
+        cache2 = dataclasses.replace(cache, partition=reg2.partition(64))
+        res2, _ = cache2.commit(cache2.init(), peeked_result([0.85, 0.85]),
+                                0.0, tenant_id=tid)
+        assert np.asarray(res2.near).tolist() == [False, True]
+
+    def test_manifest_band_compat(self):
+        plain = TenantRegistry.uniform(("a", "b")).partition(64)
+        assert "band_lo" not in plain.manifest()   # old checkpoints verify
+        banded = TenantRegistry(
+            (TenantSpec(name="a"), TenantSpec(name="b", band_lo=0.6))
+        ).partition(64)
+        assert banded.manifest()["band_lo"] == [-1.0, 0.6]
+
+    def test_tenant_spec_band_validation(self):
+        with pytest.raises(ValueError):
+            TenantSpec(name="x", band_lo=1.5)
+        with pytest.raises(ValueError):
+            TenantSpec(name="x", threshold=0.8, band_lo=0.9)
+
+
+# --------------------------------------------------------------------- #
+# synthesizers
+# --------------------------------------------------------------------- #
+class TestSynthesizers:
+    def nb(self, slot, score, sid, answer="cached answer"):
+        return Neighbour(slot=slot, score=score, source_id=sid,
+                         answer=answer)
+
+    def test_splice_serves_dominant(self):
+        syn = TemplateSplice(rival_margin=0.1).synthesize(
+            "q", [self.nb(0, 0.78, 7, "seven"), self.nb(1, 0.60, 9)])
+        assert syn is not None and syn.answer == "seven" \
+            and syn.source_id == 7 and syn.cost_usd == 0.0
+
+    def test_splice_abstains_on_rival(self):
+        # different-provenance rival within the margin -> ambiguous
+        assert TemplateSplice(rival_margin=0.1).synthesize(
+            "q", [self.nb(0, 0.78, 7), self.nb(1, 0.72, 9)]) is None
+
+    def test_splice_same_provenance_not_rival(self):
+        syn = TemplateSplice(rival_margin=0.1).synthesize(
+            "q", [self.nb(0, 0.78, 7, "a"), self.nb(1, 0.77, 7, "b")])
+        assert syn is not None and syn.source_id == 7
+
+    def test_splice_unknown_provenance_is_rival(self):
+        assert TemplateSplice(rival_margin=0.1).synthesize(
+            "q", [self.nb(0, 0.78, -1), self.nb(1, 0.77, -1)]) is None
+
+    def test_splice_empty_neighbours(self):
+        assert TemplateSplice().synthesize("q", []) is None
+
+    def test_small_model_rewrite_charges_fractional_cost(self):
+        be = SmallRewriteBackend(latency_per_call_s=0.08,
+                                 cost_per_call_usd=0.0002)
+        rw = SmallModelRewrite(backend=be)
+        syn = rw.synthesize("q", [self.nb(0, 0.78, 7, "the answer")])
+        assert syn is not None and syn.answer == "the answer"
+        assert syn.source_id == 7
+        assert syn.cost_usd == pytest.approx(0.0002)
+        assert be.calls == 1
+        # abstention never touches the rewrite backend
+        assert rw.synthesize("q", [self.nb(0, 0.78, 7),
+                                   self.nb(1, 0.76, 9)]) is None
+        assert be.calls == 1
+
+
+# --------------------------------------------------------------------- #
+# engine integration
+# --------------------------------------------------------------------- #
+class TestEngineNearHits:
+    def test_near_hits_reduce_backend_calls(self, pairs, queries):
+        eng, be = mk_engine(pairs, synthesizer=TemplateSplice(),
+                            policy=BandPolicy(tau_lo=0.75, tau_hi=0.8))
+        eng.warm(pairs)
+        resps = eng.process(requests_of(queries))
+        base_eng, base_be = mk_engine(pairs)
+        base_eng.warm(pairs)
+        base_resps = base_eng.process(requests_of(queries))
+        assert sum(r.near_hit for r in resps) > 0
+        assert be.calls < base_be.calls          # strictly beyond exact reuse
+        s = eng.metrics.summary()["near"]
+        assert s["near_hits_served"] > 0
+        assert s["near_precision"] > 0.9
+        # exact-reuse rows are untouched by the band machinery
+        for r, b in zip(resps, base_resps):
+            if b.cached:
+                assert r.cached and r.answer == b.answer \
+                    and r.score == b.score
+
+    def test_bands_disabled_byte_identical(self, pairs, queries):
+        eng, _ = mk_engine(pairs)               # no synthesizer
+        eng.warm(pairs)
+        resps = eng.process(requests_of(queries))
+        assert all(not r.near_hit for r in resps)
+        assert eng.metrics.summary()["near"] == {}
+
+    def test_fused_vs_separate_parity_with_bands(self, pairs, queries):
+        eng_f, _ = mk_engine(pairs, synthesizer=TemplateSplice())
+        eng_s, _ = mk_engine(pairs, synthesizer=TemplateSplice(),
+                             use_fused_step=False)
+        eng_f.warm(pairs)
+        eng_s.warm(pairs)
+        rf = eng_f.process(requests_of(queries))
+        rs = eng_s.process(requests_of(queries))
+        for a, b in zip(rf, rs):
+            assert (a.answer, a.cached, a.near_hit) == \
+                (b.answer, b.cached, b.near_hit)
+        assert np.array_equal(np.asarray(eng_f.state.keys),
+                              np.asarray(eng_s.state.keys))
+        assert np.array_equal(np.asarray(eng_f.state.values),
+                              np.asarray(eng_s.state.values))
+        assert np.array_equal(np.asarray(eng_f.state.source_id),
+                              np.asarray(eng_s.state.source_id))
+
+    def test_empty_slab_near_request(self, pairs):
+        calls = []
+
+        class Spy:
+            def synthesize(self, query, neighbours):
+                calls.append((query, neighbours))
+                return None
+
+        eng, be = mk_engine(pairs, synthesizer=Spy())
+        # one batch of distinct questions against a cold slab
+        resps = eng.process([Request(query=p.question,
+                                     source_id=p.qa_id,
+                                     semantic_key=p.semantic_key)
+                             for p in pairs[:6]])
+        # empty slab: every score is -inf, no row is in the band, the
+        # synthesizer is never consulted, every row pays the backend
+        assert not calls
+        assert all(not r.near_hit and not r.cached for r in resps)
+        assert be.calls == len(resps)
+
+    def test_synthesized_answer_admitted_under_own_key(self, pairs, queries):
+        eng, be = mk_engine(pairs, synthesizer=TemplateSplice())
+        eng.warm(pairs)
+        resps = eng.process(requests_of(queries))
+        near_i = next(i for i, r in enumerate(resps) if r.near_hit)
+        calls_before = be.calls
+        again = eng.process([requests_of(queries)[near_i]])
+        # the synthesized answer is now a first-class entry: the repeat is
+        # an exact hit serving the same bytes, with no backend call
+        assert again[0].cached and not again[0].near_hit
+        assert again[0].answer == resps[near_i].answer
+        assert be.calls == calls_before
+
+    def test_near_hit_judged_with_synthesis_provenance(self, pairs, queries):
+        eng, _ = mk_engine(pairs, synthesizer=TemplateSplice())
+        eng.warm(pairs)
+        eng.process(requests_of(queries))
+        near = eng.metrics.near
+        assert near.judged == near.served        # judge saw every near-hit
+        assert near.band >= near.served
+
+    def test_default_policy_band_rides_config_threshold(self, pairs):
+        eng, _ = mk_engine(pairs, synthesizer=TemplateSplice(),
+                           threshold=0.85)
+        assert isinstance(eng.cache.policy, BandPolicy)
+        assert eng.cache.policy.tau_hi == pytest.approx(0.85)
+
+    def test_band_edge_adapts_from_judged_outcomes(self, pairs):
+        # a judge that rejects every synthesis must shrink the band
+        eng, _ = mk_engine(pairs, synthesizer=TemplateSplice(
+            rival_margin=0.0))
+        eng.judge = lambda req, sid: False
+        eng.warm(pairs)
+        lo0 = float(eng.policy_state[0])
+        eng.process(requests_of(
+            build_test_queries(pairs, 50, paraphrase_ratio=0.9, seed=5)))
+        assert eng.metrics.near.served > 0
+        assert float(eng.policy_state[0]) > lo0
+
+
+# --------------------------------------------------------------------- #
+# wire + server
+# --------------------------------------------------------------------- #
+class TestWire:
+    def _roundtrip(self, engine, lines):
+        async def run():
+            server = AsyncCacheServer(engine, SchedulerConfig(
+                max_batch=8, max_wait_ms=5.0))
+            async with server:
+                port = await server.serve_tcp()
+                reader, writer = await asyncio.open_connection(
+                    "127.0.0.1", port)
+                for obj in lines:
+                    writer.write(json.dumps(obj).encode() + b"\n")
+                await writer.drain()
+                out = [json.loads(await reader.readline())
+                       for _ in lines]
+                writer.close()
+                return out
+        return asyncio.run(run())
+
+    def test_near_hit_flag_additive(self, pairs):
+        eng, _ = mk_engine(pairs, synthesizer=TemplateSplice())
+        eng.warm(pairs)
+        [resp] = self._roundtrip(eng, [{"id": 1, "query":
+                                        pairs[0].question}])
+        assert "near_hit" in resp
+        plain, _ = mk_engine(pairs)
+        plain.warm(pairs)
+        [resp] = self._roundtrip(plain, [{"id": 1, "query":
+                                          pairs[0].question}])
+        assert "near_hit" not in resp           # band-less payload unchanged
+
+
+# --------------------------------------------------------------------- #
+# LSH similarity coalescing (§12.3 seam)
+# --------------------------------------------------------------------- #
+class TestSimilarityCoalescing:
+    def test_lsh_deterministic_and_near_duplicates_collide(self):
+        lsh = SimHashLSH(384)
+        from repro.embedding import HashEmbedder
+        emb = HashEmbedder(dim=384)
+        a = emb.embed("how do I reset my password please")
+        b = emb.embed("how do I reset my password, please")
+        assert lsh.buckets(a) == lsh.buckets(a)      # deterministic
+        assert cosine(a, b) > 0.9
+        assert any(x == y for x, y in zip(lsh.buckets(a), lsh.buckets(b)))
+
+    def test_verification_rejects_forced_collision(self, pairs,
+                                                   monkeypatch):
+        # even if every query hashed to one bucket, the exact cosine check
+        # must keep distinct-meaning queries from sharing a leader
+        eng, _ = mk_engine(pairs)
+        sched = AsyncScheduler(eng, SchedulerConfig(coalesce_sim=0.9))
+        monkeypatch.setattr(
+            SimHashLSH, "buckets",
+            lambda self, v: tuple(0 for _ in range(self.n_tables)))
+        q1 = Request(query="how do I cancel my subscription")
+        q2 = Request(query="what is the weather like in antarctica")
+        e1 = np.asarray(eng.embedder.embed(q1.query), dtype=np.float32)
+        e2 = np.asarray(eng.embedder.embed(q2.query), dtype=np.float32)
+        from repro.serving.scheduler import coalesce_key
+        k1 = coalesce_key(q1)
+        sched._pending[k1] = []
+        sched._register_leader(q1, k1, e1)
+        assert sched._similar_leader(q2, e2) is None       # verified out
+        # a true paraphrase passes the same gate
+        q3 = Request(query="how do i cancel my subscription ?")
+        e3 = np.asarray(eng.embedder.embed(q3.query), dtype=np.float32)
+        assert cosine(e1, e3) >= 0.9
+        assert sched._similar_leader(q3, e3) == k1
+
+    def test_distinct_meaning_never_share_leader_end_to_end(self, pairs):
+        eng, be = mk_engine(pairs, batch_size=8)
+
+        async def run():
+            server = AsyncCacheServer(eng, SchedulerConfig(
+                max_batch=8, max_wait_ms=100.0, coalesce_sim=0.9))
+            async with server:
+                return await asyncio.gather(
+                    server.submit("how do I reset my password please"),
+                    server.submit("how do I reset my password, please"),
+                    server.submit("what is the airspeed of a swallow"),
+                    server.submit("my invoice seems wrong, who do I ask"),
+                )
+        r = asyncio.run(run())
+        # the paraphrase coalesced onto its leader; the distinct-meaning
+        # queries each paid their own way
+        assert r[1].coalesced and r[1].answer == r[0].answer
+        assert not r[2].coalesced and not r[3].coalesced
+        assert be.calls == 3
+
+    def test_coalesce_sim_none_is_text_equality_only(self, pairs):
+        eng, be = mk_engine(pairs, batch_size=8)
+
+        async def run():
+            server = AsyncCacheServer(eng, SchedulerConfig(
+                max_batch=8, max_wait_ms=100.0))
+            async with server:
+                return await asyncio.gather(
+                    server.submit("how do I reset my password please"),
+                    server.submit("how do I reset my password, please"),
+                )
+        r = asyncio.run(run())
+        assert not r[0].coalesced and not r[1].coalesced
+        assert be.calls == 2
+
+    def test_tenant_scoped_buckets(self, pairs):
+        from repro.serving.scheduler import coalesce_key
+        eng, _ = mk_engine(pairs)
+        sched = AsyncScheduler(eng, SchedulerConfig(coalesce_sim=0.9))
+        qa = Request(query="reset my password", tenant="acme")
+        qb = Request(query="reset my password", tenant="globex")
+        ea = np.asarray(eng.embedder.embed(qa.query), dtype=np.float32)
+        ka = coalesce_key(qa)
+        sched._pending[ka] = []
+        sched._register_leader(qa, ka, ea)
+        # identical embedding, different tenant scope -> no candidate
+        assert sched._similar_leader(qb, ea) is None
+
+    def test_unregister_cleans_buckets(self, pairs):
+        from repro.serving.scheduler import coalesce_key
+        eng, _ = mk_engine(pairs)
+        sched = AsyncScheduler(eng, SchedulerConfig(coalesce_sim=0.9))
+        q = Request(query="reset my password")
+        e = np.asarray(eng.embedder.embed(q.query), dtype=np.float32)
+        k = coalesce_key(q)
+        sched._pending[k] = []
+        sched._register_leader(q, k, e)
+        assert sched._sim_buckets
+        sched._unregister_leader(k)
+        assert not sched._sim_buckets and not sched._leader_emb \
+            and not sched._leader_buckets
