@@ -356,3 +356,75 @@ def ttl_behaviour():
              "derived": f"hits_within_ttl={hit_fresh} "
                         f"hits_after_expiry={hit_expired}"}]
     return rows, {}
+
+
+def obs_table(full: bool = False):
+    """Observability plane (beyond-paper, DESIGN.md §18.6).
+
+    The ``obs/*`` stage-breakdown rows: per-stage latency quantiles from a
+    fully-traced (sample rate 1.0) serving run, the span-sum-vs-e2e
+    invariant, and the tracing overhead (traced vs untraced best-of-3
+    walls on the identical workload — the <5% bound the serve-bench smoke
+    asserts).
+    """
+    from repro.obs import STAGES, TraceConfig, Tracer
+
+    n = 300 if full else 100
+    pairs = build_corpus(n, seed=0)
+    queries = build_test_queries(pairs, n_per_category=100 if full else 60,
+                                 seed=1)
+    reqs = [Request(query=q.query, category=q.category,
+                    source_id=q.source_id, semantic_key=q.semantic_key)
+            for q in queries]
+    cfg = CacheConfig(dim=384, capacity=8 * n, value_len=48,
+                      ttl=None, threshold=0.8)
+
+    walls = {}
+    engines = {}
+    for tag, tracer in (("off", None),
+                        ("on", Tracer(TraceConfig(sample_rate=1.0, head=0,
+                                                  max_traces=65536)))):
+        eng = CachedEngine(cfg, SimulatedLLMBackend(pairs), batch_size=32,
+                           tracer=tracer)
+        eng.warm(pairs)
+        eng.process(reqs[:32])             # compile before the clock
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            eng.process(reqs)
+            best = min(best, time.perf_counter() - t0)
+        walls[tag] = best
+        engines[tag] = eng
+
+    rows = []
+    eng = engines["on"]
+    decomp = eng.tracer.stage_decomposition()
+    for stage in STAGES:
+        if stage not in decomp:
+            continue                       # queue-side stages: async only
+        r = decomp[stage]
+        rows.append({
+            "name": f"obs/stage/{stage}",
+            "us_per_call": 1e6 * r["p50_s"],
+            "derived": (f"p95_us={1e6 * r['p95_s']:.1f}"
+                        f" p99_us={1e6 * r['p99_s']:.1f}"
+                        f" count={r['count']}"),
+        })
+    traces = eng.tracer.traces()
+    ratios = [t.span_sum_s / t.e2e_s for t in traces if t.e2e_s]
+    rows.append({
+        "name": "obs/span_sum",
+        "us_per_call": 0.0,
+        "derived": (f"min_ratio={min(ratios):.4f}"
+                    f" max_ratio={max(ratios):.4f}"
+                    f" traces={len(traces)}"),
+    })
+    overhead_pct = 100.0 * (walls["on"] / walls["off"] - 1.0)
+    rows.append({
+        "name": "obs/trace_overhead",
+        "us_per_call": 1e6 * (walls["on"] - walls["off"]) / len(reqs),
+        "derived": (f"traced_wall_s={walls['on']:.4f}"
+                    f" untraced_wall_s={walls['off']:.4f}"
+                    f" overhead_pct={overhead_pct:.2f}"),
+    })
+    return rows, {"decomposition": decomp, "overhead_pct": overhead_pct}

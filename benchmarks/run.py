@@ -111,6 +111,7 @@ def main() -> None:
         ("tenancy", lambda: paper_tables.tenant_table(full=full)),
         ("context", lambda: paper_tables.context_table(full=full)),
         ("near", lambda: paper_tables.near_hit_table(full=full)),
+        ("obs", lambda: paper_tables.obs_table(full=full)),
         ("kernel", kernel_bench.cosine_topk_scaling),
         ("kernel-masked", kernel_bench.masked_lookup_scaling),
         ("kernel-ivf", kernel_bench.fused_ivf_bench),

@@ -304,6 +304,116 @@ def bench_near_hit(pairs, workload, *, batch: int) -> dict:
     }
 
 
+def bench_observability(pairs, *, batch: int, n_req: int, rate_qps: float,
+                        llm_latency_s: float) -> dict:
+    """Observability plane end to end (DESIGN.md §18.6).
+
+    (a) a traced run (sample rate 1.0) through the async scheduler on a
+    2-tenant engine with a blocking backend: per-stage p50/p95 rows, the
+    span-sum-vs-e2e invariant (the stage decomposition must reconstruct
+    the measured end-to-end latency within 10% at p50/p95), and a live
+    ``/metrics`` scrape validated against ``REQUIRED_FAMILIES`` plus
+    per-tenant labels; (b) traced-vs-untraced sync throughput (best-of-3
+    walls) bounding the tracing overhead; (c) the tracing-off path must
+    start zero traces — the hot path allocates nothing.
+    """
+    import time as _time
+
+    from repro.obs import EventLog, REQUIRED_FAMILIES, TraceConfig, Tracer
+    from repro.serving.metrics import percentiles
+
+    registry = TenantRegistry.uniform(["acme", "globex"])
+    eng = make_engine(pairs, batch_size=batch, latency_s=llm_latency_s,
+                      block=True, registry=registry)
+    eng.events = EventLog(capacity=512)
+    # compile before the clock starts, then zero the bookkeeping so the
+    # warmup row doesn't appear in the reported traces/samples
+    eng.serve_batch([Request(query="obs warmup", tenant="acme")])
+    eng.metrics = ServingMetrics()
+    eng.tracer = Tracer(TraceConfig(sample_rate=1.0, head=0,
+                                    max_traces=8192))
+    workload = build_multi_tenant_workload(
+        pairs, n_req, tenants=list(registry.names), seed=31)
+    scrape = {}
+
+    async def drive():
+        sched = SchedulerConfig(max_batch=batch, max_wait_ms=2.0,
+                                tenant_weights=registry.weights())
+        async with AsyncCacheServer(eng, sched) as server:
+            try:
+                port = await server.serve_metrics()
+            except OSError:
+                port = None               # sandboxed CI: no sockets
+            res = await run_open_loop(server.submit_request, workload,
+                                      rate_qps=rate_qps, seed=37)
+            if port is not None:
+                reader, writer = await asyncio.open_connection(
+                    "127.0.0.1", port)
+                writer.write(b"GET /metrics HTTP/1.0\r\n\r\n")
+                await writer.drain()
+                raw = (await reader.read()).decode()
+                writer.close()
+                scrape["status"] = raw.split("\r\n", 1)[0]
+                scrape["body"] = raw.split("\r\n\r\n", 1)[1]
+            return res
+
+    asyncio.run(drive())
+    traces = eng.tracer.traces()
+    e2e = [t.e2e_s for t in traces if t.e2e_s]
+    sums = [t.span_sum_s for t in traces if t.e2e_s]
+    p_e2e, p_sum = percentiles(e2e), percentiles(sums)
+    out = {
+        "traces_retained": len(traces),
+        "span_sum_p50_ratio": round(
+            p_sum["p50_s"] / max(p_e2e["p50_s"], 1e-9), 4),
+        "span_sum_p95_ratio": round(
+            p_sum["p95_s"] / max(p_e2e["p95_s"], 1e-9), 4),
+        "events_logged": len(eng.events),
+        "events_bounded": len(eng.events) <= eng.events.capacity,
+    }
+    for stage, row in eng.tracer.stage_decomposition().items():
+        out[f"stage_{stage}_p50_s"] = row["p50_s"]
+        out[f"stage_{stage}_p95_s"] = row["p95_s"]
+    if scrape:
+        body = scrape["body"]
+        missing = [f for f in REQUIRED_FAMILIES
+                   if f"# TYPE {f} " not in body]
+        out["scrape_ok"] = (scrape["status"].endswith("200 OK")
+                            and not missing
+                            and 'tenant="acme"' in body
+                            and 'tenant="globex"' in body)
+    else:
+        out["scrape_ok"] = None           # sockets unavailable: skipped
+
+    # (b) tracing overhead: identical sync workloads, traced vs off —
+    # best-of-3 walls so timer jitter doesn't drown the comparison
+    sync_wl = build_workload(pairs, max(n_req, 4 * batch), burst_prob=0.0,
+                             seed=41)
+    walls = {}
+    for tag, tracer in (("off", Tracer(TraceConfig.off())),
+                        ("on", Tracer(TraceConfig(sample_rate=1.0,
+                                                  max_traces=8192)))):
+        e = make_engine(pairs, batch_size=batch)
+        e.tracer = tracer
+        e.process(sync_wl[:batch])        # compile before the clock
+        best = float("inf")
+        for _ in range(3):
+            t0 = _time.perf_counter()
+            e.process(sync_wl)
+            best = min(best, _time.perf_counter() - t0)
+        walls[tag] = best
+    out["untraced_wall_s"] = round(walls["off"], 4)
+    out["traced_wall_s"] = round(walls["on"], 4)
+    out["trace_overhead_pct"] = round(
+        100.0 * (walls["on"] / walls["off"] - 1.0), 2)
+
+    # (c) tracing off = zero per-request tracing work
+    off_eng = make_engine(pairs, batch_size=batch, warm=False)
+    off_eng.process(sync_wl[:batch])
+    out["off_path_traces_started"] = off_eng.tracer.started
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -365,6 +475,15 @@ def main(argv=None) -> int:
     for k, v in nh.items():
         _emit(f"serve/near_{k}", v)
 
+    # 7. observability: stage decomposition, span-sum invariant, tracing
+    #    overhead, /metrics scrape (DESIGN.md §18.6)
+    obs = bench_observability(pairs, batch=batch,
+                              n_req=min(n_req, 96 if args.smoke else 500),
+                              rate_qps=rate,
+                              llm_latency_s=0.01 if args.smoke else 0.05)
+    for k, v in obs.items():
+        _emit(f"serve/obs_{k}", v)
+
     ok = True
     if not parity["decisions_match"] or not parity["answers_match"]:
         print("FAIL: async scheduler diverged from sync engine", file=sys.stderr)
@@ -416,6 +535,33 @@ def main(argv=None) -> int:
         ok = False
     if not nh["exact_rows_identical"]:
         print("FAIL: band engine diverged on exact-hit rows", file=sys.stderr)
+        ok = False
+    # observability expectations are hard requirements (§18.6): the stage
+    # decomposition must reconstruct measured e2e latency within 10% at
+    # p50/p95, tracing must cost <5% when on and NOTHING when off, and the
+    # /metrics exposition must serve every required family with tenant
+    # labels (skipped only when the sandbox forbids sockets)
+    if not 0.9 <= obs["span_sum_p50_ratio"] <= 1.1:
+        print("FAIL: span-sum p50 off by >10% from measured e2e",
+              file=sys.stderr)
+        ok = False
+    if not 0.9 <= obs["span_sum_p95_ratio"] <= 1.1:
+        print("FAIL: span-sum p95 off by >10% from measured e2e",
+              file=sys.stderr)
+        ok = False
+    if obs["trace_overhead_pct"] >= 5.0:
+        print("FAIL: tracing overhead above the 5% bound", file=sys.stderr)
+        ok = False
+    if obs["scrape_ok"] is False:
+        print("FAIL: /metrics scrape missing families or tenant labels",
+              file=sys.stderr)
+        ok = False
+    if obs["off_path_traces_started"] != 0:
+        print("FAIL: tracing-off engine still started traces",
+              file=sys.stderr)
+        ok = False
+    if not (obs["events_logged"] > 0 and obs["events_bounded"]):
+        print("FAIL: event log empty or over capacity", file=sys.stderr)
         ok = False
     _emit("serve/ok", ok)
     return 0 if ok else 1

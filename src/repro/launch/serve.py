@@ -77,6 +77,16 @@ def main():
     ap.add_argument("--snapshot", default=None,
                     help="save the full CacheRuntime (slab + policy + index "
                          "state) here after serving")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="async: serve the Prometheus-style /metrics (+ "
+                         "/traces, /events) exposition on this HTTP port "
+                         "for the run's duration (DESIGN.md §18.4)")
+    ap.add_argument("--trace-sample", type=float, default=0.0,
+                    help="request-trace retention rate in [0,1] "
+                         "(0 = tracing off, the default; §18.2)")
+    ap.add_argument("--trace-slow-ms", type=float, default=None,
+                    help="always retain traces slower than this many ms, "
+                         "even when the rate sampler would drop them")
     args = ap.parse_args()
 
     pairs = build_corpus(args.corpus, seed=0)
@@ -110,9 +120,17 @@ def main():
         if args.index == "ivf" else None
     policy = AdaptiveThreshold(init=args.threshold) \
         if args.policy == "adaptive" else None
+    tracer = None
+    if args.trace_sample > 0.0 or args.trace_slow_ms is not None:
+        from repro.obs import TraceConfig, Tracer
+        tracer = Tracer(TraceConfig(
+            sample_rate=args.trace_sample,
+            slow_threshold_s=None if args.trace_slow_ms is None
+            else args.trace_slow_ms / 1000.0))
     engine = CachedEngine(cfg, backend, judge=judge, batch_size=args.batch,
                           index=index, policy=policy,
-                          use_fused_step=args.fused, registry=registry)
+                          use_fused_step=args.fused, registry=registry,
+                          tracer=tracer)
 
     if registry is None:
         print(f"warming cache with {len(pairs)} QA pairs ...")
@@ -151,6 +169,11 @@ def main():
                                     tenant_weights=None if registry is None
                                     else registry.weights())
             async with AsyncCacheServer(engine, sched) as server:
+                if args.metrics_port is not None:
+                    mport = await server.serve_metrics(
+                        port=args.metrics_port)
+                    print(f"/metrics exposition on "
+                          f"http://127.0.0.1:{mport}/metrics")
                 if args.rate_qps:
                     res = await run_open_loop(server.submit_request,
                                               requests, args.rate_qps)
@@ -161,6 +184,9 @@ def main():
             print(f"sustained {res.achieved_qps:.1f} qps "
                   f"({res.wall_s:.2f}s wall)")
         asyncio.run(drive())
+        if tracer is not None and tracer.retained:
+            print("trace stage decomposition (retained traces):")
+            print(json.dumps(tracer.stage_decomposition(), indent=1))
     print(json.dumps(engine.metrics.summary(), indent=1))
     if registry is not None:
         print("device-side per-tenant counters:")

@@ -58,6 +58,8 @@ from repro.core.runtime import CacheRuntime
 from repro.core.types import CacheConfig
 from repro.data.tokenizer import HashTokenizer
 from repro.embedding.hash_embedder import HashEmbedder
+from repro.obs.explain import build_why, effective_edges
+from repro.obs.trace import Tracer
 from repro.serving.metrics import ServingMetrics
 
 
@@ -72,6 +74,8 @@ class Request:
     session: str = ""            # conversation id (multi-turn context,
                                  # DESIGN.md §16); "" = stateless request;
                                  # ignored without a fusion strategy
+    explain: bool = False        # attach a decision-attribution ``why``
+                                 # record to the Response (DESIGN.md §18.3)
 
 
 @dataclasses.dataclass
@@ -88,6 +92,11 @@ class Response:
                               # [τ_lo, τ_hi) band (§17) — ``cached`` stays
                               # False: near-hits are provenance-distinct
                               # from exact reuse
+    trace_id: str = ""        # RequestTrace id when tracing retained this
+                              # request's journey ("" when tracing is off)
+    why: dict | None = None   # decision attribution (§18.3); only set when
+                              # the request opted in via Request.explain or
+                              # the engine forces explain_responses=True
 
 
 #: Row used to right-pad a partial batch up to the engine's fixed batch
@@ -136,7 +145,10 @@ class CachedEngine:
                  fusion=None,
                  session_ttl_s: float | None = 1800.0,
                  max_sessions: int = 4096,
-                 synthesizer=None):
+                 synthesizer=None,
+                 tracer: Tracer | None = None,
+                 events=None,
+                 explain_responses: bool = False):
         # ``policy``: optional threshold policy (e.g. AdaptiveThreshold —
         # paper §2.10 future work). With an adaptive policy the engine feeds
         # judged hit outcomes back after every batch, closing the paper's
@@ -160,6 +172,15 @@ class CachedEngine:
         # policy=None defaults the policy to BandPolicy(tau_hi=threshold).
         # None = binary hit/miss (unchanged — the band masks are all-False
         # and the compiled step is identical to the band-less program).
+        # ``tracer``: optional repro.obs.Tracer (DESIGN.md §18.1) — threads
+        # per-request stage spans through serve_batch. None = a disabled
+        # Tracer: every hook is the shared NULL_TRACE singleton, so the
+        # hot path allocates nothing.
+        # ``events``: optional repro.obs.EventLog — one structured event
+        # per serve step (batch composition + CacheStats delta, §18.4).
+        # ``explain_responses``: force a ``why`` record onto EVERY
+        # response (demos/debugging); normally per-request opt-in via
+        # Request.explain.
         if synthesizer is not None and policy is None:
             from repro.generative.policy import BandPolicy
             policy = BandPolicy(tau_hi=cache_config.threshold)
@@ -198,6 +219,9 @@ class CachedEngine:
         self.judge = judge
         self.batcher = Batcher(batch_size)
         self.metrics = ServingMetrics()
+        self.tracer = tracer if tracer is not None else Tracer()
+        self.events = events
+        self.explain_all = explain_responses
         self._now = 0.0
         # One uniform set of jitted pure functions — no index/policy
         # branches. The runtime is owned linearly (each call's output
@@ -525,8 +549,85 @@ class CachedEngine:
                 syn_cost += syn.cost_usd
         return syn_by_row, syn_time, syn_cost
 
+    def _why_snapshot(self, result):
+        """Decision-time attribution snapshot (§18.3): the policy state and
+        the top-k neighbour payload, pulled to host BEFORE the fused step
+        donates the runtime buffers and the judged feedback moves the
+        edges — these are the values the decision was actually made under."""
+        payload = self._gather_topk_jit(self.runtime, result)
+        return (np.asarray(self.runtime.policy_state),
+                {"slots": np.asarray(result.topk_index),
+                 "scores": np.asarray(result.topk_score),
+                 "source_ids": np.asarray(payload["source_id"])})
+
+    def _build_whys(self, batch, n_valid, tid, hit, near_served, scores,
+                    matched_idx, matched_sid, near_row, has_ctx,
+                    syn_by_row, why_ps, why_topk):
+        """Per-row ``why`` records for the rows that opted in (§18.3)."""
+        tid_np = None if tid is None else np.asarray(tid)
+        edges_by_tenant: dict = {}
+        whys: list = [None] * n_valid
+        for i in range(n_valid):
+            if not (self.explain_all or batch[i].explain):
+                continue
+            tix = None if tid_np is None else int(tid_np[i])
+            if tix not in edges_by_tenant:
+                edges_by_tenant[tix] = effective_edges(
+                    self.cache.policy, why_ps, self.cache.partition, tix)
+            whys[i] = build_why(
+                i, request=batch[i], hit=bool(hit[i]),
+                near_served=bool(near_served[i]), score=float(scores[i]),
+                matched_slot=int(matched_idx[i]),
+                matched_source_id=int(matched_sid[i]),
+                topk_slots=why_topk["slots"][i],
+                topk_scores=why_topk["scores"][i],
+                topk_source_ids=why_topk["source_ids"][i],
+                edges=edges_by_tenant[tix],
+                session_fused=bool(has_ctx[i]),
+                synthesizer_present=self.synthesizer is not None,
+                near_band=bool(near_row[i]),
+                synthesis_source_id=(syn_by_row[i].source_id
+                                     if i in syn_by_row else None))
+        return whys
+
+    def explain(self, query: str, *, tenant: str = "default",
+                session: str = "") -> dict:
+        """Offline decision attribution (§18.3): what WOULD the cache do
+        with ``query`` right now, and why? Pure peek — no counters move,
+        nothing is inserted, no synthesis or backend call is attempted
+        (``in_band`` tells the near-hit story; ``dry_run`` marks the
+        record as a what-if)."""
+        req = Request(query=query, tenant=tenant, session=session,
+                      explain=True)
+        batch, _ = self.batcher.pad([req])
+        tid = self._tenant_ids(batch)
+        emb = jnp.asarray(self.embedder.embed_batch(
+            [r.query for r in batch]))
+        win, wlen, has_ctx = self._session_windows(batch)
+        peek = self._peek_jit(self.runtime, emb, jnp.float32(self._now),
+                              tid, win, wlen)
+        why_ps, why_topk = self._why_snapshot(peek)
+        tix = None if tid is None else int(np.asarray(tid)[0])
+        edges = effective_edges(self.cache.policy, why_ps,
+                                self.cache.partition, tix)
+        why = build_why(
+            0, request=req, hit=bool(np.asarray(peek.hit)[0]),
+            near_served=False, score=float(np.asarray(peek.score)[0]),
+            matched_slot=int(np.asarray(peek.index)[0]),
+            matched_source_id=int(np.asarray(peek.source_id)[0]),
+            topk_slots=why_topk["slots"][0],
+            topk_scores=why_topk["scores"][0],
+            topk_source_ids=why_topk["source_ids"][0],
+            edges=edges, session_fused=bool(has_ctx[0]),
+            synthesizer_present=False,
+            near_band=bool(np.asarray(peek.near)[0]),
+            synthesis_source_id=None)
+        why["dry_run"] = True
+        return why
+
     def serve_batch(self, batch: list[Request], *,
-                    record_path_latency: bool = True) -> list[Response]:
+                    record_path_latency: bool = True,
+                    traces: list | None = None) -> list[Response]:
         """Serve ONE admission batch: peek -> backend -> fused step commit.
 
         This is the pure device-side serve path (DESIGN.md §12.1): it does
@@ -540,8 +641,27 @@ class CachedEngine:
         latency samples — the async scheduler records true end-to-end
         (queue wait + service) latencies itself instead of these
         batch-amortized service times.
+
+        ``traces`` is an optional per-row list of ``RequestTrace``s (the
+        async scheduler passes the entries' traces, already carrying their
+        queue-side spans); engine stage spans are appended to each and the
+        CALLER finishes them. When ``traces`` is None and the engine's
+        tracer is collecting, serve_batch owns the traces itself: it
+        starts one per real row and finishes it with the batch wall time
+        (the sync ``process()`` path). When tracing is off there is no
+        stage clock and no per-request allocation (§18.2).
         """
         n_valid = len(batch)
+        clock = self.tracer.stage_clock()
+        own_traces = False
+        if clock is not None and traces is None:
+            traces = [self.tracer.start() for _ in range(n_valid)]
+            own_traces = True
+        ev_stats0 = None
+        if self.events is not None:
+            ev_stats0 = {k: int(getattr(self.stats, k)) for k in
+                         ("lookups", "hits", "misses", "inserts",
+                          "expired_evictions")}
         if self.registry is not None and len(batch) > self.batcher.batch_size:
             # the per-tenant ring guarantees distinct slots only while a
             # batch's rows per tenant fit in the tenant's region, which the
@@ -565,12 +685,17 @@ class CachedEngine:
         t0 = time.perf_counter()
         emb = jnp.asarray(self.embedder.embed_batch([r.query for r in batch]))
         win, wlen, has_ctx = self._session_windows(batch)
+        if clock is not None:
+            clock.tick("embed")
         now = jnp.float32(self._now)
         self._maybe_refit()
 
         llm_time = 0.0
         llm_cost = 0.0
         answers: dict[int, str] = {}
+        want_why = self.explain_all or any(
+            batch[i].explain for i in range(n_valid))
+        why_ps = why_topk = None
 
         if self.use_fused_step:
             # 1. pure peek: learn the miss set without committing any state
@@ -578,10 +703,19 @@ class CachedEngine:
             peek = self._peek_jit(self.runtime, emb, now, tid, win, wlen)
             peek_hit = np.asarray(peek.hit)
             cache_time = time.perf_counter() - t0
+            if clock is not None:
+                clock.tick("device_step")
+            if want_why:
+                # attribution snapshot (§18.3) — BEFORE the fused step
+                # donates the runtime and the policy feedback moves the
+                # edges: these are the values the decision was made under
+                why_ps, why_topk = self._why_snapshot(peek)
             # 1b. near-hit synthesis (§17.3): band rows the synthesizer
             #     converts skip the backend; abstained rows stay misses
             syn_by_row, syn_time, syn_cost = \
                 self._synthesize_near(batch, n_valid, peek)
+            if clock is not None:
+                clock.tick("near_synthesis")
             miss_idx = [i for i in range(n_valid)
                         if not peek_hit[i] and i not in syn_by_row]
             # 2. backend answers the misses (paper §2.5 step 2)
@@ -592,6 +726,8 @@ class CachedEngine:
                     self._generate_misses(batch, miss_idx)
                 miss_values[miss_idx] = np.asarray(toks)
                 miss_lens[miss_idx] = np.asarray(lens)
+            if clock is not None:
+                clock.tick("backend_call")
             # synthesized rows ride the same masked insert (insert mask is
             # ~hit, which includes band rows): the near-hit answer is
             # admitted under the query's own key (§17.4), carrying the
@@ -617,6 +753,8 @@ class CachedEngine:
                 tid, win, wlen)
             jax.block_until_ready(result.hit)  # count the commit in cache_time
             cache_time += time.perf_counter() - t1
+            if clock is not None:
+                clock.tick("insert")
             self._inserts_since_rebuild += len(miss_idx) + len(syn_by_row)
         else:
             # reference path: pre-fuse once so the miss insert stores the
@@ -628,8 +766,14 @@ class CachedEngine:
                                                     tid, None, None)
             lookup_hit = np.asarray(result.hit)
             cache_time = time.perf_counter() - t0
+            if clock is not None:
+                clock.tick("device_step")
+            if want_why:
+                why_ps, why_topk = self._why_snapshot(result)
             syn_by_row, syn_time, syn_cost = \
                 self._synthesize_near(batch, n, result)
+            if clock is not None:
+                clock.tick("near_synthesis")
             miss_idx = [i for i in range(n)
                         if not lookup_hit[i] and i not in syn_by_row]
             # per-row insert payload: backend answers for misses, admitted
@@ -644,6 +788,8 @@ class CachedEngine:
                     row_toks[i] = np.asarray(toks[j])
                     row_lens[i] = int(lens[j])
                     row_sid[i] = batch[i].source_id
+            if clock is not None:
+                clock.tick("backend_call")
             if syn_by_row:
                 rows = sorted(syn_by_row)
                 stoks, slens = self.tokenizer.encode_batch(
@@ -666,6 +812,8 @@ class CachedEngine:
                     jnp.asarray([row_lens[i] for i in ins], dtype=jnp.int32),
                     now, sid, jnp.ones((len(ins),), dtype=bool), mtid)
                 self._inserts_since_rebuild += len(ins)
+            if clock is not None:
+                clock.tick("insert")
 
         if self.sessions is not None:
             self._append_turns(batch, n_valid,
@@ -735,6 +883,13 @@ class CachedEngine:
             else near_served[:n_valid],
             syn_cost=syn_cost, syn_time=syn_time)
 
+        whys = None
+        if want_why:
+            whys = self._build_whys(
+                batch, n_valid, tid, hit, near_served, scores,
+                np.asarray(result.index), matched_sid, near_row, has_ctx,
+                syn_by_row, why_ps, why_topk)
+
         per_q_latency = (cache_time + llm_time + syn_time) / max(n_valid, 1)
         if record_path_latency:
             for i in range(n_valid):
@@ -744,8 +899,43 @@ class CachedEngine:
                     path, per_q_latency,
                     tenant=None if self.registry is None
                     else batch[i].tenant)
-        return [Response(answer=answers[i], cached=bool(hit[i]),
-                         score=float(scores[i]), latency_s=per_q_latency,
-                         context=has_ctx[i],
-                         near_hit=bool(near_served[i]))
-                for i in range(n_valid)]
+        responses = [
+            Response(answer=answers[i], cached=bool(hit[i]),
+                     score=float(scores[i]), latency_s=per_q_latency,
+                     context=has_ctx[i],
+                     near_hit=bool(near_served[i]),
+                     trace_id="" if traces is None or i >= len(traces)
+                     else traces[i].trace_id,
+                     why=None if whys is None else whys[i])
+            for i in range(n_valid)]
+        if clock is not None:
+            clock.tick("respond")
+            if traces is not None:
+                # engine spans tile serve_batch's wall time contiguously
+                # (§18.1), so for the sync path span-sum == e2e by
+                # construction; the scheduler prepends its queue-side
+                # spans and finishes with the true arrival->resolve e2e
+                batch_wall = sum(s.duration_s for s in clock.spans)
+                for i in range(min(n_valid, len(traces))):
+                    tr = traces[i]
+                    if not tr:
+                        continue
+                    tr.spans.extend(clock.spans)
+                    tr.annotate(row=i, batch_rows=n_valid,
+                                path="hit" if hit[i] else
+                                ("near" if near_served[i] else "miss"))
+                    if whys is not None and whys[i] is not None:
+                        tr.why = whys[i]
+                    if own_traces:
+                        self.tracer.finish(tr, e2e_s=batch_wall)
+        if self.events is not None:
+            self.events.emit(
+                "serve_batch", rows=n_valid,
+                hits=int(hit[:n_valid].sum()),
+                near_hits=len(syn_by_row),
+                backend_calls=len(miss_idx),
+                cache_time_s=round(cache_time, 6),
+                llm_time_s=round(llm_time + syn_time, 6),
+                stats_delta={k: int(getattr(self.stats, k)) - ev_stats0[k]
+                             for k in ev_stats0})
+        return responses

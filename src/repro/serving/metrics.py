@@ -36,10 +36,17 @@ and the marginal synthesis cost/latency, surfaced under
 from __future__ import annotations
 
 import dataclasses
+import random
 from collections import defaultdict
 
 
 _PCTS = (50.0, 95.0, 99.0)
+
+#: Histogram bucket upper bounds (seconds) for the Prometheus exposition
+#: (repro.obs.export). Spans sub-millisecond cache hits to multi-second
+#: backend calls; the +Inf bucket is implicit (``count`` closes it).
+LATENCY_BUCKETS_S = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+                     0.25, 0.5, 1.0, 2.5, 5.0)
 
 
 def percentiles(samples: list[float]) -> dict:
@@ -55,6 +62,67 @@ def percentiles(samples: list[float]) -> dict:
         val = xs[lo] + (xs[hi] - xs[lo]) * (rank - lo)
         out[f"p{int(p)}_s"] = round(val, 6)
     return out
+
+
+class LatencyReservoir:
+    """Bounded latency sample buffer (DESIGN.md §18.5).
+
+    ``record_latency`` used to append every sample to an unbounded
+    ``list[float]`` per path/tenant — a slow memory leak under sustained
+    load. This keeps three bounded things instead:
+
+      * exact scalars: ``count`` and ``total_s`` over ALL samples ever;
+      * a uniform random reservoir (Vitter's Algorithm R) of at most
+        ``cap`` samples, so percentile estimates stay statistically
+        honest over the full stream, not just a recent window;
+      * per-bucket counts over ``LATENCY_BUCKETS_S`` — exact histogram
+        counters for the Prometheus exposition, O(len(buckets)) memory.
+
+    The replacement RNG is seeded per-reservoir, so runs reproduce.
+    ``summary()`` matches the ``percentiles()`` row shape except that
+    ``count`` reports the true stream length, not the reservoir size.
+    """
+
+    __slots__ = ("cap", "count", "total_s", "samples", "_rng", "_buckets")
+
+    def __init__(self, cap: int = 2048, seed: int = 0x5eed):
+        if cap <= 0:
+            raise ValueError("cap must be positive")
+        self.cap = cap
+        self.count = 0
+        self.total_s = 0.0
+        self.samples: list[float] = []
+        self._rng = random.Random(seed)
+        self._buckets = [0] * (len(LATENCY_BUCKETS_S) + 1)   # last = +Inf
+
+    def add(self, seconds: float) -> None:
+        self.count += 1
+        self.total_s += seconds
+        for b, le in enumerate(LATENCY_BUCKETS_S):
+            if seconds <= le:
+                self._buckets[b] += 1
+                break
+        else:
+            self._buckets[-1] += 1
+        if len(self.samples) < self.cap:
+            self.samples.append(seconds)
+        else:
+            j = self._rng.randrange(self.count)
+            if j < self.cap:
+                self.samples[j] = seconds
+
+    def __len__(self) -> int:
+        return len(self.samples)
+
+    def summary(self) -> dict:
+        row = percentiles(self.samples)
+        row["count"] = self.count           # true stream length, not |reservoir|
+        return row
+
+    def bucket_rows(self) -> list[tuple[float, int]]:
+        """``(upper_bound_s, count)`` per bucket, +Inf last, non-cumulative."""
+        bounds = list(LATENCY_BUCKETS_S) + [float("inf")]
+        return list(zip(bounds, self._buckets))
 
 
 @dataclasses.dataclass
@@ -88,7 +156,8 @@ class TenantMetrics:
     hits: int = 0
     coalesced: int = 0
     latency_samples: dict = dataclasses.field(
-        default_factory=lambda: defaultdict(list))   # path -> [seconds]
+        default_factory=lambda: defaultdict(LatencyReservoir))
+    # path -> LatencyReservoir (bounded, §18.5)
 
     @property
     def hit_rate(self) -> float:
@@ -179,16 +248,18 @@ class ServingMetrics:
     coalesced_calls: int = 0                # requests merged into in-flight
                                             # duplicates (scheduler, §12.3)
     latency_samples: dict = dataclasses.field(
-        default_factory=lambda: defaultdict(list))   # path -> [seconds]
+        default_factory=lambda: defaultdict(LatencyReservoir))
+    # path -> LatencyReservoir (bounded, §18.5)
 
     def record_latency(self, path: str, seconds: float,
                        tenant: str | None = None) -> None:
         """One request's end-to-end latency on ``path`` (hit/miss/coalesced).
         ``tenant`` additionally files the sample under that tenant's
-        breakdown (multi-tenant serving, §13)."""
-        self.latency_samples[path].append(seconds)
+        breakdown (multi-tenant serving, §13). Any path name is accepted;
+        unknown names simply open a new bounded reservoir."""
+        self.latency_samples[path].add(seconds)
         if tenant is not None:
-            self.per_tenant[tenant].latency_samples[path].append(seconds)
+            self.per_tenant[tenant].latency_samples[path].add(seconds)
 
     def record_coalesced(self, n: int = 1, tenant: str | None = None) -> None:
         """Count requests merged into an in-flight duplicate. Their
@@ -276,8 +347,8 @@ class ServingMetrics:
                 "hit_rate": round(t.hit_rate, 4),
                 "coalesced_calls": t.coalesced,
                 "latency_percentiles": {
-                    path: percentiles(xs)
-                    for path, xs in sorted(t.latency_samples.items())},
+                    path: res.summary()
+                    for path, res in sorted(t.latency_samples.items())},
             }
         context = {}
         if self.context_seen:
@@ -298,6 +369,6 @@ class ServingMetrics:
             "avg_latency_without_cache_s": round(avg_without, 4),
             "coalesced_calls": self.coalesced_calls,
             "latency_percentiles": {
-                path: percentiles(xs)
-                for path, xs in sorted(self.latency_samples.items())},
+                path: res.summary()
+                for path, res in sorted(self.latency_samples.items())},
         }

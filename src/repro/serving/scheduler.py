@@ -126,13 +126,16 @@ class SchedulerConfig:
 class _Entry:
     """One queued leader request and its completion future."""
 
-    __slots__ = ("request", "future", "arrival")
+    __slots__ = ("request", "future", "arrival", "trace")
 
     def __init__(self, request: Request, future: asyncio.Future,
-                 arrival: float):
+                 arrival: float, trace=None):
         self.request = request
         self.future = future
         self.arrival = arrival
+        # RequestTrace when the engine's tracer is collecting, else the
+        # shared NULL_TRACE (no per-request allocation, DESIGN.md §18.2)
+        self.trace = trace
 
 
 class AsyncScheduler:
@@ -160,10 +163,11 @@ class AsyncScheduler:
         self._rr: deque[str] = deque()     # backlogged tenants, rotation order
         self._deficit: dict[str, float] = {}
         self._qlen = 0                     # total backlog across tenants
-        # key -> list of (waiter future, arrival time); present from leader
-        # enqueue until its response is delivered (covers queued AND
-        # dispatched-to-backend windows — that is the "in-flight" part)
-        self._pending: dict[str, list[tuple[asyncio.Future, float]]] = {}
+        # key -> list of (waiter future, arrival time, waiter trace, waiter
+        # request); present from leader enqueue until its response is
+        # delivered (covers queued AND dispatched-to-backend windows —
+        # that is the "in-flight" part)
+        self._pending: dict[str, list[tuple]] = {}
         # embedding-similarity coalescing state (coalesce_sim, §12.3): the
         # LSH prefilter plus, per pending leader, its embedding and bucket
         # registrations (for cosine verification and cleanup)
@@ -181,6 +185,17 @@ class AsyncScheduler:
         self._stopping = False
         self._running = False
         self.batches_served = 0
+
+    def _waiter_trace(self, arrival: float, leader_key: str):
+        """Trace for a coalesced waiter: its whole queue life is one
+        ``coalesce_attach`` span (arrival -> attached to the in-flight
+        leader); the ``respond`` span is added at resolution. Returns the
+        shared NULL_TRACE when the tracer is off."""
+        tr = self.engine.tracer.start()
+        if tr:
+            tr.add("coalesce_attach", arrival, time.perf_counter())
+            tr.annotate(leader=leader_key)
+        return tr
 
     def _weight(self, tenant: str) -> float:
         w = self.config.tenant_weights
@@ -303,12 +318,16 @@ class AsyncScheduler:
                                  dtype=np.float32)
                 sim_leader = self._similar_leader(request, emb)
             if self.config.coalesce and key in self._pending:
-                self._pending[key].append((fut, arrival))
+                self._pending[key].append(
+                    (fut, arrival, self._waiter_trace(arrival, key),
+                     request))
                 self.engine.metrics.record_coalesced(
                     1, tenant=self._tenant_of(request))
             elif sim_leader is not None:
                 # cosine-verified paraphrase of an in-flight leader (§12.3)
-                self._pending[sim_leader].append((fut, arrival))
+                self._pending[sim_leader].append(
+                    (fut, arrival, self._waiter_trace(arrival, sim_leader),
+                     request))
                 self.engine.metrics.record_coalesced(
                     1, tenant=self._tenant_of(request))
             else:
@@ -322,7 +341,8 @@ class AsyncScheduler:
                     await self._cond.wait()
                     if self._stopping:
                         raise RuntimeError("scheduler stopped while queued")
-                queue.append(_Entry(request, fut, arrival))
+                queue.append(_Entry(request, fut, arrival,
+                                    trace=self.engine.tracer.start()))
                 self._qlen += 1
                 if tenant not in self._rr:
                     self._rr.append(tenant)
@@ -384,7 +404,19 @@ class AsyncScheduler:
                             or age_ms >= self.config.max_wait_ms
                             or self._force_flush or self._stopping):
                         self._force_flush = False
+                        t_flush = time.perf_counter()
                         entries = self._form_batch()
+                        if self.engine.tracer.collecting:
+                            # queue-side spans (§18.1): queue_wait is
+                            # arrival -> flush decision, batch_form the
+                            # DRR assembly; the engine's contiguous stage
+                            # clock picks up from the executor handoff
+                            t_formed = time.perf_counter()
+                            for e in entries:
+                                e.trace.add("queue_wait", e.arrival,
+                                            t_flush)
+                                e.trace.add("batch_form", t_flush,
+                                            t_formed)
                         self._cond.notify_all()   # wake blocked submitters
                         return entries
                     timeout = self.config.max_wait_ms / 1000.0 - age_ms / 1000.0
@@ -405,13 +437,14 @@ class AsyncScheduler:
             responses = await loop.run_in_executor(
                 self._executor,
                 lambda: self.engine.serve_batch(
-                    batch, record_path_latency=False))
+                    batch, record_path_latency=False,
+                    traces=[e.trace for e in entries]))
         except Exception as exc:                    # resolve, never strand
             async with self._cond:
                 for e in entries:
                     key = coalesce_key(e.request)
                     self._unregister_leader(key)
-                    for fut, _ in self._pending.pop(key, []):
+                    for fut, *_ in self._pending.pop(key, []):
                         if not fut.done():
                             fut.set_exception(exc)
                     if not e.future.done():
@@ -431,16 +464,52 @@ class AsyncScheduler:
                 if not e.future.done():
                     e.future.set_result(
                         dataclasses.replace(r, latency_s=done - e.arrival))
+                if e.trace:
+                    # true client-observed e2e: queue wait + service
+                    self.engine.tracer.finish(e.trace,
+                                              e2e_s=done - e.arrival)
                 # waiters inherit the leader's answer/decision; they paid
                 # no lookup and no backend call (and shared the leader's
                 # tenant — the coalesce key guarantees it; similarity
                 # waiters additionally passed the cosine >= coalesce_sim
                 # verification against this leader)
-                self._unregister_leader(coalesce_key(e.request))
-                for fut, w_arrival in self._pending.pop(
-                        coalesce_key(e.request), []):
+                key = coalesce_key(e.request)
+                self._unregister_leader(key)
+                for fut, w_arrival, wtr, w_req in self._pending.pop(
+                        key, []):
+                    # the waiter's latency files under its OWN "coalesced"
+                    # path — folding it into the leader's hit/miss bucket
+                    # would skew those paths' p99 (§18.5)
                     self.engine.metrics.record_latency(
                         "coalesced", done - w_arrival, tenant=tenant)
+                    w_resp = dataclasses.replace(
+                        r, coalesced=True, latency_s=done - w_arrival,
+                        trace_id="", why=None)
+                    if w_req.explain or self.engine.explain_all:
+                        w_resp = dataclasses.replace(
+                            w_resp, why=self._waiter_why(r, w_req, key))
+                    if wtr:
+                        t_att = wtr.spans[-1].t1 if wtr.spans else w_arrival
+                        wtr.add("respond", t_att, done)
+                        wtr.why = w_resp.why
+                        w_resp = dataclasses.replace(
+                            w_resp, trace_id=wtr.trace_id)
+                        self.engine.tracer.finish(
+                            wtr, e2e_s=done - w_arrival)
                     if not fut.done():
-                        fut.set_result(dataclasses.replace(
-                            r, coalesced=True, latency_s=done - w_arrival))
+                        fut.set_result(w_resp)
+
+    @staticmethod
+    def _waiter_why(r: Response, w_req: Request, leader_key: str) -> dict:
+        """Attribution for a coalesced waiter (§18.3): the decision is
+        ``coalesced`` (this request paid nothing), ``coalesced_into`` names
+        the leader, and the leader's own record — when it carried one —
+        rides along with its decision demoted to ``leader_decision``."""
+        leader_decision = ("hit" if r.cached
+                          else "near_hit" if r.near_hit else "miss")
+        why = dict(r.why) if r.why is not None else {
+            "score": round(float(r.score), 6),
+            "tenant": w_req.tenant, "session": w_req.session}
+        why.update(decision="coalesced", coalesced_into=leader_key,
+                   leader_decision=leader_decision)
+        return why

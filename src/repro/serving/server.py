@@ -39,6 +39,15 @@ Responses may arrive out of request order (coalesced waiters resolve with
 their leader's batch), so pipelined clients should send an ``id`` — it is
 echoed verbatim in the matching response line.
 
+Observability (DESIGN.md §18) rides the same additive discipline: a
+request line with ``"explain": true`` gets ``why`` (decision attribution)
+and ``trace_id`` on its response line; lines without the key get the
+pre-observability payload byte for byte. ``GET /metrics`` — on the main
+TCP port (sniffed off the first line) or on the dedicated
+``serve_metrics`` HTTP listener — returns the Prometheus-style text
+exposition; ``GET /traces`` and ``GET /events`` drain the retained
+traces / the structured event ring as JSON lines.
+
 No third-party serving stack (HTTP frameworks, gRPC) is used — the repo's
 offline constraint — but the seam is exactly where one would bolt on.
 """
@@ -47,6 +56,7 @@ from __future__ import annotations
 import asyncio
 import json
 
+from repro.obs.export import MetricsExporter
 from repro.serving.engine import CachedEngine, Request, Response
 from repro.serving.scheduler import AsyncScheduler, SchedulerConfig
 
@@ -62,7 +72,9 @@ class AsyncCacheServer:
             max_batch=engine.batcher.batch_size)
         self.engine = engine
         self.scheduler = AsyncScheduler(engine, cfg)
+        self.exporter = MetricsExporter(engine)
         self._tcp: asyncio.AbstractServer | None = None
+        self._metrics_srv: asyncio.AbstractServer | None = None
 
     # -- lifecycle ------------------------------------------------------- #
     async def start(self) -> None:
@@ -73,6 +85,10 @@ class AsyncCacheServer:
             self._tcp.close()
             await self._tcp.wait_closed()
             self._tcp = None
+        if self._metrics_srv is not None:
+            self._metrics_srv.close()
+            await self._metrics_srv.wait_closed()
+            self._metrics_srv = None
         await self.scheduler.stop()
 
     async def __aenter__(self) -> "AsyncCacheServer":
@@ -85,10 +101,12 @@ class AsyncCacheServer:
     # -- in-process API --------------------------------------------------- #
     async def submit(self, query: str, *, category: str = "default",
                      source_id: int = -1, semantic_key: str = "",
-                     tenant: str = "default", session: str = "") -> Response:
+                     tenant: str = "default", session: str = "",
+                     explain: bool = False) -> Response:
         return await self.scheduler.submit(Request(
             query=query, category=category, source_id=source_id,
-            semantic_key=semantic_key, tenant=tenant, session=session))
+            semantic_key=semantic_key, tenant=tenant, session=session,
+            explain=explain))
 
     async def submit_request(self, request: Request) -> Response:
         return await self.scheduler.submit(request)
@@ -98,6 +116,67 @@ class AsyncCacheServer:
         """Accept JSON-lines clients; returns the bound port (0 = ephemeral)."""
         self._tcp = await asyncio.start_server(self._handle, host, port)
         return self._tcp.sockets[0].getsockname()[1]
+
+    # -- observability HTTP (stdlib-only, §18.4) ------------------------- #
+    async def serve_metrics(self, host: str = "127.0.0.1",
+                            port: int = 0) -> int:
+        """Dedicated HTTP listener for ``/metrics`` / ``/traces`` /
+        ``/events`` (``repro.launch.serve --metrics-port``). Returns the
+        bound port (0 = ephemeral)."""
+        async def handle(reader, writer):
+            line = await reader.readline()
+            if line:
+                await self._serve_http(line, reader, writer)
+            else:
+                writer.close()
+        self._metrics_srv = await asyncio.start_server(handle, host, port)
+        return self._metrics_srv.sockets[0].getsockname()[1]
+
+    def _http_body(self, path: str) -> tuple[str | None, str]:
+        if path.rstrip("/") == "/metrics" or path == "/":
+            return self.exporter.render(), "text/plain; version=0.0.4"
+        if path.rstrip("/") == "/traces":
+            lines = [json.dumps(t, sort_keys=True)
+                     for t in self.engine.tracer.drain()]
+            return ("\n".join(lines) + ("\n" if lines else ""),
+                    "application/x-ndjson")
+        if path.rstrip("/") == "/events":
+            if self.engine.events is None:
+                return "", "application/x-ndjson"
+            return self.engine.events.to_jsonl(), "application/x-ndjson"
+        return None, ""
+
+    async def _serve_http(self, request_line: bytes,
+                          reader: asyncio.StreamReader,
+                          writer: asyncio.StreamWriter) -> None:
+        """Answer one HTTP/1.x GET and close — enough for any Prometheus-
+        compatible scraper, with no HTTP framework (the offline constraint)."""
+        try:
+            parts = request_line.decode("latin-1").split()
+            path = parts[1] if len(parts) > 1 else "/"
+            while True:                       # drain request headers
+                h = await reader.readline()
+                if not h or h in (b"\r\n", b"\n"):
+                    break
+            body, ctype = self._http_body(path)
+            status = "200 OK"
+            if body is None:
+                status, body, ctype = "404 Not Found", "not found\n", \
+                    "text/plain"
+            data = body.encode()
+            writer.write(
+                (f"HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n"
+                 f"Content-Length: {len(data)}\r\n"
+                 "Connection: close\r\n\r\n").encode() + data)
+            await writer.drain()
+        except (ConnectionError, OSError):
+            pass
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
 
     async def _handle(self, reader: asyncio.StreamReader,
                       writer: asyncio.StreamWriter) -> None:
@@ -114,7 +193,8 @@ class AsyncCacheServer:
                     source_id=int(obj.get("source_id", -1)),
                     semantic_key=obj.get("semantic_key", ""),
                     tenant=obj.get("tenant", "default"),
-                    session=obj.get("session", ""))
+                    session=obj.get("session", ""),
+                    explain=bool(obj.get("explain", False)))
                 payload = {"answer": resp.answer, "cached": resp.cached,
                            "score": resp.score, "latency_s": resp.latency_s,
                            "coalesced": resp.coalesced}
@@ -128,6 +208,12 @@ class AsyncCacheServer:
                     # near-hits — band-less deployments keep the exact
                     # pre-band payload keys (§17.5)
                     payload["near_hit"] = resp.near_hit
+                if obj.get("explain"):
+                    # attribution is per-request opt-in (§18.3): only the
+                    # lines that asked carry the extra keys, so non-opt-in
+                    # clients keep the previous payload byte for byte
+                    payload["why"] = resp.why
+                    payload["trace_id"] = resp.trace_id
             except Exception as exc:   # malformed line / scheduler stopped
                 payload = {"error": str(exc)}
             if req_id is not None:     # echo: responses can be out of order
@@ -144,6 +230,11 @@ class AsyncCacheServer:
                 line = await reader.readline()
                 if not line:
                     break
+                if line.startswith(b"GET ") or line.startswith(b"HEAD "):
+                    # /metrics scrape on the main port: an HTTP request
+                    # line is never valid JSON, so the sniff is unambiguous
+                    await self._serve_http(line, reader, writer)
+                    return
                 if line.strip():
                     t = asyncio.create_task(one(line))
                     tasks.add(t)

@@ -326,6 +326,96 @@ class TestServingMetricsExtensions:
         assert percentiles([])["count"] == 0
 
 
+class TestCoalescedPathSplit:
+    """Satellite (§18.5): a coalesced waiter's end-to-end latency files
+    under its OWN "coalesced" path bucket — folding N near-zero waiter
+    latencies into the leader's hit/miss path would skew those paths'
+    percentiles exactly when coalescing works best."""
+
+    def test_waiters_never_pollute_leader_path(self, pairs):
+        eng = make_engine(pairs)
+        q = "one novel question sixteen clients ask at once"
+
+        async def herd():
+            sched = SchedulerConfig(max_batch=8, max_wait_ms=5.0)
+            async with AsyncCacheServer(eng, sched) as server:
+                return await asyncio.gather(
+                    *(server.submit(q) for _ in range(16)))
+
+        asyncio.run(herd())
+        pct = eng.metrics.summary()["latency_percentiles"]
+        # exactly one leader miss; all fifteen waiters in "coalesced"
+        assert pct["miss"]["count"] == 1
+        assert pct["coalesced"]["count"] == 15
+        assert "hit" not in pct
+        assert eng.metrics.latency_samples["miss"].count == 1
+        assert eng.metrics.latency_samples["coalesced"].count == 15
+
+    def test_split_holds_per_tenant(self, pairs):
+        from repro.tenancy import TenantRegistry
+        eng = make_engine(pairs,
+                          registry=TenantRegistry.uniform(["acme", "globex"]),
+                          config=CacheConfig(dim=384, capacity=4096,
+                                             value_len=48, ttl=None,
+                                             threshold=0.8))
+        q = "identical question from both tenants"
+
+        async def herd():
+            sched = SchedulerConfig(max_batch=8, max_wait_ms=5.0)
+            async with AsyncCacheServer(eng, sched) as server:
+                return await asyncio.gather(
+                    *(server.submit(q, tenant=t)
+                      for t in ("acme", "globex") for _ in range(4)))
+
+        asyncio.run(herd())
+        tenants = eng.metrics.summary()["tenants"]
+        for name in ("acme", "globex"):       # coalescing never crosses
+            row = tenants[name]               # tenants: one leader each
+            assert row["latency_percentiles"]["miss"]["count"] == 1
+            assert row["latency_percentiles"]["coalesced"]["count"] == 3
+            assert row["coalesced_calls"] == 3
+
+    def test_scheduler_traces_split_leader_vs_waiter(self, pairs):
+        from repro.obs import TraceConfig, Tracer
+        eng = make_engine(pairs, tracer=Tracer(
+            TraceConfig(sample_rate=1.0, head=0)))
+        q = "a herd question for trace attribution"
+
+        async def herd():
+            sched = SchedulerConfig(max_batch=8, max_wait_ms=5.0)
+            async with AsyncCacheServer(eng, sched) as server:
+                return await asyncio.gather(
+                    *(server.submit(q, explain=True) for _ in range(6)))
+
+        responses = asyncio.run(herd())
+        assert eng.tracer.retained == 6
+        by_stage = {}
+        for t in eng.tracer.traces():
+            names = tuple(s.name for s in t.spans)
+            by_stage.setdefault("coalesce_attach" in names, []).append(t)
+        leader_traces, waiter_traces = by_stage[False], by_stage[True]
+        assert len(leader_traces) == 1 and len(waiter_traces) == 5
+        lt = leader_traces[0]
+        # the leader's trace carries the queue-side spans AND the engine's
+        # contiguous stage spans; its span sum reconstructs its e2e
+        lnames = [s.name for s in lt.spans]
+        assert lnames[:2] == ["queue_wait", "batch_form"]
+        assert {"embed", "device_step", "respond"} <= set(lnames)
+        assert lt.span_sum_s == pytest.approx(lt.e2e_s, rel=0.10)
+        # a waiter's whole life is attach -> respond, annotated with its
+        # leader, and its why record is demoted leader attribution
+        for wt in waiter_traces:
+            assert [s.name for s in wt.spans] == \
+                ["coalesce_attach", "respond"]
+            assert wt.meta["leader"]
+            assert wt.span_sum_s == pytest.approx(wt.e2e_s, rel=0.10)
+        whys = {r.why["decision"] for r in responses}
+        assert whys == {"miss", "coalesced"}
+        w = next(r.why for r in responses if r.why["decision"] == "coalesced")
+        assert w["leader_decision"] == "miss"
+        assert w["coalesced_into"]
+
+
 class TestTCPServer:
     def test_json_lines_roundtrip(self, pairs):
         eng = make_engine(pairs)

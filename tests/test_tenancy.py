@@ -416,15 +416,18 @@ class TestTenancyCheckpoint:
 # --------------------------------------------------------------------- #
 class _FakeEngine:
     """Duck-typed stand-in recording batch compositions; the scheduler only
-    touches ``serve_batch``, ``metrics`` and (optionally) ``registry``."""
+    touches ``serve_batch``, ``metrics``, ``tracer`` and (optionally)
+    ``registry``."""
 
     def __init__(self, delay_s=0.0):
+        from repro.obs import Tracer
         self.metrics = ServingMetrics()
         self.registry = None
-        self.delay_s = delay_s
+        self.tracer = Tracer()          # collection off, like the engine's
+        self.delay_s = delay_s          # default
         self.batches: list[list[str]] = []
 
-    def serve_batch(self, batch, record_path_latency=True):
+    def serve_batch(self, batch, record_path_latency=True, traces=None):
         self.batches.append([r.tenant for r in batch])
         if self.delay_s:
             time.sleep(self.delay_s)
