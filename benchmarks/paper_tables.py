@@ -428,3 +428,87 @@ def obs_table(full: bool = False):
                     f" overhead_pct={overhead_pct:.2f}"),
     })
     return rows, {"decomposition": decomp, "overhead_pct": overhead_pct}
+
+
+# child program for shard_table: timed local-vs-sharded fused steps on a
+# forced-8-device CPU topology (the parent process is single-device)
+_SHARD_CHILD = """
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import SemanticCache, CacheConfig, DistributedCache
+
+rows = []
+mesh = jax.make_mesh((4,), ("data",))
+B = 64
+for cap in @CAPS@:
+    cfg = CacheConfig(dim=64, capacity=cap, value_len=16, ttl=None,
+                      threshold=0.8)
+    local = SemanticCache(cfg)
+    dc = DistributedCache(SemanticCache(cfg), mesh)
+    mv = jnp.zeros((B, 16), jnp.int32)
+    mvl = jnp.full((B,), 16, jnp.int32)
+    lstep = jax.jit(lambda rt, q, t: local.step(rt, q, mv, mvl, t))
+    dstep = jax.jit(lambda rt, q, t: dc.step(rt, q, mv, mvl, t))
+    walls, parity = {}, True
+    for tag, cache, step in (("local", local, lstep),
+                             ("sharded", dc, dstep)):
+        rt = cache.init()
+        hits = []
+        for i in range(3):                       # compile + fill
+            q = jax.random.normal(jax.random.PRNGKey(i % 2), (B, 64))
+            res, rt = step(rt, q, jnp.float32(i))
+            hits.append(np.asarray(res.hit).copy())
+        jax.block_until_ready(rt.state.keys)
+        n = 10
+        t0 = time.perf_counter()
+        for i in range(n):
+            res, rt = step(rt, jax.random.normal(
+                jax.random.PRNGKey(i % 2), (B, 64)), jnp.float32(3 + i))
+        jax.block_until_ready(res.score)
+        walls[tag] = (time.perf_counter() - t0) / n
+        if tag == "local":
+            ref_hits = hits
+        else:
+            parity = all(np.array_equal(a, b)
+                         for a, b in zip(ref_hits, hits))
+    for tag in ("local", "sharded"):
+        rows.append({
+            "name": f"shard/step_{tag}_cap{cap}",
+            "us_per_call": 1e6 * walls[tag],
+            "derived": (f"batch={B} dim=64 shards="
+                        f"{1 if tag == 'local' else 4} parity={parity}"
+                        f" ratio={walls['sharded'] / walls['local']:.2f}"),
+        })
+print("ROWS-JSON " + json.dumps(rows))
+"""
+
+
+def shard_table(full: bool = False):
+    """Sharded-step rows (beyond-paper, DESIGN.md §19.6).
+
+    ``shard/*`` rows: the fused step's us/call, local single-device vs the
+    4-shard ``DistributedCache`` on the same capacity, plus the hit-mask
+    parity of the two paths on identical traffic. Runs in a subprocess
+    with XLA_FLAGS forcing 8 CPU devices — same machinery as
+    ``tests/test_distributed.py``.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    caps = [1 << 16] + ([1 << 20] if full else [])
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARD_CHILD.replace("@CAPS@", repr(caps))],
+        capture_output=True, text=True, timeout=1800, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"shard child failed:\n{r.stderr[-2000:]}")
+    rows = None
+    for line in r.stdout.splitlines():
+        if line.startswith("ROWS-JSON "):
+            rows = json.loads(line[len("ROWS-JSON "):])
+    if rows is None:
+        raise RuntimeError("shard child produced no ROWS-JSON line")
+    return rows, {"caps": caps}

@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   sec2.7/*        — TTL behaviour
   context/*       — multi-turn record/replay: fused vs stateless follow-up
                     hit conversion + context-hit precision (DESIGN.md §16)
+  shard/*         — fused step on a 4-shard forced-CPU mesh vs local: step
+                    us/call + hit-mask parity (DESIGN.md §19)
   kernel/*        — scoring-kernel scaling (slab 4k..512k); fused-IVF
                     operand bytes + exact-vs-IVF crossover (DESIGN.md §15)
   design3/*       — HNSW (paper algorithm) vs exact MXU scoring
@@ -112,6 +114,7 @@ def main() -> None:
         ("context", lambda: paper_tables.context_table(full=full)),
         ("near", lambda: paper_tables.near_hit_table(full=full)),
         ("obs", lambda: paper_tables.obs_table(full=full)),
+        ("shard", lambda: paper_tables.shard_table(full=full)),
         ("kernel", kernel_bench.cosine_topk_scaling),
         ("kernel-masked", kernel_bench.masked_lookup_scaling),
         ("kernel-ivf", kernel_bench.fused_ivf_bench),

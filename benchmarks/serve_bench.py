@@ -26,6 +26,14 @@ Six experiments on the simulated backend (DESIGN.md §12.5, §13.5, §16.6,
      baseline on the same workload: judged near-hits must convert, cut
      backend calls strictly beyond exact reuse at >0.9 judge precision,
      and leave every exact-hit row byte-identical.
+  8. **sharded** — the mesh-backed engine (DESIGN.md §19): a large slab
+     (≥1M slots; 64K in smoke) sharded over a forced-8-device CPU
+     topology, driven by skewed multi-tenant Zipf traffic through the
+     async scheduler. Asserts per-request decision parity against a
+     single-shard engine on identical traffic, a cross-shard cache hit
+     (warmed entries round-robin across shards and every query row finds
+     them), and a hit-path p99 bound. Runs in a re-exec'd subprocess —
+     the parent process has already initialized its single-device JAX.
 
 Output: ``name,value`` CSV rows, then a JSON metrics summary.
 
@@ -414,6 +422,139 @@ def bench_observability(pairs, *, batch: int, n_req: int, rate_qps: float,
     return out
 
 
+def _sharded_child(args) -> dict:
+    """Body of the sharded stage — runs in the re-exec'd 8-device child."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    smoke = args.smoke
+    mesh = jax.make_mesh((4,), ("data",))
+    corpus = args.corpus or (40 if smoke else 400)
+    batch = args.batch or (16 if smoke else 64)
+    n_req = args.requests or (160 if smoke else 1000)
+    rate = args.rate_qps or (400.0 if smoke else 800.0)
+    capacity = args.capacity or ((1 << 16) if smoke else (1 << 21))
+    pairs = build_corpus(corpus, seed=0)
+    by_id = {p.qa_id: p for p in pairs}
+
+    def judge(req, sid):
+        return sid >= 0 and sid in by_id and \
+            by_id[sid].semantic_key == req.semantic_key
+
+    registry = TenantRegistry((
+        TenantSpec("free", weight=1.0), TenantSpec("pro", weight=2.0),
+        TenantSpec("enterprise", weight=4.0), TenantSpec("batch",
+                                                         weight=1.0)))
+    # reduced dim keeps the full-capacity scoring GEMM tractable on the
+    # forced-CPU topology; the slab's *entry count* is the scaling axis
+    cfg = CacheConfig(dim=64, capacity=capacity, value_len=48, ttl=None,
+                      threshold=0.8)
+
+    def mk(mesh_, *, block=False, latency=0.0):
+        eng = CachedEngine(
+            cfg, SimulatedLLMBackend(pairs, latency_per_call_s=latency,
+                                     block=block),
+            judge=judge, batch_size=batch, registry=registry, mesh=mesh_)
+        for name in registry.names:
+            eng.warm(pairs, tenant=name)
+        return eng
+
+    out = {"num_shards": 4, "capacity": capacity,
+           "local_capacity": capacity // 4}
+    workload = build_multi_tenant_workload(
+        pairs, n_req, tenants=list(registry.names), skew=1.2,
+        burst_prob=0.2, burst_size=4, seed=13)
+
+    # (a) per-request decision parity vs a single-shard engine on
+    # identical traffic with identical batch partitioning
+    e_sh = mk(mesh)
+    e_ref = mk(None)
+    r_sh = e_sh.process(workload)
+    r_ref = e_ref.process(workload)
+    out["parity_decisions_match"] = all(
+        a.cached == b.cached for a, b in zip(r_ref, r_sh))
+    out["parity_answers_match"] = all(
+        a.answer == b.answer for a, b in zip(r_ref, r_sh))
+    out["hit_rate"] = round(sum(r.cached for r in r_sh) / len(r_sh), 4)
+    out["entries"] = int(np.asarray(e_sh.runtime.state.valid).sum())
+    out["entries_per_shard"] = np.asarray(
+        e_sh.runtime.state.valid).reshape(4, -1).sum(axis=1).tolist()
+
+    # (b) cross-shard hits: warmed entries were routed round-robin, so the
+    # matched slots of known-warm queries must span >1 shard owner
+    L = e_sh.cache.local_capacity
+    probe = pairs[:min(len(pairs), 64)]
+    emb = jnp.asarray(e_sh.embedder.embed_batch(
+        [p.question for p in probe]))
+    tid = jnp.zeros((len(probe),), dtype=jnp.int32)
+    res, _ = e_sh.cache.lookup(e_sh.runtime, emb, e_sh._now,
+                               update_counters=False, tenant_id=tid)
+    hit = np.asarray(res.hit)
+    owners = sorted(set(
+        (np.asarray(res.index)[hit] // L).tolist()))
+    out["probe_hits"] = int(hit.sum())
+    out["cross_shard_hit_owners"] = owners
+    out["cross_shard_hit"] = len(owners) >= 2
+
+    # (c) the async scheduler drives the sharded step directly: open-loop
+    # Poisson Zipf traffic against a blocking backend, DRR admission
+    e_async = mk(mesh, block=True, latency=0.01 if smoke else 0.05)
+    e_async.serve_batch([Request(query="sharded warmup",
+                                 tenant=registry.names[0])])
+    e_async.metrics = ServingMetrics()
+
+    async def drive():
+        sched = SchedulerConfig(max_batch=batch, max_wait_ms=2.0,
+                                tenant_weights=registry.weights(),
+                                max_queue_per_tenant=max(batch, n_req // 4))
+        async with AsyncCacheServer(e_async, sched) as server:
+            return await run_open_loop(server.submit_request, workload,
+                                       rate_qps=rate, seed=17)
+    res2 = asyncio.run(drive())
+    out["served_all"] = (len(res2.responses) == len(workload)
+                         and all(r is not None and r.answer
+                                 for r in res2.responses))
+    out["achieved_qps"] = round(res2.achieved_qps, 1)
+    summary = e_async.metrics.summary()
+    for path, pct in summary["latency_percentiles"].items():
+        for key in ("p50_s", "p95_s", "p99_s"):
+            out[f"{path}_{key}"] = pct[key]
+    return out
+
+
+def bench_sharded(args) -> dict:
+    """Stage 8 parent half: re-exec this script with a forced multi-device
+    CPU topology (the parent's JAX is already pinned to one device) and
+    collect the child's JSON summary."""
+    import os
+    import subprocess
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    cmd = [sys.executable, os.path.abspath(__file__), "--sharded-child"]
+    if args.smoke:
+        cmd.append("--smoke")
+    for flag, val in (("--corpus", args.corpus),
+                      ("--requests", args.requests),
+                      ("--batch", args.batch),
+                      ("--rate-qps", args.rate_qps),
+                      ("--capacity", args.capacity)):
+        if val is not None:
+            cmd += [flag, str(val)]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=3600)
+    if r.returncode != 0:
+        return {"child_ok": False,
+                "stderr_tail": r.stderr[-2000:] or r.stdout[-2000:]}
+    for line in r.stdout.splitlines():
+        if line.startswith("SHARDED-JSON "):
+            out = json.loads(line[len("SHARDED-JSON "):])
+            out["child_ok"] = True
+            return out
+    return {"child_ok": False, "stderr_tail": "no SHARDED-JSON line"}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -423,7 +564,16 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--batch", type=int, default=None)
     ap.add_argument("--rate-qps", type=float, default=None)
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="sharded-stage slab slots (default 1<<21, "
+                         "1<<16 in smoke)")
+    ap.add_argument("--sharded-child", action="store_true",
+                    help=argparse.SUPPRESS)   # internal re-exec entry
     args = ap.parse_args(argv)
+
+    if args.sharded_child:
+        print("SHARDED-JSON " + json.dumps(_sharded_child(args)))
+        return 0
 
     corpus = args.corpus or (60 if args.smoke else 500)
     n_req = args.requests or (192 if args.smoke else 2000)
@@ -483,6 +633,12 @@ def main(argv=None) -> int:
                               llm_latency_s=0.01 if args.smoke else 0.05)
     for k, v in obs.items():
         _emit(f"serve/obs_{k}", v)
+
+    # 8. sharded: large slab on a forced-8-device mesh through the async
+    #    scheduler (DESIGN.md §19.6) — subprocess re-exec
+    shard = bench_sharded(args)
+    for k, v in shard.items():
+        _emit(f"shard/{k}", v)
 
     ok = True
     if not parity["decisions_match"] or not parity["answers_match"]:
@@ -563,6 +719,33 @@ def main(argv=None) -> int:
     if not (obs["events_logged"] > 0 and obs["events_bounded"]):
         print("FAIL: event log empty or over capacity", file=sys.stderr)
         ok = False
+    # sharded expectations are hard requirements (§19.6): the mesh engine
+    # must make the SAME per-request decisions as a single-shard engine on
+    # identical traffic, serve hits whose entries live on >1 shard, keep
+    # the async scheduler fully served, and hold the hit-path p99 bound
+    if not shard.get("child_ok"):
+        print(f"FAIL: sharded child failed: {shard.get('stderr_tail')}",
+              file=sys.stderr)
+        ok = False
+    else:
+        if not (shard["parity_decisions_match"]
+                and shard["parity_answers_match"]):
+            print("FAIL: sharded engine diverged from single-shard engine",
+                  file=sys.stderr)
+            ok = False
+        if not shard["cross_shard_hit"]:
+            print("FAIL: no cross-shard cache hit (owners: "
+                  f"{shard['cross_shard_hit_owners']})", file=sys.stderr)
+            ok = False
+        if not shard["served_all"]:
+            print("FAIL: sharded async scheduler dropped requests",
+                  file=sys.stderr)
+            ok = False
+        p99_bound = 0.5 if args.smoke else 1.0
+        if shard.get("hit_p99_s", 0.0) >= p99_bound:
+            print(f"FAIL: sharded hit-path p99 {shard.get('hit_p99_s')}s "
+                  f"over the {p99_bound}s bound", file=sys.stderr)
+            ok = False
     _emit("serve/ok", ok)
     return 0 if ok else 1
 

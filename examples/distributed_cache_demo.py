@@ -64,6 +64,6 @@ runtime, (slot, score, hit, v, vl, src) = step(
     jnp.arange(len(faqs)), jnp.float32(1.0))
 for i, p in enumerate(paraphrases):
     print(f"[hit={bool(np.asarray(hit)[i])} score={float(np.asarray(score)[i]):.2f} "
-          f"shard={int(np.asarray(slot)[i]) // dc.local_config.capacity}] {p}")
+          f"shard={int(np.asarray(slot)[i]) // dc.local_capacity}] {p}")
 print(f"global stats: lookups={int(runtime.stats.lookups)} "
       f"hits={int(runtime.stats.hits)} inserts={int(runtime.stats.inserts)}")

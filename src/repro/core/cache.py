@@ -61,6 +61,71 @@ from repro.core.types import (CacheConfig, CacheStats, LookupResult,
 Array = jax.Array
 
 
+class _LocalComm:
+    """Identity communication seam — the single-shard specialization of the
+    cross-shard combine points in ``lookup``/``commit``/``insert``.
+
+    Every place the step's dataflow would need to cross shard boundaries on
+    a mesh is routed through one of these methods (DESIGN.md §19.2): top-k
+    candidate merge, best-row value fetch, LRU touch ownership, per-tenant
+    lookup-counter attribution, and round-robin insert routing. On a single
+    device they are all identities / direct gathers, so the local path
+    compiles to *exactly* the pre-seam program; ``repro.core.distributed``
+    substitutes a mesh-aware implementation (collectives inside
+    ``shard_map``) and reuses these same method bodies unchanged — ONE step
+    abstraction for any mesh.
+    """
+
+    #: shards participating in the step (trace-time Python constant)
+    num_shards: int = 1
+
+    def merge_topk(self, top_s: Array, top_i: Array) -> tuple[Array, Array]:
+        """Merge per-shard top-k candidate lists into the global top-k.
+        Local: the per-shard list *is* the global list."""
+        return top_s, top_i
+
+    def fetch_best(self, state, top0: Array) -> tuple[Array, Array, Array]:
+        """(values, value_lens, source_id) rows for each row's best slot id
+        (-1 = no visible slot; the row's payload is unused on that path).
+        Local: plain gathers. Mesh: owner-masked gather + psum."""
+        idx = jnp.maximum(top0, 0)
+        return state.values[idx], state.value_lens[idx], state.source_id[idx]
+
+    def touch(self, state, slot: Array, now: Array, hit: Array):
+        """LRU/LFU touch of each row's best slot where hit. Mesh: only the
+        owning shard touches (slot ids are global there)."""
+        return store.touch(state, slot, now, hit)
+
+    def primary(self, counts: Array) -> Array:
+        """Zero replicated per-batch counts on all but one shard, so a
+        cross-shard sum-reduce of sharded counters is exact. Local: id."""
+        return counts
+
+    def insert_take(self, mask: Array, n_inserts: Array) -> Array:
+        """Which masked-in rows THIS shard inserts. Mesh: round-robin by the
+        cumulative rank of masked-in rows (not the raw row index — a batch
+        with few actual inserts must not skew early shards), offset by the
+        global insert clock so balance holds across batches. Local: mask."""
+        return mask
+
+    def prepare_insert(self, state):
+        """Pre-insert state fixup. Mesh: derive this shard's local ring
+        pointer from the replicated global insert clock."""
+        return state
+
+    def finalize_insert(self, state, prev_n_inserts: Array, mask: Array):
+        """Post-insert state fixup. Mesh: re-replicate the clock leaves —
+        ``n_inserts`` advances by the *global* masked count (store.insert
+        added only this shard's take) and ``ptr`` parks at 0 (it is
+        re-derived from ``n_inserts`` on the next insert)."""
+        return state
+
+
+#: module-level default — threading it as a keyword keeps every public
+#: signature backward compatible while letting the mesh layer inject itself
+LOCAL_COMM = _LocalComm()
+
+
 @dataclasses.dataclass(frozen=True)
 class SemanticCache:
     """Stateless orchestrator; all state lives in one CacheRuntime pytree."""
@@ -183,10 +248,17 @@ class SemanticCache:
         tenant_id: Array | None = None,  # (B,) required when partitioned
         window: Array | None = None,     # (B, W, d) session turn windows (§16)
         window_len: Array | None = None,  # (B,) turns per row; 0 = stateless
+        comm: _LocalComm = LOCAL_COMM,   # cross-shard seam (§19.2)
     ) -> tuple[LookupResult, CacheRuntime]:
         """ANN search + threshold decision. ``update_counters=False`` gives a
         pure peek (no LRU touch, no stats, no policy-state commit) — the
         engine uses it to learn the miss set before the fused ``step``.
+
+        ``comm`` is the cross-shard combine seam (§19.2): on a mesh, the
+        per-shard index search results are merged into a replicated global
+        top-k (ids become global slot ids) and the best row's payload is
+        fetched from its owning shard; on a single device every seam op is
+        an identity, compiling to the exact pre-seam program.
 
         On a context-fused cache, ``window``/``window_len`` carry each
         row's session turns and the search key becomes the fused
@@ -214,6 +286,9 @@ class SemanticCache:
 
         top_s, top_i = self.index.search(
             runtime.index_state, queries, state.keys, alive, interval=interval)
+        # cross-shard merge: per-shard candidates -> replicated global top-k
+        # with global slot ids (single-shard: identity)
+        top_s, top_i = comm.merge_topk(top_s, top_i)
 
         best_idx = jnp.maximum(top_i[:, 0], 0)  # -1 guard when cache empty
         # every search path returns index -1 with score -inf for rows with
@@ -227,23 +302,24 @@ class SemanticCache:
         near = self._near_mask(hit, best_score, tenant_id,
                                runtime.policy_state)
 
+        values, value_lens, src = comm.fetch_best(state, top_i[:, 0])
         result = LookupResult(
             index=best_idx.astype(jnp.int32),
             score=best_score,
             hit=hit,
-            values=state.values[best_idx],
-            value_lens=state.value_lens[best_idx],
-            source_id=state.source_id[best_idx],
+            values=values,
+            value_lens=value_lens,
+            source_id=src,
             topk_index=top_i,
             topk_score=top_s,
             near=near,
         )
         if not update_counters:
             return result, runtime
-        state = store.touch(state, best_idx, now, hit)
+        state = comm.touch(state, best_idx, now, hit)
         stats = stats.record_lookups(b, jnp.sum(hit).astype(jnp.int32))
         tenancy = self._account_lookups(runtime.tenancy, tenant_id,
-                                        hit=hit, valid=None)
+                                        hit=hit, valid=None, comm=comm)
         return result, runtime.replace(state=state, stats=stats,
                                        policy_state=pstate, tenancy=tenancy)
 
@@ -268,14 +344,21 @@ class SemanticCache:
         }
 
     def _account_lookups(self, tenancy, tenant_id: Array | None, *,
-                         hit: Array, valid: Array | None):
+                         hit: Array, valid: Array | None,
+                         comm: _LocalComm = LOCAL_COMM):
         """Scatter-add one batch of lookups/hits into the per-tenant
-        counters. Padding rows (``valid=False``) contribute nothing."""
+        counters. Padding rows (``valid=False``) contribute nothing.
+
+        Lookup/hit decisions are *replicated* per-batch facts on a mesh, so
+        ``comm.primary`` attributes them on one shard only — a cross-shard
+        sum-reduce of the sharded counters then counts each batch once
+        (insert/eviction counters are genuinely per-shard and skip this)."""
         if tenancy is None or tenant_id is None:
             return tenancy
         ones = jnp.ones_like(tenant_id)
         if valid is not None:
             ones = jnp.where(valid, ones, 0)
+        ones = comm.primary(ones)
         hits = jnp.where(hit, ones, 0)
         return dataclasses.replace(
             tenancy,
@@ -294,33 +377,42 @@ class SemanticCache:
         source_id: Array | None = None,
         mask: Array | None = None,     # typically = ~hit from the lookup
         tenant_id: Array | None = None,  # (B,) required when partitioned
+        comm: _LocalComm = LOCAL_COMM,   # cross-shard seam (§19.2)
     ) -> CacheRuntime:
         tenant_id = self._require_tenants(tenant_id)
         if mask is None:
             mask = jnp.ones((queries.shape[0],), dtype=bool)
         now_f = jnp.asarray(now, dtype=jnp.float32)
+        # which masked-in rows THIS shard writes (round-robin on a mesh by
+        # masked rank + global insert clock; identity on a single device)
+        take = comm.insert_take(mask, runtime.state.n_inserts)
+        state0 = comm.prepare_insert(runtime.state)
         tenancy = runtime.tenancy
         slots = None
         if tenant_id is not None:
             # per-tenant ring inside each tenant's own region: a tenant can
             # only ever overwrite itself (structural capacity isolation)
             slots, new_ptr = store.select_slots_tenant(
-                self.partition, tenancy.ptr, tenant_id, mask)
-            alive_before = store.alive_mask(runtime.state, now_f)
-            evicted = jnp.where(mask & alive_before[slots],
+                self.partition, tenancy.ptr, tenant_id, take)
+            alive_before = store.alive_mask(state0, now_f)
+            evicted = jnp.where(take & alive_before[slots],
                                 jnp.ones_like(tenant_id), 0)
-            inserted = jnp.where(mask, jnp.ones_like(tenant_id), 0)
+            inserted = jnp.where(take, jnp.ones_like(tenant_id), 0)
             tenancy = dataclasses.replace(
                 tenancy,
                 ptr=new_ptr,
                 inserts=tenancy.inserts.at[tenant_id].add(inserted),
                 evictions=tenancy.evictions.at[tenant_id].add(evicted))
         state, slots = store.insert(
-            self.config, runtime.state, queries, values, value_lens, now,
-            source_id=source_id, mask=mask, slots=slots)
+            self.config, state0, queries, values, value_lens, now,
+            source_id=source_id, mask=take, slots=slots)
+        # re-replicate the clock leaves on a mesh (ptr parks, n_inserts
+        # advances by the GLOBAL masked count); identity on a single device
+        state = comm.finalize_insert(state, runtime.state.n_inserts, mask)
         # the index absorbs the new rows so they are findable before the
         # next periodic refit (DESIGN.md §8.2)
-        istate = self.index.absorb(runtime.index_state, slots, queries, mask)
+        istate = self.index.absorb(runtime.index_state, slots, queries, take)
+        # stats are replicated on a mesh: count the global mask, not take
         n = jnp.sum(mask).astype(jnp.int32)
         stats = dataclasses.replace(
             runtime.stats, inserts=runtime.stats.inserts + n)
@@ -366,7 +458,8 @@ class SemanticCache:
     # -- fused serve-side step (beyond-paper: single jit — DESIGN.md §7) -----
     def commit(self, runtime: CacheRuntime, peeked: LookupResult,
                now: Array | float, *, valid: Array | None = None,
-               tenant_id: Array | None = None
+               tenant_id: Array | None = None,
+               comm: _LocalComm = LOCAL_COMM
                ) -> tuple[LookupResult, CacheRuntime]:
         """Commit a previously peeked lookup (counters, LRU touch, policy
         state) *without* re-searching the slab. The hit mask is re-derived
@@ -394,11 +487,11 @@ class SemanticCache:
             near = near & valid
             n_lookups = jnp.sum(valid).astype(jnp.int32)
         result = dataclasses.replace(peeked, hit=hit, near=near)
-        state = store.touch(runtime.state, peeked.index, now, hit)
+        state = comm.touch(runtime.state, peeked.index, now, hit)
         stats = runtime.stats.record_lookups(
             n_lookups, jnp.sum(hit).astype(jnp.int32))
         tenancy = self._account_lookups(runtime.tenancy, tenant_id,
-                                        hit=hit, valid=valid)
+                                        hit=hit, valid=valid, comm=comm)
         return result, runtime.replace(state=state, stats=stats,
                                        policy_state=pstate, tenancy=tenancy)
 
@@ -416,6 +509,7 @@ class SemanticCache:
         tenant_id: Array | None = None,
         window: Array | None = None,
         window_len: Array | None = None,
+        comm: _LocalComm = LOCAL_COMM,
     ) -> tuple[LookupResult, CacheRuntime]:
         """Lookup, then insert exactly the missed queries' fresh responses.
 
@@ -446,7 +540,7 @@ class SemanticCache:
         queries = self._maybe_fuse(runtime, queries, window, window_len)
         if peeked is None and valid is None:
             result, runtime = self.lookup(runtime, queries, now,
-                                          tenant_id=tenant_id)
+                                          tenant_id=tenant_id, comm=comm)
         else:
             if peeked is None:
                 # no peek supplied but the batch is padded: search without
@@ -454,13 +548,14 @@ class SemanticCache:
                 # count as lookups/misses or touch LRU state
                 peeked, _ = self.lookup(runtime, queries, now,
                                         update_counters=False,
-                                        tenant_id=tenant_id)
+                                        tenant_id=tenant_id, comm=comm)
             result, runtime = self.commit(runtime, peeked, now, valid=valid,
-                                          tenant_id=tenant_id)
+                                          tenant_id=tenant_id, comm=comm)
         insert_mask = ~result.hit
         if valid is not None:
             insert_mask = insert_mask & valid
         runtime = self.insert(
             runtime, queries, miss_values, miss_value_lens, now,
-            source_id=source_id, mask=insert_mask, tenant_id=tenant_id)
+            source_id=source_id, mask=insert_mask, tenant_id=tenant_id,
+            comm=comm)
         return result, runtime

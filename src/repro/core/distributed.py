@@ -1,36 +1,63 @@
-"""Distributed semantic cache — paper §2.10 "Distributed Caching" / §5.4.
+"""DistributedCache — the ONE fused step compiled for any mesh (§2.10,
+DESIGN.md §19).
 
-Sharding scheme (DESIGN.md §5):
-  * the slab shards its *capacity* dimension over the ``data`` mesh axis —
-    each data-parallel group owns ``capacity/shards`` entries (a Redis
-    Cluster hash-slot analogue, but with deterministic round-robin routing);
-  * queries are replicated across cache shards for lookup (they are a few
-    hundred floats; the slab is the big operand);
-  * lookup = per-shard fused top-k, then a global argmax combine with
-    ``jax.lax.pmax`` over packed (score, global_slot) pairs — one small
-    all-reduce instead of gathering any slab data;
-  * the winning entry's value tokens are fetched with a masked ``psum``
-    (owner contributes, everyone else contributes zeros);
-  * inserts route round-robin by global insert clock — shard
-    ``(n_inserts + row) % num_shards`` takes the row, keeping shards
-    balanced without coordination;
-  * across pods the cache shards over ``data`` within each pod and the
-    ``pod`` axis joins the same combine, so a response cached in pod 0
-    serves a query landing on pod 1.
+The paper scales its Redis store by clustering (§2.10 "Distributed
+Caching"); the JAX analogue shards the slab's capacity axis across a device
+mesh and runs the *same* ``SemanticCache`` step body per shard under
+``shard_map``, with the cross-shard dataflow routed through the
+``repro.core.cache`` communication seam (``_LocalComm``):
 
-State is one ``CacheRuntime`` (DESIGN.md §2): the slab shards over the
-cache axes; stats, policy state and index state are replicated. The fused
-``make_lookup_insert`` step is ``runtime -> runtime`` like the local
-``SemanticCache.step``. Sharding a *stateful* index (IVF bucket tables hold
-shard-local slot ids) is future work — the step requires an index whose
-state pytree is leafless (e.g. ``ExactIndex``) and says so at build time.
+  merge_topk   — per-shard top-k candidates become (score, global_slot)
+                 pairs, all-gathered along the cache axes and re-top-k'd
+                 per row, so the merged list is replicated and its ids are
+                 *global* slot ids (``gather_topk`` / near-hit payloads
+                 work on the global view unchanged);
+  fetch_best   — each shard contributes its owned rows' payload, combined
+                 with one masked ``psum``;
+  touch        — only the owning shard touches LRU/LFU counters;
+  primary      — replicated per-batch lookup/hit counts are attributed on
+                 shard 0 only, so a sum-reduce over the sharded
+                 ``TenancyState`` counters is exact;
+  insert_take  — round-robin routing by the cumulative rank of *masked-in*
+                 rows (not the raw row index: a batch where only a few
+                 rows miss must not systematically skew early shards),
+                 offset by the replicated global insert clock;
+  prepare/finalize_insert — each shard's local ring pointer is derived
+                 from the replicated clock (shard ``s`` holds
+                 ``ceil((n_inserts - s) / S)`` of the first ``n_inserts``
+                 round-robin inserts), and after the write the clock
+                 leaves are re-replicated: ``n_inserts`` advances by the
+                 global masked count, ``ptr`` parks at 0.
 
-Everything is ``shard_map`` + ``jax.lax`` collectives — no host round trips.
+Slot-id convention (shard-major): global slot ``g`` lives on shard
+``g // local_capacity`` at local row ``g % local_capacity`` — which is
+exactly the global row index of the sharded slab arrays, so every
+global-view consumer (``gather_topk``, checkpointing, explain) indexes the
+placed arrays directly.
+
+Sharded state layout:
+  * ``CacheState`` matrices/vectors split on the capacity axis; ``ptr`` /
+    ``n_inserts`` replicated (the insert clock is global);
+  * ``CacheStats`` / policy state / fusion weights replicated;
+  * ``TenancyState`` leaves stacked per shard — global ``(S, T)``, local
+    ``(T,)`` — each shard runs its own per-tenant rings over its local
+    region slice; ``tenant_stats`` sum-reduces counters via
+    ``TenancyState.reduced()``;
+  * index state stacked on the leading axis — e.g. IVF centroids
+    ``(S*C, d)`` and buckets ``(S*C, cap)`` of *local* slot ids — so each
+    shard trains/probes its own IVF over its own rows. Any Index plugin
+    whose state follows the leading-axis convention shards transparently;
+    the old "leafless index only" restriction is gone.
+
+All static shard math (shard counts, strides) is pure-Python int — no
+device op is ever dispatched for a trace-time constant.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import functools
+import math
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -38,213 +65,423 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map_nocheck
 from repro.core import store
-from repro.core.cache import SemanticCache
+from repro.core.cache import SemanticCache, _LocalComm
 from repro.core.runtime import CacheRuntime
-from repro.core.types import CacheConfig, CacheState, CacheStats
+from repro.core.types import LookupResult
 
 Array = jax.Array
 
 
-def shard_axes(mesh: Mesh, cache_axes: Sequence[str]) -> int:
-    return int(jnp.prod(jnp.asarray([mesh.shape[a] for a in cache_axes])))
+def shard_axes(mesh: Mesh, cache_axes: tuple[str, ...]) -> int:
+    """Number of slab shards = product of the mesh axes the capacity axis is
+    split over. Mesh axis sizes are static host ints, so this is a plain
+    Python product — never a device op."""
+    return math.prod(int(mesh.shape[a]) for a in cache_axes)
 
 
-def cache_sharding(mesh: Mesh, cache_axes: Sequence[str]) -> dict:
-    """NamedShardings for a CacheState whose capacity dim shards over axes."""
-    row = NamedSharding(mesh, P(tuple(cache_axes)))
-    mat = NamedSharding(mesh, P(tuple(cache_axes), None))
-    rep = NamedSharding(mesh, P())
-    return dict(keys=mat, values=mat, value_lens=row, expiry=row, valid=row,
-                freq=row, last_used=row, inserted_at=row, source_id=row,
-                ptr=rep, n_inserts=rep)
+@dataclasses.dataclass(frozen=True)
+class _MeshComm(_LocalComm):
+    """Mesh specialization of the cache's cross-shard seam: the same
+    ``SemanticCache`` method bodies run per shard inside ``shard_map``;
+    these overrides splice collectives into the combine points."""
 
+    axes: tuple[str, ...] = ()
+    axis_sizes: tuple[int, ...] = ()
+    local_capacity: int = 0
 
-def place_cache_state(state: CacheState, mesh: Mesh, cache_axes: Sequence[str]
-                      ) -> CacheState:
-    sh = cache_sharding(mesh, cache_axes)
-    return CacheState(**{
-        f.name: jax.device_put(getattr(state, f.name), sh[f.name])
-        for f in dataclasses.fields(CacheState)})
+    @property
+    def num_shards(self) -> int:  # type: ignore[override]
+        return math.prod(self.axis_sizes)
+
+    def shard_id(self) -> Array:
+        """Row-major linear shard index over the cache axes (matches the
+        order ``PartitionSpec((*axes,))`` assigns capacity blocks). Only the
+        per-axis ``axis_index`` is traced; strides are Python ints."""
+        sid: Any = 0
+        for name, size in zip(self.axes, self.axis_sizes):
+            sid = sid * size + jax.lax.axis_index(name)
+        return sid
+
+    # -- lookup seams ------------------------------------------------------
+    def merge_topk(self, top_s: Array, top_i: Array) -> tuple[Array, Array]:
+        k = top_i.shape[1]
+        gid = jnp.where(top_i >= 0,
+                        self.shard_id() * self.local_capacity + top_i, -1)
+        s_all, i_all = top_s, gid
+        for name in self.axes:
+            s_all = jax.lax.all_gather(s_all, name, axis=1, tiled=True)
+            i_all = jax.lax.all_gather(i_all, name, axis=1, tiled=True)
+        merged_s, sel = jax.lax.top_k(s_all, k)          # (B, k) of (B, S*k)
+        merged_i = jnp.take_along_axis(i_all, sel, axis=1)
+        merged_i = jnp.where(merged_s > -jnp.inf, merged_i, -1)
+        return merged_s, merged_i.astype(jnp.int32)
+
+    def fetch_best(self, state, top0: Array) -> tuple[Array, Array, Array]:
+        mine = (top0 >= 0) & (top0 // self.local_capacity == self.shard_id())
+        lidx = jnp.where(mine, top0 % self.local_capacity, 0)
+        payload = jnp.concatenate(
+            [state.values[lidx].astype(jnp.int32),
+             state.value_lens[lidx].astype(jnp.int32)[:, None],
+             state.source_id[lidx].astype(jnp.int32)[:, None]], axis=1)
+        payload = jnp.where(mine[:, None], payload, 0)
+        payload = jax.lax.psum(payload, self.axes)       # one combine
+        return payload[:, :-2], payload[:, -2], payload[:, -1]
+
+    def touch(self, state, slot: Array, now: Array, hit: Array):
+        mine = slot // self.local_capacity == self.shard_id()
+        lidx = jnp.where(mine, slot % self.local_capacity, 0)
+        return store.touch(state, lidx, now, hit & mine)
+
+    def primary(self, counts: Array) -> Array:
+        return jnp.where(self.shard_id() == 0, counts,
+                         jnp.zeros_like(counts))
+
+    # -- insert seams ------------------------------------------------------
+    def insert_take(self, mask: Array, n_inserts: Array) -> Array:
+        mi = mask.astype(jnp.int32)
+        rank = jnp.cumsum(mi) - mi                   # rank among masked-in
+        owner = (n_inserts + rank) % self.num_shards
+        return mask & (owner == self.shard_id())
+
+    def prepare_insert(self, state):
+        # after N global round-robin inserts shard s has ceil((N - s) / S)
+        s = self.num_shards
+        fill = (state.n_inserts + (s - 1) - self.shard_id()) // s
+        state = jax.tree_util.tree_map(lambda x: x, state)
+        state.ptr = (fill % self.local_capacity).astype(jnp.int32)
+        return state
+
+    def finalize_insert(self, state, prev_n_inserts: Array, mask: Array):
+        state = jax.tree_util.tree_map(lambda x: x, state)
+        state.ptr = jnp.zeros((), dtype=jnp.int32)   # re-derived next insert
+        state.n_inserts = (prev_n_inserts
+                           + jnp.sum(mask).astype(jnp.int32))
+        return state
 
 
 @dataclasses.dataclass(frozen=True)
 class DistributedCache:
-    """Sharded wrapper around SemanticCache. ``cache_axes`` shard capacity."""
+    """Capacity-sharded ``SemanticCache`` with the same method surface.
+
+    ``cache`` is the *global* single-device description (full capacity,
+    global partition); the sharded step runs a derived shard-local cache
+    (capacity / regions divided by the shard count, same index / policy /
+    fusion plugins) under ``shard_map`` with a ``_MeshComm`` seam. Methods
+    that never cross shards — ``expire``, ``gather_topk``,
+    ``update_policy``, ``update_band``, ``_maybe_fuse`` — delegate to the
+    global view directly (global slot ids ARE global row indices).
+
+    Engine compatibility: ``config`` / ``partition`` / ``policy`` /
+    ``index`` / ``fusion`` mirror the inner cache, and ``lookup`` /
+    ``step`` / ``insert`` / ``refit`` take the same signatures, so
+    ``CachedEngine`` and the async scheduler drive a mesh with zero
+    call-site changes (DESIGN.md §19.4).
+    """
 
     cache: SemanticCache
     mesh: Mesh
     cache_axes: tuple[str, ...] = ("data",)
 
+    def __post_init__(self):
+        object.__setattr__(self, "cache_axes", tuple(self.cache_axes))
+        for a in self.cache_axes:
+            if a not in self.mesh.shape:
+                raise ValueError(f"mesh has no axis {a!r}: "
+                                 f"{dict(self.mesh.shape)}")
+        s = self.num_shards
+        cfg = self.cache.config
+        if cfg.capacity % s != 0:
+            raise ValueError(f"capacity {cfg.capacity} not divisible by "
+                             f"{s} shards")
+        part = self.cache.partition
+        local_part = None
+        if part is not None:
+            if any(sz % s for sz in part.sizes):
+                raise ValueError(
+                    f"per-tenant region sizes {part.sizes} must be "
+                    f"multiples of the shard count {s} (size regions in "
+                    f"shard-count multiples)")
+            local_part = dataclasses.replace(
+                part, starts=tuple(x // s for x in part.starts),
+                sizes=tuple(x // s for x in part.sizes),
+                capacity=cfg.capacity // s)
+        local = SemanticCache(
+            config=dataclasses.replace(cfg, capacity=cfg.capacity // s),
+            index=self.cache.index, policy=self.cache.policy,
+            partition=local_part, fusion=self.cache.fusion)
+        comm = _MeshComm(
+            axes=self.cache_axes,
+            axis_sizes=tuple(int(self.mesh.shape[a])
+                             for a in self.cache_axes),
+            local_capacity=cfg.capacity // s)
+        object.__setattr__(self, "local", local)
+        object.__setattr__(self, "comm", comm)
+
+    # -- engine-facing mirrors --------------------------------------------
+    @property
+    def config(self):
+        return self.cache.config
+
+    @property
+    def partition(self):
+        return self.cache.partition
+
+    @property
+    def policy(self):
+        return self.cache.policy
+
+    @property
+    def index(self):
+        return self.cache.index
+
+    @property
+    def fusion(self):
+        return self.cache.fusion
+
     @property
     def num_shards(self) -> int:
-        n = 1
-        for a in self.cache_axes:
-            n *= self.mesh.shape[a]
-        return n
+        return shard_axes(self.mesh, self.cache_axes)
 
     @property
-    def local_config(self) -> CacheConfig:
-        cfg = self.cache.config
-        return dataclasses.replace(cfg, capacity=cfg.capacity // self.num_shards)
+    def local_capacity(self) -> int:
+        return self.cache.config.capacity // self.num_shards
 
-    def init(self) -> CacheRuntime:
-        """Full runtime: slab sharded over ``cache_axes``, rest replicated."""
-        runtime = self.cache.init()
-        rep = NamedSharding(self.mesh, P())
-        return runtime.replace(
-            state=place_cache_state(runtime.state, self.mesh, self.cache_axes),
-            stats=jax.device_put(runtime.stats, rep),
-            policy_state=jax.device_put(runtime.policy_state, rep),
+    def shard_layout(self) -> dict:
+        """JSON-able record of the sharded placement — written into
+        checkpoint manifests and compared (or resharded against) on load."""
+        return {
+            "num_shards": self.num_shards,
+            "cache_axes": list(self.cache_axes),
+            "mesh_axes": [str(a) for a in self.mesh.axis_names],
+            "mesh_shape": [int(self.mesh.shape[a])
+                           for a in self.mesh.axis_names],
+            "local_capacity": self.local_capacity,
+        }
+
+    # -- spec / placement helpers -----------------------------------------
+    @property
+    def _ax0(self):
+        """The dim-0 PartitionSpec entry for capacity-sharded leaves."""
+        return (self.cache_axes[0] if len(self.cache_axes) == 1
+                else self.cache_axes)
+
+    def _spec_sharded(self, x) -> P:
+        """Leading axis split over the cache axes; scalars replicated."""
+        if getattr(x, "ndim", 0) == 0:
+            return P()
+        return P(self._ax0, *([None] * (x.ndim - 1)))
+
+    def _rt_specs(self, runtime: CacheRuntime) -> CacheRuntime:
+        """Runtime-shaped pytree of PartitionSpecs: slab + index + tenancy
+        leaves sharded on dim 0, stats / policy / fusion replicated."""
+        tmap = jax.tree_util.tree_map
+        rep = lambda x: P()  # noqa: E731
+        return CacheRuntime(
+            state=tmap(self._spec_sharded, runtime.state),
+            stats=tmap(rep, runtime.stats),
+            policy_state=tmap(rep, runtime.policy_state),
+            index_state=tmap(self._spec_sharded, runtime.index_state),
+            tenancy=tmap(self._spec_sharded, runtime.tenancy),
+            fusion=tmap(rep, runtime.fusion),
         )
 
-    # ------------------------------------------------------------------ #
-    def _shard_id(self):
-        shard_id = jnp.zeros((), jnp.int32)
-        mult = 1
-        for a in reversed(self.cache_axes):
-            shard_id = shard_id + jax.lax.axis_index(a) * mult
-            mult *= self.mesh.shape[a]  # static; axis_size needs newer jax
-        return shard_id
+    def runtime_shardings(self, runtime: CacheRuntime) -> CacheRuntime:
+        """NamedShardings mirroring ``_rt_specs`` (for device_put / jit)."""
+        shard = lambda x: NamedSharding(  # noqa: E731
+            self.mesh, self._spec_sharded(x))
+        rep = lambda x: NamedSharding(self.mesh, P())  # noqa: E731
+        tmap = jax.tree_util.tree_map
+        return CacheRuntime(
+            state=tmap(shard, runtime.state),
+            stats=tmap(rep, runtime.stats),
+            policy_state=tmap(rep, runtime.policy_state),
+            index_state=tmap(shard, runtime.index_state),
+            tenancy=tmap(shard, runtime.tenancy),
+            fusion=tmap(rep, runtime.fusion),
+        )
 
-    def _local_lookup(self, state: CacheState, stats: CacheStats,
-                      pstate: Array, queries: Array, now: Array):
-        """Runs per-shard inside shard_map. Returns packed global winners."""
-        axes = self.cache_axes
-        shard_id = self._shard_id()
-        local_cap = state.keys.shape[0]
-        b = queries.shape[0]
+    def place(self, runtime: CacheRuntime) -> CacheRuntime:
+        """device_put every leaf onto its mesh sharding."""
+        return jax.tree_util.tree_map(
+            jax.device_put, runtime, self.runtime_shardings(runtime))
 
-        alive = store.alive_mask(state, now)
-        istate = self.cache.index.init(self.local_config)  # leafless (checked)
-        top_s, top_i = self.cache.index.search(
-            istate, queries, state.keys, alive)
-        best_s, best_i = top_s[:, 0], jnp.maximum(top_i[:, 0], 0)
-        best_s = jnp.where(top_i[:, 0] >= 0, best_s, -jnp.inf)
-        global_slot = shard_id * local_cap + best_i
+    def init(self) -> CacheRuntime:
+        """Fresh sharded runtime. Slab/stats/policy/fusion leaves come from
+        the global init; per-shard leaf groups tile the *local* init along
+        a new leading axis (index init is deterministic, so S tiled copies
+        == S independent shard inits)."""
+        g = self.cache.init()
+        loc = self.local.init()
+        s = self.num_shards
+        tile = lambda x: (x if getattr(x, "ndim", 0) == 0  # noqa: E731
+                          else jnp.concatenate([x] * s, axis=0))
+        index_state = jax.tree_util.tree_map(tile, loc.index_state)
+        tenancy = None
+        if loc.tenancy is not None:
+            tenancy = jax.tree_util.tree_map(
+                lambda x: jnp.tile(x[None], (s,) + (1,) * x.ndim),
+                loc.tenancy)
+        return self.place(CacheRuntime(
+            state=g.state, stats=g.stats, policy_state=g.policy_state,
+            index_state=index_state, tenancy=tenancy, fusion=g.fusion))
 
-        # pack (score, slot): lexicographic max == max score, tie -> max slot
-        packed = jnp.stack([best_s, global_slot.astype(jnp.float32)], axis=-1)
+    # -- global <-> shard-local views -------------------------------------
+    def _to_local(self, rt: CacheRuntime) -> CacheRuntime:
+        """Inside the shard body tenancy leaves arrive as (1, T) slices of
+        the stacked (S, T) global; the local core wants (T,)."""
+        if rt.tenancy is None:
+            return rt
+        return rt.replace(tenancy=jax.tree_util.tree_map(
+            lambda x: x[0], rt.tenancy))
 
-        def combine(p):
-            for a in axes:
-                # pmax on score; to carry the winning slot, use the classic
-                # two-field trick: compare scores, select slot of the winner.
-                s = jax.lax.pmax(p[..., 0], a)
-                winner = p[..., 0] >= s - 0.0  # == max on the winning shard
-                slot = jnp.where(winner, p[..., 1], -1.0)
-                slot = jax.lax.pmax(slot, a)
-                p = jnp.stack([s, slot], axis=-1)
-            return p
+    def _from_local(self, rt: CacheRuntime) -> CacheRuntime:
+        if rt.tenancy is None:
+            return rt
+        return rt.replace(tenancy=jax.tree_util.tree_map(
+            lambda x: x[None], rt.tenancy))
 
-        packed = combine(packed)
-        g_score, g_slot = packed[..., 0], packed[..., 1].astype(jnp.int32)
+    def _shard_call(self, body, operands: dict, operand_specs: dict,
+                    out_specs):
+        """Run ``body(operands)`` under shard_map. Optional call arguments
+        are simply absent from the dict, so one wrapper serves every
+        combination without None-leaf spec gymnastics; replication checking
+        is off (the seam maintains replication invariants manually)."""
+        return shard_map_nocheck(body, self.mesh, (operand_specs,),
+                                 out_specs)(operands)
 
-        # fetch winning values: owner shard contributes, psum broadcasts
-        owner = g_slot // local_cap
-        local_idx = jnp.where(owner == shard_id, g_slot % local_cap, 0)
-        mine = (owner == shard_id) & (g_score > -jnp.inf)
-        vals = jnp.where(mine[:, None], state.values[local_idx], 0)
-        vlen = jnp.where(mine, state.value_lens[local_idx], 0)
-        src = jnp.where(mine, state.source_id[local_idx], 0)
-        # fused fetch: one psum of the concatenated (values | len | src)
-        # payload instead of three collectives (§Perf iteration 3.2)
-        packed = jnp.concatenate(
-            [vals, vlen[:, None], src[:, None]], axis=1)
-        for a in axes:
-            packed = jax.lax.psum(packed, a)
-        vals = packed[:, :-2]
-        vlen = packed[:, -2]
-        src = packed[:, -1]
+    # -- sharded methods (same signatures as SemanticCache) ----------------
+    def lookup(self, runtime: CacheRuntime, queries: Array,
+               now: Array | float, *, update_counters: bool = True,
+               tenant_id: Array | None = None, window: Array | None = None,
+               window_len: Array | None = None
+               ) -> tuple[LookupResult, CacheRuntime]:
+        rt_spec = self._rt_specs(runtime)
+        ops = {"runtime": runtime, "queries": queries,
+               "now": jnp.asarray(now, dtype=jnp.float32)}
+        specs = {"runtime": rt_spec, "queries": P(), "now": P()}
+        for name, v in (("tenant_id", tenant_id), ("window", window),
+                        ("window_len", window_len)):
+            if v is not None:
+                ops[name], specs[name] = v, P()
 
-        hit, pstate = self.cache.policy.decide(g_score, pstate)
-        hit = hit & (g_score > -jnp.inf)
+        def body(o):
+            rt = self._to_local(o["runtime"])
+            res, rt = self.local.lookup(
+                rt, o["queries"], o["now"],
+                update_counters=update_counters,
+                tenant_id=o.get("tenant_id"), window=o.get("window"),
+                window_len=o.get("window_len"), comm=self.comm)
+            return res, self._from_local(rt)
 
-        # touch local LRU/LFU where this shard owns the hit
-        state = store.touch(state, local_idx, now, hit & mine)
-        stats = stats.record_lookups(b, jnp.sum(hit).astype(jnp.int32))
-        return state, stats, pstate, (g_slot, g_score, hit, vals, vlen, src)
+        return self._shard_call(body, ops, specs, (P(), rt_spec))
 
-    def _local_insert(self, state: CacheState, stats: CacheStats, queries,
-                      values, value_lens, source_id, mask, now):
-        shard_id = self._shard_id()
-        nshards = self.num_shards
-        local_cap = state.keys.shape[0]
-        # round-robin routing by (global insert clock + rank among *written*
-        # rows) — masked-out rows must not consume round-robin positions
-        mi = mask.astype(jnp.int32)
-        rank = jnp.cumsum(mi) - mi
-        owner = (state.n_inserts + rank) % nshards
-        take = mask & (owner == shard_id)
-        # Per-shard ring position is a pure function of the *replicated*
-        # global clock: shard s has received ceil((n_inserts - s) / S)
-        # rows so far. Deriving it here (instead of trusting state.ptr,
-        # which would advance by a shard-dependent sum(take) and then be
-        # forced through a replicated out-spec) keeps every shard's ring
-        # consistent for any miss pattern.
-        state = jax.tree_util.tree_map(lambda x: x, state)  # shallow copy
-        state.ptr = ((state.n_inserts + nshards - 1 - shard_id)
-                     // nshards) % local_cap
-        new_state, _slots = store.insert(
-            self.local_config, state, queries, values,
-            value_lens, now, source_id=source_id, mask=take)
-        # keep the *global* insert clock in sync on every shard; park ptr on
-        # a replicated constant (it is recomputed from n_inserts on entry)
-        n_global = state.n_inserts + jnp.sum(mask).astype(jnp.int32)
-        new_state.n_inserts = n_global
-        new_state.ptr = jnp.zeros_like(new_state.ptr)
-        stats = dataclasses.replace(
-            stats, inserts=stats.inserts + jnp.sum(mask).astype(jnp.int32))
-        return new_state, stats
+    def step(self, runtime: CacheRuntime, queries: Array,
+             miss_values: Array, miss_value_lens: Array,
+             now: Array | float, *, source_id: Array | None = None,
+             peeked: LookupResult | None = None,
+             valid: Array | None = None, tenant_id: Array | None = None,
+             window: Array | None = None, window_len: Array | None = None
+             ) -> tuple[LookupResult, CacheRuntime]:
+        """The ONE fused step, compiled for this mesh: per-shard lookup →
+        merged decide → per-tenant overrides → routed masked insert →
+        stats/tenancy scatter, all inside one shard_map (DESIGN.md §19.3)."""
+        rt_spec = self._rt_specs(runtime)
+        ops = {"runtime": runtime, "queries": queries,
+               "miss_values": miss_values,
+               "miss_value_lens": miss_value_lens,
+               "now": jnp.asarray(now, dtype=jnp.float32)}
+        specs = {k: P() for k in ops}
+        specs["runtime"] = rt_spec
+        for name, v in (("source_id", source_id), ("peeked", peeked),
+                        ("valid", valid), ("tenant_id", tenant_id),
+                        ("window", window), ("window_len", window_len)):
+            if v is not None:
+                ops[name], specs[name] = v, P()
 
-    # ------------------------------------------------------------------ #
+        def body(o):
+            rt = self._to_local(o["runtime"])
+            res, rt = self.local.step(
+                rt, o["queries"], o["miss_values"], o["miss_value_lens"],
+                o["now"], source_id=o.get("source_id"),
+                peeked=o.get("peeked"), valid=o.get("valid"),
+                tenant_id=o.get("tenant_id"), window=o.get("window"),
+                window_len=o.get("window_len"), comm=self.comm)
+            return res, self._from_local(rt)
+
+        return self._shard_call(body, ops, specs, (P(), rt_spec))
+
+    def insert(self, runtime: CacheRuntime, queries: Array, values: Array,
+               value_lens: Array, now: Array | float, *,
+               source_id: Array | None = None, mask: Array | None = None,
+               tenant_id: Array | None = None) -> CacheRuntime:
+        rt_spec = self._rt_specs(runtime)
+        ops = {"runtime": runtime, "queries": queries, "values": values,
+               "value_lens": value_lens,
+               "now": jnp.asarray(now, dtype=jnp.float32)}
+        specs = {k: P() for k in ops}
+        specs["runtime"] = rt_spec
+        for name, v in (("source_id", source_id), ("mask", mask),
+                        ("tenant_id", tenant_id)):
+            if v is not None:
+                ops[name], specs[name] = v, P()
+
+        def body(o):
+            rt = self._to_local(o["runtime"])
+            rt = self.local.insert(
+                rt, o["queries"], o["values"], o["value_lens"], o["now"],
+                source_id=o.get("source_id"), mask=o.get("mask"),
+                tenant_id=o.get("tenant_id"), comm=self.comm)
+            return self._from_local(rt)
+
+        return self._shard_call(body, ops, specs, rt_spec)
+
+    def refit(self, runtime: CacheRuntime, now: Array | float, rng: Array
+              ) -> CacheRuntime:
+        """Per-shard index rebuild over each shard's own rows; the rng is
+        folded with the shard id so shards train independent structures."""
+        rt_spec = self._rt_specs(runtime)
+        ops = {"runtime": runtime,
+               "now": jnp.asarray(now, dtype=jnp.float32), "rng": rng}
+        specs = {"runtime": rt_spec, "now": P(), "rng": P()}
+
+        def body(o):
+            rt = self._to_local(o["runtime"])
+            rng_s = jax.random.fold_in(o["rng"], self.comm.shard_id())
+            return self._from_local(self.local.refit(rt, o["now"], rng_s))
+
+        return self._shard_call(body, ops, specs, rt_spec)
+
+    # -- shard-oblivious methods: delegate to the global view --------------
+    def expire(self, runtime: CacheRuntime, now: Array | float):
+        return self.cache.expire(runtime, now)
+
+    def gather_topk(self, runtime: CacheRuntime, result: LookupResult):
+        # merged topk_index entries are global slot ids == global row
+        # indices (shard-major), so the global gather is already correct
+        return self.cache.gather_topk(runtime, result)
+
+    def update_policy(self, runtime: CacheRuntime, **kw):
+        return self.cache.update_policy(runtime, **kw)
+
+    def update_band(self, runtime: CacheRuntime, **kw):
+        return self.cache.update_band(runtime, **kw)
+
+    def _maybe_fuse(self, runtime: CacheRuntime, queries: Array,
+                    window, window_len):
+        return self.cache._maybe_fuse(runtime, queries, window, window_len)
+
+    # -- PR-1 compat shim ---------------------------------------------------
     def make_lookup_insert(self):
-        """Build the jit-able fused sharded step (runtime donated).
-
-        Signature mirrors ``SemanticCache.step``::
-
-            runtime, (slot, score, hit, values, value_lens, source_id) =
-                step(runtime, queries, miss_values, miss_value_lens,
-                     source_id, now)
-        """
-        if jax.tree_util.tree_leaves(self.cache.index.init(self.local_config)):
-            raise NotImplementedError(
-                "DistributedCache requires an index with leafless state "
-                "(e.g. ExactIndex): sharding stateful index pytrees (IVF "
-                "bucket tables hold shard-local slot ids) is future work")
-        axes = self.cache_axes
-        mesh = self.mesh
-        row = P(tuple(axes))
-        mat = P(tuple(axes), None)
-        state_spec = CacheState(
-            keys=mat, values=mat, value_lens=row, expiry=row, valid=row,
-            freq=row, last_used=row, inserted_at=row, source_id=row,
-            ptr=P(), n_inserts=P())
-        stats_spec = CacheStats(lookups=P(), hits=P(), misses=P(),
-                                expired_evictions=P(), inserts=P())
-        rep = P()
-
-        def local_step(state, stats, pstate, queries, miss_values,
-                       miss_value_lens, source_id, now):
-            state, stats, pstate, out = self._local_lookup(
-                state, stats, pstate, queries, now)
-            (slot, score, hit, vals, vlen, src) = out
-            state, stats = self._local_insert(
-                state, stats, queries, miss_values, miss_value_lens,
-                source_id, ~hit, now)
-            return state, stats, pstate, (slot, score, hit, vals, vlen, src)
-
-        sharded = shard_map_nocheck(
-            local_step, mesh,
-            in_specs=(state_spec, stats_spec, rep, rep, rep, rep, rep, rep),
-            out_specs=(state_spec, stats_spec, rep,
-                       (rep, rep, rep, rep, rep, rep)))
-
-        def step(runtime: CacheRuntime, queries, miss_values, miss_value_lens,
-                 source_id, now):
-            state, stats, pstate, out = sharded(
-                runtime.state, runtime.stats, runtime.policy_state, queries,
-                miss_values, miss_value_lens, source_id, now)
-            return runtime.replace(state=state, stats=stats,
-                                   policy_state=pstate), out
-
-        return jax.jit(step, donate_argnums=(0,))
+        """Legacy fused lookup+insert entry point, now a thin shim over the
+        unified ``step`` — it compiles for ANY index plugin (the old
+        ExactIndex-only restriction is gone with the fork it guarded)."""
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def fused(runtime, queries, miss_values, miss_value_lens,
+                  source_id, now):
+            result, runtime = self.step(
+                runtime, queries, miss_values, miss_value_lens, now,
+                source_id=source_id)
+            return runtime, (result.index, result.score, result.hit,
+                             result.values, result.value_lens,
+                             result.source_id)
+        return fused

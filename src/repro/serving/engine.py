@@ -148,7 +148,9 @@ class CachedEngine:
                  synthesizer=None,
                  tracer: Tracer | None = None,
                  events=None,
-                 explain_responses: bool = False):
+                 explain_responses: bool = False,
+                 mesh=None,
+                 cache_axes: tuple = ("data",)):
         # ``policy``: optional threshold policy (e.g. AdaptiveThreshold —
         # paper §2.10 future work). With an adaptive policy the engine feeds
         # judged hit outcomes back after every batch, closing the paper's
@@ -181,25 +183,49 @@ class CachedEngine:
         # ``explain_responses``: force a ``why`` record onto EVERY
         # response (demos/debugging); normally per-request opt-in via
         # Request.explain.
+        # ``mesh``: optional jax.sharding.Mesh — wraps the cache in a
+        # DistributedCache (DESIGN.md §19): the slab is sharded over
+        # ``cache_axes`` and every jitted call below goes through the
+        # shard_map'd step. None = single-device (unchanged).
         if synthesizer is not None and policy is None:
             from repro.generative.policy import BandPolicy
             policy = BandPolicy(tau_hi=cache_config.threshold)
         self.synthesizer = synthesizer
         self.registry = registry
+        self.mesh = mesh
+        num_shards = 1
+        if mesh is not None:
+            from repro.core.distributed import shard_axes
+            num_shards = shard_axes(mesh, tuple(cache_axes))
+        self._num_shards = num_shards
         partition = None
         if registry is not None:
             partition = registry.partition(cache_config.capacity)
-            if min(partition.sizes) < batch_size:
+            if min(partition.sizes) // num_shards < batch_size:
                 # the per-tenant ring guarantees distinct slots only while a
-                # batch's rows per tenant fit inside the tenant's region
+                # batch's rows per tenant fit inside the tenant's region —
+                # on a mesh, inside the *per-shard* slice of the region
+                # (parked rows of a masked insert may wrap otherwise)
                 raise ValueError(
-                    f"smallest tenant region ({min(partition.sizes)} slots, "
-                    f"tenant {partition.names[partition.sizes.index(min(partition.sizes))]!r}) "
+                    f"smallest tenant region ({min(partition.sizes)} slots "
+                    f"/ {num_shards} shard(s), tenant "
+                    f"{partition.names[partition.sizes.index(min(partition.sizes))]!r}) "
                     f"is below the batch size ({batch_size}); grow the slab "
                     "or the tenant's share/quota")
             self._tenant_index = {n: i for i, n in enumerate(partition.names)}
-        self.cache = SemanticCache(cache_config, policy=policy, index=index,
+        elif cache_config.capacity // num_shards < batch_size:
+            raise ValueError(
+                f"per-shard capacity ({cache_config.capacity} slots / "
+                f"{num_shards} shard(s)) is below the batch size "
+                f"({batch_size}); grow the slab or shrink the mesh")
+        base_cache = SemanticCache(cache_config, policy=policy, index=index,
                                    partition=partition, fusion=fusion)
+        if mesh is not None:
+            from repro.core.distributed import DistributedCache
+            self.cache = DistributedCache(base_cache, mesh,
+                                          cache_axes=tuple(cache_axes))
+        else:
+            self.cache = base_cache
         self.fusion = fusion
         self.sessions = None
         if fusion is not None:
@@ -283,6 +309,9 @@ class CachedEngine:
         t = self.runtime.tenancy
         if t is None:
             return {}
+        # on a mesh the counters are stacked per-shard (S, T); the reduce
+        # is exact because each event is attributed on exactly one shard
+        t = t.reduced()
         part = self.cache.partition
         return {
             name: {
@@ -316,12 +345,19 @@ class CachedEngine:
                                   "partition": None if part is None
                                   else part.manifest(),
                                   "fusion": None if self.fusion is None
-                                  else type(self.fusion).__name__})
+                                  else type(self.fusion).__name__,
+                                  # mesh shape + shard layout: a restore
+                                  # onto a different layout must go through
+                                  # reshard_runtime, not a strict load
+                                  "shard_layout": None if self.mesh is None
+                                  else self.cache.shard_layout()})
 
-    def load_cache(self, path: str) -> None:
+    def load_cache(self, path: str, *, reshard: bool = True) -> None:
         import json
         import os
-        from repro.training.checkpoint import load_checkpoint
+        from repro.training.checkpoint import (load_checkpoint,
+                                               load_checkpoint_flat,
+                                               reshard_runtime)
         # Fusion-aware restore (§16.5). The fusion leaf group follows the
         # tenancy None-keeps-the-treedef contract, so the npz either has
         # "runtime/fusion/..." keys (session-era snapshot) or none at all.
@@ -329,7 +365,6 @@ class CachedEngine:
         saved_keys = np.load(data_path).files
         has_fusion_keys = any(k.startswith("runtime/fusion/")
                               for k in saved_keys)
-        template_runtime = self.runtime
         if has_fusion_keys and self.fusion is None:
             # silently dropping learned fusion weights would change every
             # fused key this snapshot's slab entries were stored under
@@ -337,28 +372,14 @@ class CachedEngine:
                 f"snapshot {path!r} carries context-fusion weights "
                 "(runtime/fusion/*) but this engine has no fusion "
                 "strategy; construct the engine with fusion=... to load it")
-        if not has_fusion_keys and self.fusion is not None:
-            # pre-session snapshot into a session-enabled engine is fine:
-            # restore the shared leaves, keep this engine's fresh fusion
-            # state (slab keys in that snapshot were never fused, and raw
-            # single-turn lookups still match them bit-identically)
-            template_runtime = self.runtime.replace(fusion=None)
-        template = {"runtime": template_runtime}
-        restored = load_checkpoint(path, template)
-        restored_runtime = restored["runtime"]
-        if restored_runtime.fusion is None and self.runtime.fusion is not None:
-            restored_runtime = restored_runtime.replace(
-                fusion=self.runtime.fusion)
-        self.runtime = restored_runtime
-        # restore the TTL clock: slab expiries are *absolute* deadlines, so
-        # resuming at now=0 would extend every entry's remaining lifetime.
-        # save_checkpoint names the manifest after the path it was *given*
-        # (np.savez appends .npz to the data file only), so mirror that.
+        # Shard-layout gate (§19.5): the manifest records the mesh shape
+        # the snapshot was taken under. Same layout -> strict load; a
+        # different shard count -> reshard-on-load (or refuse).
+        meta = {}
         manifest = path + ".manifest.json"
         if os.path.exists(manifest):
             with open(manifest) as f:
                 meta = json.load(f).get("metadata", {})
-            self._now = float(meta.get("now", self._now))
             # partition maps are static config: a snapshot taken under one
             # tenant layout silently mis-regions under another, so verify
             saved = meta.get("partition")
@@ -369,8 +390,49 @@ class CachedEngine:
                     f"snapshot partition map {saved} does not match this "
                     f"engine's {current}; rebuild the engine with the "
                     "registry the snapshot was taken under")
-        # index state was checkpointed with the slab — no forced rebuild
-        self._needs_refit = False
+        saved_layout = meta.get("shard_layout")
+        saved_shards = 1 if saved_layout is None \
+            else int(saved_layout["num_shards"])
+        if saved_shards != self._num_shards:
+            if not reshard:
+                raise ValueError(
+                    f"snapshot {path!r} was taken on {saved_shards} shard(s) "
+                    f"but this engine runs {self._num_shards}; pass "
+                    "reshard=True to re-place the entries on load")
+            # Cross-layout restore: re-place live entries into this
+            # layout's rings on the host, keep a fresh index and force a
+            # refit (the saved buckets hold old-placement local slot ids).
+            fresh = self.cache.init()
+            restored_runtime = reshard_runtime(
+                load_checkpoint_flat(path), fresh,
+                old_shards=saved_shards, new_shards=self._num_shards,
+                partition=self.cache.partition)
+            needs_refit = True
+        else:
+            template_runtime = self.runtime
+            if not has_fusion_keys and self.fusion is not None:
+                # pre-session snapshot into a session-enabled engine is
+                # fine: restore the shared leaves, keep this engine's fresh
+                # fusion state (slab keys in that snapshot were never
+                # fused, and raw single-turn lookups still match them
+                # bit-identically)
+                template_runtime = self.runtime.replace(fusion=None)
+            restored = load_checkpoint(path, {"runtime": template_runtime})
+            restored_runtime = restored["runtime"]
+            # index state was checkpointed with the slab — no forced rebuild
+            needs_refit = False
+        if restored_runtime.fusion is None and self.runtime.fusion is not None:
+            restored_runtime = restored_runtime.replace(
+                fusion=self.runtime.fusion)
+        if self.mesh is not None:
+            restored_runtime = self.cache.place(restored_runtime)
+        self.runtime = restored_runtime
+        # restore the TTL clock: slab expiries are *absolute* deadlines, so
+        # resuming at now=0 would extend every entry's remaining lifetime.
+        # save_checkpoint names the manifest after the path it was *given*
+        # (np.savez appends .npz to the data file only), so mirror that.
+        self._now = float(meta.get("now", self._now))
+        self._needs_refit = needs_refit
         self._inserts_since_rebuild = 0
 
     def _maybe_refit(self) -> None:
@@ -462,13 +524,15 @@ class CachedEngine:
         (default: the registry's first tenant) — warm each tenant
         separately with its own corpus."""
         cfg = self.cache.config
-        bs = 256
+        # distinct-slot guarantee: one chunk must fit inside the (per-shard
+        # slice of the) target ring, else parked/written rows can alias
+        bs = min(256, cfg.capacity // self._num_shards)
         tid_value = None
         if self.registry is not None:
             name = tenant if tenant is not None else self.registry.names[0]
             tid_value = self.registry.index(name)
-            # distinct-slot guarantee: one chunk must fit inside the region
-            bs = min(bs, self.cache.partition.sizes[tid_value])
+            bs = min(bs, self.cache.partition.sizes[tid_value]
+                     // self._num_shards)
         elif tenant is not None:
             raise ValueError("warm(tenant=...) needs a tenant registry")
         for i in range(0, len(pairs), bs):

@@ -148,4 +148,21 @@ class TenancyState:
 
     @property
     def num_tenants(self) -> int:
-        return self.ptr.shape[0]
+        return self.ptr.shape[-1]
+
+    def reduced(self) -> "TenancyState":
+        """Collapse per-shard stacking (DESIGN.md §19.4) to the (T,)
+        single-view counters. The sum is *exact*: lookups/hits are
+        attributed on one designated shard only and inserts/evictions on
+        the owning shard, so each event is counted once globally. The
+        summed ``ptr`` is total ring fill across shards, NOT a usable ring
+        offset — each shard keeps its own. A 1-D (unsharded) state is
+        returned unchanged."""
+        if self.ptr.ndim == 1:
+            return self
+
+        def s(x):
+            return jnp.sum(x, axis=tuple(range(x.ndim - 1)))
+        return TenancyState(ptr=s(self.ptr), lookups=s(self.lookups),
+                            hits=s(self.hits), inserts=s(self.inserts),
+                            evictions=s(self.evictions))

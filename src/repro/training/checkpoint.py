@@ -57,3 +57,138 @@ def load_checkpoint(path: str, template: Any) -> Any:
                              f"{arr.shape} vs {leaf.shape}")
         new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def load_checkpoint_flat(path: str) -> dict[str, np.ndarray]:
+    """Raw key -> array view of a checkpoint, no template required — the
+    entry point for cross-layout restores where the saved tree's structure
+    (per-shard tenancy / index leaves) differs from the running one."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    return {k: data[k] for k in data.files}
+
+
+def reshard_runtime(flat: dict[str, np.ndarray], template: Any, *,
+                    old_shards: int, new_shards: int, partition=None,
+                    prefix: str = "runtime") -> Any:
+    """Restore a checkpointed ``CacheRuntime`` onto a *different* shard
+    count (DESIGN.md §19.5).
+
+    The slab arrays keep their global shapes across layouts — only the
+    entry *placement* (which global row a logical entry occupies under the
+    shard-major round-robin convention), the per-shard ``TenancyState``
+    leaves and the per-shard index state change. Host-side algorithm:
+
+      1. extract live entries and order them globally by
+         ``(inserted_at, slot)`` — the FIFO total order every ring agrees
+         on;
+      2. re-place them round-robin into the new layout (per tenant ring
+         when partitioned: the tenant of an old entry is derived from its
+         *local* offset via the old layout's per-shard region map);
+      3. rebuild ring pointers from the placement counts; re-attribute
+         summed tenancy counters onto shard 0 (the layout the sharded
+         step's sum-reduce expects); advance the insert clock to the
+         number of entries placed;
+      4. keep ``template``'s fresh index state — callers must schedule a
+         refit (the absorbed bucket contents refer to old-placement local
+         slot ids).
+
+    ``template`` must be a freshly initialized runtime of the NEW layout;
+    ``partition`` is the *global* PartitionMap (None when single-tenant).
+    Stats / policy / fusion leaves are replicated in every layout and copy
+    through shape-checked by name.
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    skey = prefix + "/state/"
+    g = {k[len(skey):]: np.asarray(v) for k, v in flat.items()
+         if k.startswith(skey)}
+    n = int(g["valid"].shape[0])
+    if n % old_shards or n % new_shards:
+        raise ValueError(f"capacity {n} not divisible by shard counts "
+                         f"{old_shards} -> {new_shards}")
+    l_old, l_new = n // old_shards, n // new_shards
+    live = np.nonzero(g["valid"].astype(bool))[0]
+    order = live[np.lexsort((live, g["inserted_at"][live]))]
+    e = int(order.shape[0])
+
+    tenancy = template.tenancy
+    if partition is None:
+        r = np.arange(e)
+        dst = (r % new_shards) * l_new + r // new_shards
+    else:
+        sizes = np.asarray(partition.sizes, dtype=np.int64)
+        if np.any(sizes % old_shards) or np.any(sizes % new_shards):
+            raise ValueError(f"region sizes {partition.sizes} must divide "
+                             f"both shard counts {old_shards}, {new_shards}")
+        old_edges = np.cumsum(sizes // old_shards)
+        new_sizes = sizes // new_shards
+        new_starts = np.asarray(partition.starts, dtype=np.int64) \
+            // new_shards
+        owner = np.searchsorted(old_edges, order % l_old, side="right")
+        dst = np.empty((e,), dtype=np.int64)
+        t_count = np.zeros((len(partition),), dtype=np.int64)
+        for t in range(len(partition)):
+            idx = np.nonzero(owner == t)[0]      # already in FIFO order
+            r = np.arange(idx.size)
+            dst[idx] = ((r % new_shards) * l_new + new_starts[t]
+                        + r // new_shards)
+            t_count[t] = idx.size
+        s_idx = np.arange(new_shards)[:, None]
+        fill = np.maximum(t_count[None, :] - s_idx, 0)
+        fill = -(-fill // new_shards)            # ceil div
+        ptr = (fill % new_sizes[None, :]).astype(np.int32)
+
+        def _total(name: str) -> np.ndarray:
+            arr = np.asarray(flat[f"{prefix}/tenancy/{name}"])
+            return arr.reshape(-1, arr.shape[-1]).sum(axis=0)
+
+        def _attr(name: str) -> jnp.ndarray:
+            tot = _total(name).astype(np.int32)
+            if new_shards == 1:
+                return jnp.asarray(tot)
+            out = np.zeros((new_shards, tot.shape[0]), dtype=np.int32)
+            out[0] = tot                          # sum-reduce stays exact
+            return jnp.asarray(out)
+
+        tenancy = dataclasses.replace(
+            template.tenancy,
+            ptr=jnp.asarray(ptr if new_shards > 1 else ptr[0]),
+            lookups=_attr("lookups"), hits=_attr("hits"),
+            inserts=_attr("inserts"), evictions=_attr("evictions"))
+
+    fields = {}
+    for name, arr in g.items():
+        tmpl = getattr(template.state, name)
+        if arr.ndim == 0 or arr.shape[0] != n:
+            continue                              # clock scalars, below
+        out = np.array(tmpl)
+        out[dst] = arr[order]
+        fields[name] = jnp.asarray(out, dtype=tmpl.dtype)
+    ring_local = partition is None and new_shards == 1
+    state = dataclasses.replace(
+        template.state,
+        ptr=jnp.asarray(e % n if ring_local else 0, dtype=jnp.int32),
+        n_inserts=jnp.asarray(e, dtype=jnp.int32), **fields)
+
+    def _copy_group(sub: Any, name: str) -> Any:
+        if sub is None:
+            return None
+        lp, td = jax.tree_util.tree_flatten_with_path(sub)
+        leaves = []
+        for p, leaf in lp:
+            tail = "/".join(_key_str(x) for x in p)
+            key = f"{prefix}/{name}/{tail}" if tail else f"{prefix}/{name}"
+            arr = flat.get(key)
+            if arr is not None and tuple(np.shape(arr)) == tuple(leaf.shape):
+                leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+            else:
+                leaves.append(leaf)
+        return jax.tree_util.tree_unflatten(td, leaves)
+
+    return template.replace(
+        state=state, tenancy=tenancy,
+        stats=_copy_group(template.stats, "stats"),
+        policy_state=_copy_group(template.policy_state, "policy_state"),
+        fusion=_copy_group(template.fusion, "fusion"))
