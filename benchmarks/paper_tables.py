@@ -335,6 +335,112 @@ def near_hit_table(full: bool = False):
     return rows, summaries
 
 
+def resilience_table(full: bool = False):
+    """Resilient serving under deterministic chaos (DESIGN.md §20.7).
+
+    One paraphrase-heavy workload served twice through the SAME seeded
+    ``FaultSchedule`` — a hard-error window, a 50% brownout, a latency
+    spike, all keyed by backend call index so the sync batch partitioning
+    replays the faults bit-identically:
+
+      * ``resilience_off`` — plain engine: per-row containment only; every
+        miss row whose backend call faulted resolves with ``error`` set.
+      * ``resilience_on``  — deadline-budgeted retries (deterministic
+        backoff, no real sleeps), a zero-cooldown circuit breaker, and
+        degraded cache serving above ``BandPolicy.degraded_lo``.
+
+    The ``fault/*`` rows CI asserts on: availability on strictly above
+    off, and the breaker both tripping and recovering.
+    """
+    from repro.generative import BandPolicy
+    from repro.serving import (CircuitBreaker, FaultSchedule, FaultWindow,
+                               FaultyBackend, ResilienceConfig, RetryPolicy,
+                               build_workload)
+
+    n = 300 if full else 100
+    batch = 32 if full else 16
+    pairs = build_corpus(n, seed=0)
+    reqs = build_workload(pairs, 12 * batch, paraphrase_ratio=0.9,
+                          burst_prob=0.0, seed=43)
+    key_by_sid = {p.qa_id: p.semantic_key for p in pairs}
+
+    def judge(req, sid):
+        return key_by_sid.get(sid, "") == req.semantic_key
+
+    schedule = FaultSchedule(windows=(
+        FaultWindow("error", 2, 7),
+        FaultWindow("brownout", 8, 11, error_rate=0.5),
+        FaultWindow("latency_spike", 11, 13, extra_latency_s=0.02),
+    ), seed=5)
+    policy = BandPolicy(tau_lo=0.70, tau_hi=0.80, degraded_lo=0.60)
+
+    rows, out = [], {}
+    avail, engines, configs = {}, {}, {}
+    for tag, resilient in (("resilience_off", False),
+                           ("resilience_on", True)):
+        backend = FaultyBackend(SimulatedLLMBackend(pairs), schedule)
+        res = None
+        if resilient:
+            res = ResilienceConfig(
+                retry=RetryPolicy(max_attempts=3, base_backoff_s=0.001,
+                                  max_backoff_s=0.002, seed=3),
+                breaker=CircuitBreaker(failure_threshold=3, window=8,
+                                       cooldown_s=0.0),
+                sleep=lambda s: None)
+        cfg = CacheConfig(dim=384, capacity=8 * n, value_len=48,
+                          ttl=None, threshold=0.8)
+        eng = CachedEngine(cfg, backend, judge=judge, batch_size=batch,
+                           policy=policy, resilience=res)
+        eng.warm(pairs)
+        eng.serve_batch([Request(query="resilience warmup")])  # fault idx 0
+        t0 = time.perf_counter()
+        resps = eng.process(reqs)
+        wall = time.perf_counter() - t0
+        avail[tag] = sum(1 for r in resps if not r.error) / len(resps)
+        engines[tag], configs[tag] = eng, res
+        rows.append({
+            "name": f"fault/{tag}/serving",
+            "us_per_call": 1e6 * wall / len(reqs),
+            "derived": (f"availability={avail[tag]:.4f}"
+                        f" faults_injected={backend.faults_injected}"
+                        f" degraded={sum(r.degraded for r in resps)}"
+                        f" errors={sum(bool(r.error) for r in resps)}"),
+        })
+    rm = engines["resilience_on"].metrics.resilience
+    br = configs["resilience_on"].breaker
+    rows.append({
+        "name": "fault/availability",
+        "us_per_call": 0.0,
+        "derived": (f"on={avail['resilience_on']:.4f}"
+                    f" off={avail['resilience_off']:.4f}"
+                    f" delta={avail['resilience_on'] - avail['resilience_off']:.4f}"),
+    })
+    rows.append({
+        "name": "fault/retries",
+        "us_per_call": 0.0,
+        "derived": (f"retries={rm.retries}"
+                    f" retry_successes={rm.retry_successes}"
+                    f" backend_failures={rm.backend_failures}"
+                    f" deadline_exhausted={rm.deadline_exhausted}"),
+    })
+    rows.append({
+        "name": "fault/breaker",
+        "us_per_call": 0.0,
+        "derived": (f"trips={br.trips} recoveries={br.recoveries}"
+                    f" short_circuits={br.short_circuits} state={br.state}"),
+    })
+    rows.append({
+        "name": "fault/degraded",
+        "us_per_call": 0.0,
+        "derived": (f"served={rm.degraded_served}"
+                    f" failed={rm.degraded_failed}"
+                    f" precision={rm.degraded_precision:.3f}"),
+    })
+    out["availability"] = avail
+    out["resilience"] = rm.row()
+    return rows, out
+
+
 def ttl_behaviour():
     """TTL mechanism (paper §2.7): hit rate collapses after expiry."""
 

@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                     hit conversion + context-hit precision (DESIGN.md §16)
   shard/*         — fused step on a 4-shard forced-CPU mesh vs local: step
                     us/call + hit-mask parity (DESIGN.md §19)
+  fault/*         — resilient serving under deterministic chaos: availability
+                    with vs without the §20 layer, retry/breaker counters,
+                    degraded-mode serving (DESIGN.md §20)
   kernel/*        — scoring-kernel scaling (slab 4k..512k); fused-IVF
                     operand bytes + exact-vs-IVF crossover (DESIGN.md §15)
   design3/*       — HNSW (paper algorithm) vs exact MXU scoring
@@ -115,6 +118,7 @@ def main() -> None:
         ("near", lambda: paper_tables.near_hit_table(full=full)),
         ("obs", lambda: paper_tables.obs_table(full=full)),
         ("shard", lambda: paper_tables.shard_table(full=full)),
+        ("fault", lambda: paper_tables.resilience_table(full=full)),
         ("kernel", kernel_bench.cosine_topk_scaling),
         ("kernel-masked", kernel_bench.masked_lookup_scaling),
         ("kernel-ivf", kernel_bench.fused_ivf_bench),

@@ -34,6 +34,15 @@ Six experiments on the simulated backend (DESIGN.md §12.5, §13.5, §16.6,
      (warmed entries round-robin across shards and every query row finds
      them), and a hit-path p99 bound. Runs in a re-exec'd subprocess —
      the parent process has already initialized its single-device JAX.
+  9. **resilience** — deterministic chaos (DESIGN.md §20.7): the same
+     workload through the same seeded ``FaultSchedule`` (hard-error,
+     brownout and latency-spike windows keyed by backend call index)
+     with the resilience layer on vs off. Asserts zero stranded futures,
+     availability strictly above the no-resilience baseline (degraded
+     cache serving is doing real work), that the circuit breaker both
+     trips and recovers, that deadline-expired rows fail fast without a
+     backend call, a hit-path p99 bound on the unaffected traffic, and
+     that the retry/breaker/degraded Prometheus families are served.
 
 Output: ``name,value`` CSV rows, then a JSON metrics summary.
 
@@ -52,9 +61,12 @@ from repro.core.types import CacheConfig
 from repro.data.qa_dataset import build_corpus
 from repro.context import DecayMeanFusion
 from repro.generative import BandPolicy, TemplateSplice
-from repro.serving import (AsyncCacheServer, CachedEngine, Request,
+from repro.serving import (AsyncCacheServer, CachedEngine, CircuitBreaker,
+                           FaultSchedule, FaultWindow, FaultyBackend,
+                           Request, ResilienceConfig, Response, RetryPolicy,
                            SchedulerConfig, ServingMetrics,
-                           SimulatedLLMBackend, build_multi_tenant_workload,
+                           SimulatedLLMBackend, availability,
+                           build_multi_tenant_workload,
                            build_multi_turn_workload, build_workload,
                            run_open_loop, run_sessions, run_waves)
 from repro.tenancy import TenantRegistry, TenantSpec
@@ -69,15 +81,16 @@ def make_engine(pairs, *, batch_size: int, latency_s: float = 0.0,
                 block: bool = False, warm: bool = True,
                 registry=None, fusion=None, judge=None,
                 max_sessions: int = 4096, synthesizer=None,
-                policy=None) -> CachedEngine:
+                policy=None, backend=None, resilience=None) -> CachedEngine:
     by_id = {p.qa_id: p for p in pairs}
 
     def default_judge(req, sid):
         return sid >= 0 and sid in by_id and \
             by_id[sid].semantic_key == req.semantic_key
 
-    backend = SimulatedLLMBackend(pairs, latency_per_call_s=latency_s,
-                                  block=block)
+    if backend is None:
+        backend = SimulatedLLMBackend(pairs, latency_per_call_s=latency_s,
+                                      block=block)
     per_tenant = max(4096, 8 * len(pairs))
     cfg = CacheConfig(dim=384,
                       capacity=per_tenant * (len(registry) if registry
@@ -86,7 +99,8 @@ def make_engine(pairs, *, batch_size: int, latency_s: float = 0.0,
     eng = CachedEngine(cfg, backend, judge=judge or default_judge,
                        batch_size=batch_size, registry=registry,
                        fusion=fusion, max_sessions=max_sessions,
-                       synthesizer=synthesizer, policy=policy)
+                       synthesizer=synthesizer, policy=policy,
+                       resilience=resilience)
     if warm:
         if registry is None:
             eng.warm(pairs)
@@ -422,6 +436,112 @@ def bench_observability(pairs, *, batch: int, n_req: int, rate_qps: float,
     return out
 
 
+def bench_resilience(pairs, *, batch: int, n_req: int) -> dict:
+    """Stage 9: deterministic chaos serving (DESIGN.md §20.7).
+
+    The SAME workload runs twice through the async scheduler against two
+    fresh ``FaultyBackend`` wrappers sharing one seeded ``FaultSchedule``
+    (a hard-error window, a 50% brownout, a latency spike — all keyed by
+    backend call index, so lockstep waves make both runs bit-replayable):
+
+      * **off** — a plain engine: per-row containment only (§20.2). Every
+        miss row whose backend call falls in a fault window resolves as a
+        ``BackendError``; hits in the same batch still serve.
+      * **on**  — retries with deterministic backoff (no real sleeps), a
+        zero-cooldown circuit breaker (trips during the error window,
+        probes every batch, recovers as soon as the window passes), and
+        degraded cache serving over a ``BandPolicy.degraded_lo`` floor.
+
+    Availability (fraction of slots answered with an error-free Response)
+    must be *strictly* higher with the layer on; the deadline probe at the
+    end asserts an already-expired budget never reaches the backend.
+    """
+    from repro.obs import REQUIRED_FAMILIES
+    from repro.obs.export import MetricsExporter
+
+    schedule = FaultSchedule(windows=(
+        FaultWindow("error", 2, 7),
+        FaultWindow("brownout", 8, 11, error_rate=0.5),
+        FaultWindow("latency_spike", 11, 13, extra_latency_s=0.02),
+    ), seed=5)
+    # high paraphrase share: failed miss rows usually have a cached
+    # neighbour above the degraded floor — the regime degraded serving
+    # exists for (a purely-novel workload has nothing to serve from)
+    workload = build_workload(pairs, n_req, paraphrase_ratio=0.9,
+                              burst_prob=0.0, seed=43)
+    policy = BandPolicy(tau_lo=0.70, tau_hi=0.80, degraded_lo=0.60)
+
+    def run(resilient: bool):
+        backend = FaultyBackend(SimulatedLLMBackend(pairs), schedule)
+        res = None
+        if resilient:
+            res = ResilienceConfig(
+                retry=RetryPolicy(max_attempts=3, base_backoff_s=0.001,
+                                  max_backoff_s=0.002, seed=3),
+                breaker=CircuitBreaker(failure_threshold=3, window=8,
+                                       cooldown_s=0.0),
+                sleep=lambda s: None)
+        eng = make_engine(pairs, batch_size=batch, backend=backend,
+                          policy=policy, resilience=res)
+        # compile before the clock starts (consumes fault index 0 in both
+        # runs alike), then zero the bookkeeping
+        eng.serve_batch([Request(query="resilience warmup")])
+        eng.metrics = ServingMetrics()
+
+        async def drive():
+            sched = SchedulerConfig(max_batch=batch, max_wait_ms=50.0,
+                                    coalesce=False)
+            async with AsyncCacheServer(eng, sched) as server:
+                return await run_waves(server.submit_request, workload,
+                                       wave=batch, return_exceptions=True)
+        return eng, backend, res, asyncio.run(drive())
+
+    eng_off, be_off, _, lr_off = run(False)
+    eng_on, be_on, res_on, lr_on = run(True)
+
+    rm = eng_on.metrics.resilience
+    br = res_on.breaker
+    on_slots, off_slots = lr_on.responses, lr_off.responses
+    out = {
+        "availability_on": round(availability(on_slots), 4),
+        "availability_off": round(availability(off_slots), 4),
+        "no_stranded": (
+            len(on_slots) == n_req and len(off_slots) == n_req
+            and all(isinstance(r, (Response, Exception)) for r in on_slots)
+            and all(isinstance(r, (Response, Exception))
+                    for r in off_slots)),
+        "faults_injected_on": be_on.faults_injected,
+        "faults_injected_off": be_off.faults_injected,
+        "retries": rm.retries,
+        "retry_successes": rm.retry_successes,
+        "backend_failures": rm.backend_failures,
+        "degraded_served": rm.degraded_served,
+        "degraded_failed": rm.degraded_failed,
+        "breaker_trips": br.trips,
+        "breaker_recoveries": br.recoveries,
+        "breaker_short_circuits": br.short_circuits,
+        "breaker_state_final": br.state,
+    }
+    pct = eng_on.metrics.summary()["latency_percentiles"]
+    out["hit_p99_s"] = pct.get("hit", {}).get("p99_s", 0.0)
+
+    # deadline probe: an already-expired budget on a guaranteed-miss row
+    # must fail fast — degraded or error, but never a backend call
+    calls_before = be_on.calls_started
+    expired = eng_on.process([Request(
+        query="what does the deadline probe row with a spent budget do",
+        deadline_ms=0.0)])[0]
+    out["deadline_fast_fail"] = (
+        be_on.calls_started == calls_before
+        and bool(expired.error or expired.degraded)
+        and rm.deadline_exhausted >= 1)
+
+    body = MetricsExporter(eng_on).render()
+    out["families_ok"] = all(f"# TYPE {f} " in body
+                             for f in REQUIRED_FAMILIES)
+    return out
+
+
 def _sharded_child(args) -> dict:
     """Body of the sharded stage — runs in the re-exec'd 8-device child."""
     import jax
@@ -640,6 +760,13 @@ def main(argv=None) -> int:
     for k, v in shard.items():
         _emit(f"shard/{k}", v)
 
+    # 9. resilience: deterministic chaos — fault windows, deadline-budgeted
+    #    retries, circuit breaker, degraded cache serving (DESIGN.md §20.7)
+    fault = bench_resilience(pairs, batch=batch,
+                             n_req=min(12 * batch, n_req))
+    for k, v in fault.items():
+        _emit(f"serve/fault_{k}", v)
+
     ok = True
     if not parity["decisions_match"] or not parity["answers_match"]:
         print("FAIL: async scheduler diverged from sync engine", file=sys.stderr)
@@ -746,6 +873,45 @@ def main(argv=None) -> int:
             print(f"FAIL: sharded hit-path p99 {shard.get('hit_p99_s')}s "
                   f"over the {p99_bound}s bound", file=sys.stderr)
             ok = False
+    # resilience expectations are hard requirements (§20.7): every submitted
+    # slot resolves (zero stranded futures even with the backend on fire),
+    # degraded serving keeps availability STRICTLY above the no-resilience
+    # baseline under the same fault schedule, the breaker both trips and
+    # recovers (ending closed), expired deadlines never reach the backend,
+    # the unaffected hit traffic keeps its tail, and the retry/breaker/
+    # degraded metric families are served
+    if not fault["no_stranded"]:
+        print("FAIL: chaos run stranded or dropped futures", file=sys.stderr)
+        ok = False
+    if fault["availability_on"] <= fault["availability_off"]:
+        print("FAIL: resilience layer did not improve availability "
+              f"({fault['availability_on']} vs {fault['availability_off']})",
+              file=sys.stderr)
+        ok = False
+    if not (fault["breaker_trips"] >= 1 and fault["breaker_recoveries"] >= 1
+            and fault["breaker_state_final"] == "closed"):
+        print("FAIL: breaker did not trip and recover "
+              f"(trips={fault['breaker_trips']}, "
+              f"recoveries={fault['breaker_recoveries']}, "
+              f"state={fault['breaker_state_final']})", file=sys.stderr)
+        ok = False
+    if fault["degraded_served"] <= 0:
+        print("FAIL: degraded mode served nothing during the outage",
+              file=sys.stderr)
+        ok = False
+    fault_p99 = 0.5 if args.smoke else 1.0
+    if fault["hit_p99_s"] >= fault_p99:
+        print(f"FAIL: chaos hit-path p99 {fault['hit_p99_s']}s over the "
+              f"{fault_p99}s bound", file=sys.stderr)
+        ok = False
+    if not fault["deadline_fast_fail"]:
+        print("FAIL: expired deadline row reached the backend",
+              file=sys.stderr)
+        ok = False
+    if not fault["families_ok"]:
+        print("FAIL: resilience metric families missing from /metrics",
+              file=sys.stderr)
+        ok = False
     _emit("serve/ok", ok)
     return 0 if ok else 1
 

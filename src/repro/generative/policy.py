@@ -65,6 +65,12 @@ class BandPolicy:
     ema: float = 0.9
     lo_min: float = 0.55
     min_width: float = 0.01     # τ_lo can never cross τ_hi - min_width
+    # degraded-mode floor (DESIGN.md §20.4): when the backend is down and
+    # the engine serves a best cached neighbour instead of failing the row,
+    # this is the minimum score it may serve at. None -> the engine's
+    # default floor. Always <= τ_lo — degraded serving relaxes the band's
+    # lower edge, never tightens it.
+    degraded_lo: float | None = None
 
     def __post_init__(self):
         if not (0.0 <= self.tau_lo <= self.tau_hi <= 1.0):
@@ -73,6 +79,15 @@ class BandPolicy:
                 f"({self.tau_lo}, {self.tau_hi})")
         if self.lo_min > self.tau_lo:
             raise ValueError("lo_min must not exceed tau_lo")
+        if self.degraded_lo is not None:
+            if not (0.0 <= self.degraded_lo <= 1.0):
+                raise ValueError(
+                    f"degraded_lo must lie in [0, 1], got {self.degraded_lo}")
+            if self.degraded_lo > self.tau_lo:
+                raise ValueError(
+                    f"degraded_lo ({self.degraded_lo}) must not exceed "
+                    f"tau_lo ({self.tau_lo}) — degraded serving relaxes "
+                    "the band edge, never tightens it")
 
     # -- Policy protocol (uniform with Fixed/AdaptiveThreshold) ----------- #
     def init_state(self) -> Array:

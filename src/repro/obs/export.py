@@ -41,6 +41,9 @@ REQUIRED_FAMILIES = (
     "repro_cost_usd_total",
     "repro_slab_lookups_total",
     "repro_slab_inserts_total",
+    "repro_backend_retries_total",
+    "repro_breaker_transitions_total",
+    "repro_degraded_served_total",
 )
 
 
@@ -139,14 +142,17 @@ def _quantile_rows(out: _Lines, family: str, samples: dict, *,
 
 
 def prometheus_text(metrics, *, cache_stats=None, tenant_stats=None,
-                    tracer=None, capacity: int | None = None) -> str:
+                    tracer=None, capacity: int | None = None,
+                    breaker=None) -> str:
     """Render one scrape of the serving stack.
 
     ``metrics`` is a ``ServingMetrics``; the rest are optional extra
     planes: ``cache_stats`` the device ``CacheStats``, ``tenant_stats``
     the ``CachedEngine.tenant_stats()`` dict, ``tracer`` a
     ``repro.obs.Tracer`` (adds the per-stage decomposition), ``capacity``
-    the slab capacity gauge.
+    the slab capacity gauge, ``breaker`` the engine's ``CircuitBreaker``
+    (adds the live state gauge; the transition counters are emitted
+    unconditionally — zeros without one — per REQUIRED_FAMILIES).
     """
     out = _Lines()
     s = metrics  # host-side ServingMetrics
@@ -238,6 +244,42 @@ def prometheus_text(metrics, *, cache_stats=None, tenant_stats=None,
                    "Judge-confirmed precision of served near-hits.")
         out.sample("repro_near_precision", None, s.near.precision)
 
+    # resilience plane (§20.5): the retry/breaker/degraded families are
+    # contractual (REQUIRED_FAMILIES) — emitted on every scrape, zeros on
+    # a fault-free or resilience-less deployment, so dashboards and
+    # alerting rules never see a family appear mid-incident
+    r = s.resilience
+    out.family("repro_backend_retries_total", "counter",
+               "Backend retry attempts after a failed call.")
+    out.sample("repro_backend_retries_total", None, r.retries)
+    out.family("repro_backend_failures_total", "counter",
+               "Failed backend calls (including failed retries).")
+    out.sample("repro_backend_failures_total", None, r.backend_failures)
+    out.family("repro_degraded_served_total", "counter",
+               "Misses served from a cached neighbour in degraded mode.")
+    out.sample("repro_degraded_served_total", None, r.degraded_served)
+    out.family("repro_overload_shed_total", "counter",
+               "Requests rejected with Overloaded by the shed policy.")
+    out.sample("repro_overload_shed_total", None, r.shed)
+    out.family("repro_deadline_exhausted_total", "counter",
+               "Miss rows whose deadline budget expired before an answer.")
+    out.sample("repro_deadline_exhausted_total", None, r.deadline_exhausted)
+    out.family("repro_breaker_transitions_total", "counter",
+               "Circuit breaker transitions by kind.")
+    out.sample("repro_breaker_transitions_total", {"transition": "trip"},
+               0 if breaker is None else breaker.trips)
+    out.sample("repro_breaker_transitions_total", {"transition": "recover"},
+               0 if breaker is None else breaker.recoveries)
+    if breaker is not None:
+        out.family("repro_breaker_state", "gauge",
+                   "Breaker state: 0 closed, 1 half-open, 2 open.")
+        out.sample("repro_breaker_state", None,
+                   {"closed": 0, "half_open": 1, "open": 2}[breaker.state])
+        out.family("repro_breaker_short_circuits_total", "counter",
+                   "Calls refused by the open breaker.")
+        out.sample("repro_breaker_short_circuits_total", None,
+                   breaker.short_circuits)
+
     # device-side plane: the compiled step's own counters
     if cache_stats is not None:
         out.family("repro_slab_lookups_total", "counter",
@@ -310,10 +352,12 @@ class MetricsExporter:
 
     def render(self) -> str:
         eng = self.engine
+        res = getattr(eng, "resilience", None)
         return prometheus_text(
             eng.metrics,
             cache_stats=eng.stats,
             tenant_stats=eng.tenant_stats() if eng.registry is not None
             else None,
             tracer=eng.tracer,
-            capacity=eng.cache.config.capacity)
+            capacity=eng.cache.config.capacity,
+            breaker=None if res is None else res.breaker)

@@ -1,27 +1,35 @@
 """Serving runtime: the paper's cached query-handling system, plus the
 async continuous-batching layer in front of it (DESIGN.md §12)."""
 from repro.serving.engine import Batcher, CachedEngine, Request, Response
-from repro.serving.llm_backend import (BackendResult, ModelBackend,
-                                       SimulatedLLMBackend)
-from repro.serving.loadgen import (LoadResult, build_multi_tenant_workload,
+from repro.serving.llm_backend import (BackendError, BackendResult,
+                                       BackendTimeout, BackendUnavailable,
+                                       ModelBackend, SimulatedLLMBackend)
+from repro.serving.loadgen import (LoadResult, availability,
+                                   build_multi_tenant_workload,
                                    build_multi_turn_workload, build_workload,
                                    run_closed_loop, run_open_loop,
                                    run_sessions, run_waves, tenant_rng,
                                    turn_levels, zipf_weights)
 from repro.serving.metrics import (CategoryMetrics, ContextMetrics,
-                                   NearHitMetrics, ServingMetrics,
-                                   TenantMetrics)
+                                   NearHitMetrics, ResilienceMetrics,
+                                   ServingMetrics, TenantMetrics)
+from repro.serving.resilience import (CircuitBreaker, FaultSchedule,
+                                      FaultWindow, FaultyBackend, Overloaded,
+                                      ResilienceConfig, RetryPolicy)
 from repro.serving.scheduler import (AsyncScheduler, SchedulerConfig,
                                      coalesce_key, normalize_query)
 from repro.serving.server import AsyncCacheServer
 
 __all__ = ["Batcher", "CachedEngine", "Request", "Response", "BackendResult",
+           "BackendError", "BackendTimeout", "BackendUnavailable",
            "ModelBackend", "SimulatedLLMBackend", "CategoryMetrics",
-           "ContextMetrics", "NearHitMetrics", "ServingMetrics",
-           "TenantMetrics",
+           "ContextMetrics", "NearHitMetrics", "ResilienceMetrics",
+           "ServingMetrics", "TenantMetrics",
+           "CircuitBreaker", "FaultSchedule", "FaultWindow", "FaultyBackend",
+           "Overloaded", "ResilienceConfig", "RetryPolicy",
            "AsyncScheduler", "SchedulerConfig", "coalesce_key",
            "normalize_query", "AsyncCacheServer", "LoadResult",
-           "build_workload", "build_multi_tenant_workload",
+           "availability", "build_workload", "build_multi_tenant_workload",
            "build_multi_turn_workload", "tenant_rng", "turn_levels",
            "zipf_weights", "run_closed_loop", "run_open_loop",
            "run_sessions", "run_waves"]

@@ -76,6 +76,11 @@ class Request:
                                  # ignored without a fusion strategy
     explain: bool = False        # attach a decision-attribution ``why``
                                  # record to the Response (DESIGN.md §18.3)
+    deadline_ms: float | None = None
+                                 # remaining latency budget (SLO) in ms; the
+                                 # scheduler decrements queue wait before
+                                 # dispatch, and the §20.3 retry loop never
+                                 # sleeps past it. None = no deadline.
 
 
 @dataclasses.dataclass
@@ -97,6 +102,14 @@ class Response:
     why: dict | None = None   # decision attribution (§18.3); only set when
                               # the request opted in via Request.explain or
                               # the engine forces explain_responses=True
+    degraded: bool = False    # served from the best cached neighbour under
+                              # the relaxed degraded floor because the
+                              # backend was unavailable / budget exhausted
+                              # (§20.4) — never admitted to the slab
+    error: str = ""           # non-empty when this row's backend call
+                              # failed and no degraded answer was servable;
+                              # the async scheduler converts it into a
+                              # per-row BackendError (§20.2)
 
 
 #: Row used to right-pad a partial batch up to the engine's fixed batch
@@ -149,6 +162,7 @@ class CachedEngine:
                  tracer: Tracer | None = None,
                  events=None,
                  explain_responses: bool = False,
+                 resilience=None,
                  mesh=None,
                  cache_axes: tuple = ("data",)):
         # ``policy``: optional threshold policy (e.g. AdaptiveThreshold —
@@ -183,6 +197,11 @@ class CachedEngine:
         # ``explain_responses``: force a ``why`` record onto EVERY
         # response (demos/debugging); normally per-request opt-in via
         # Request.explain.
+        # ``resilience``: optional ResilienceConfig (DESIGN.md §20) — the
+        # miss path gains deadline-budgeted retries, a circuit breaker and
+        # degraded-mode serving from cached neighbours. None = a single
+        # backend attempt whose failure marks only its own rows (§20.2);
+        # with no faults every path is bit-identical to the pre-§20 engine.
         # ``mesh``: optional jax.sharding.Mesh — wraps the cache in a
         # DistributedCache (DESIGN.md §19): the slab is sharded over
         # ``cache_axes`` and every jitted call below goes through the
@@ -248,6 +267,7 @@ class CachedEngine:
         self.tracer = tracer if tracer is not None else Tracer()
         self.events = events
         self.explain_all = explain_responses
+        self.resilience = resilience
         self._now = 0.0
         # One uniform set of jitted pure functions — no index/policy
         # branches. The runtime is owned linearly (each call's output
@@ -356,13 +376,17 @@ class CachedEngine:
         import json
         import os
         from repro.training.checkpoint import (load_checkpoint,
-                                               load_checkpoint_flat,
+                                               open_checkpoint,
                                                reshard_runtime)
         # Fusion-aware restore (§16.5). The fusion leaf group follows the
         # tenancy None-keeps-the-treedef contract, so the npz either has
         # "runtime/fusion/..." keys (session-era snapshot) or none at all.
-        data_path = path if path.endswith(".npz") else path + ".npz"
-        saved_keys = np.load(data_path).files
+        # open_checkpoint reads every member eagerly, so a truncated or
+        # corrupt snapshot fails HERE with CheckpointCorruptError naming
+        # the file (§20 crash-safety), not with an arbitrary zipfile
+        # traceback halfway through the restore.
+        flat = open_checkpoint(path)
+        saved_keys = list(flat)
         has_fusion_keys = any(k.startswith("runtime/fusion/")
                               for k in saved_keys)
         if has_fusion_keys and self.fusion is None:
@@ -404,7 +428,7 @@ class CachedEngine:
             # refit (the saved buckets hold old-placement local slot ids).
             fresh = self.cache.init()
             restored_runtime = reshard_runtime(
-                load_checkpoint_flat(path), fresh,
+                flat, fresh,
                 old_shards=saved_shards, new_shards=self._num_shards,
                 partition=self.cache.partition)
             needs_refit = True
@@ -486,15 +510,19 @@ class CachedEngine:
         return np.asarray(jnp.where(result.hit[:, None], matched, fused),
                           dtype=np.float32)
 
-    def _append_turns(self, batch, n_valid: int, keys_np: np.ndarray) -> None:
+    def _append_turns(self, batch, n_valid: int, keys_np: np.ndarray,
+                      skip=()) -> None:
         """Push each served session row's canonical turn key (§16.1) —
         after the batch, so a turn's own key never fuses into its own
-        lookup and co-batched turns of one session can't race."""
+        lookup and co-batched turns of one session can't race. ``skip``
+        holds failed/degraded row indexes (§20): those turns were never
+        answered from the slab, so their keys must not advance the
+        session window."""
         if self.sessions is None:
             return
         for i in range(n_valid):
             r = batch[i]
-            if r.session:
+            if r.session and i not in skip:
                 self.sessions.append(r.tenant, r.session, keys_np[i],
                                      self._now)
 
@@ -573,6 +601,140 @@ class CachedEngine:
         answers = {i: self.tokenizer.decode(toks[j])
                    for j, i in enumerate(miss_idx)}
         return toks, lens, answers, res.latency_s, res.cost_usd
+
+    def _split_expired(self, batch, miss_idx):
+        """Split the miss set into rows whose deadline budget is already
+        spent (they go straight to degraded serving, §20.3) and rows still
+        worth a backend call. No-op without a resilience config."""
+        if self.resilience is None:
+            return {}, list(miss_idx)
+        failed: dict[int, str] = {}
+        gen_idx: list[int] = []
+        for i in miss_idx:
+            d = batch[i].deadline_ms
+            if d is not None and d <= 0.0:
+                self.metrics.resilience.deadline_exhausted += 1
+                failed[i] = ("DeadlineExhausted: budget spent before the "
+                             "backend call")
+            else:
+                gen_idx.append(i)
+        return failed, gen_idx
+
+    def _resolve_misses(self, batch, miss_idx):
+        """One backend resolution for the miss rows: containment + retries.
+
+        Returns ``(result_tuple, None)`` on success or ``(None, err_msg)``
+        — the caller turns ``err_msg`` into per-row degraded/error
+        responses (§20.2) instead of letting the exception fail the whole
+        batch. With a resilience config the call is gated by the circuit
+        breaker and retried under the §20.3 backoff/deadline-budget rules;
+        without one it is a single attempt whose failure is still
+        contained to its own rows.
+        """
+        r = self.resilience
+        rm = self.metrics.resilience
+        if r is None:
+            try:
+                return self._generate_misses(batch, miss_idx), None
+            except Exception as exc:
+                self.metrics.resilience_seen = True
+                rm.backend_failures += 1
+                return None, f"{type(exc).__name__}: {exc}"
+        budget_s = None
+        deadlines = [batch[i].deadline_ms for i in miss_idx
+                     if batch[i].deadline_ms is not None]
+        if deadlines:
+            # one call serves every miss row, so the tightest row's budget
+            # bounds the retry schedule for the whole set
+            budget_s = min(deadlines) / 1000.0
+        key = batch[miss_idx[0]].query
+        start = r.clock()
+        attempt = 0
+        while True:
+            if r.breaker is not None and not r.breaker.allow():
+                rm.breaker_short_circuits += 1
+                return None, ("BreakerOpen: circuit breaker is open; "
+                              "backend call short-circuited")
+            attempt += 1
+            try:
+                out = self._generate_misses(batch, miss_idx)
+            except Exception as exc:
+                if r.breaker is not None:
+                    r.breaker.record_failure()
+                rm.backend_failures += 1
+                delay = r.retry.backoff_s(attempt, key=key)
+                elapsed = r.clock() - start
+                if not r.retry.allows(attempt, elapsed_s=elapsed,
+                                      next_backoff_s=delay,
+                                      budget_s=budget_s):
+                    if (budget_s is not None
+                            and attempt < r.retry.max_attempts):
+                        rm.deadline_exhausted += 1
+                    return None, f"{type(exc).__name__}: {exc}"
+                rm.retries += 1
+                r.sleep(delay)
+                continue
+            if r.breaker is not None:
+                r.breaker.record_success()
+            if attempt > 1:
+                rm.retry_successes += 1
+            return out, None
+
+    def _degraded_floor(self) -> float:
+        """Relaxed score floor for degraded serving: explicit config wins,
+        else the band policy's ``degraded_lo`` edge, else 0.55 (§20.4)."""
+        r = self.resilience
+        if r is not None and r.degraded_band_lo is not None:
+            return float(r.degraded_band_lo)
+        dl = getattr(self.cache.policy, "degraded_lo", None)
+        return 0.55 if dl is None else float(dl)
+
+    def _serve_degraded(self, batch, failed, result):
+        """Degraded-mode serving (§20.4): each failed miss row is offered
+        the best cached neighbour at or above the relaxed degraded floor —
+        synthesis first when a synthesizer is installed, else the dominant
+        neighbour's stored answer verbatim. Returns row -> (answer, score,
+        source_id). Served rows stay OUT of the slab (the caller clears
+        their ``valid`` bits): a degraded answer is another entry's answer
+        under the wrong key, and admitting it would keep poisoning exact
+        lookups for this query long after the outage clears."""
+        r = self.resilience
+        if r is None or not r.degraded_serving or not failed:
+            return {}
+        floor = self._degraded_floor()
+        rm = self.metrics.resilience
+        payload = self._gather_topk_jit(self.runtime, result)
+        nb_slot = np.asarray(result.topk_index)
+        nb_score = np.asarray(payload["score"])
+        nb_sid = np.asarray(payload["source_id"])
+        nb_vals = np.asarray(payload["values"])
+        out: dict[int, tuple[str, float, int]] = {}
+        for i in sorted(failed):
+            cand = [j for j in range(nb_slot.shape[1])
+                    if nb_slot[i, j] >= 0 and nb_score[i, j] >= floor]
+            if not cand:
+                rm.degraded_failed += 1
+                continue
+            served = None
+            if self.synthesizer is not None:
+                from repro.generative.synthesize import Neighbour
+                neighbours = [
+                    Neighbour(slot=int(nb_slot[i, j]),
+                              score=float(nb_score[i, j]),
+                              source_id=int(nb_sid[i, j]),
+                              answer=self.tokenizer.decode(nb_vals[i, j]))
+                    for j in cand]
+                syn = self.synthesizer.synthesize(batch[i].query, neighbours)
+                if syn is not None:
+                    served = (syn.answer, float(nb_score[i, cand[0]]),
+                              int(syn.source_id))
+            if served is None:
+                j = cand[0]      # neighbours arrive score-descending
+                served = (self.tokenizer.decode(nb_vals[i, j]),
+                          float(nb_score[i, j]), int(nb_sid[i, j]))
+            out[i] = served
+            rm.degraded_served += 1
+        return out
 
     def _synthesize_near(self, batch, n_valid: int, result):
         """Host-side near-hit synthesis (§17.3), shared by both serve paths.
@@ -716,6 +878,11 @@ class CachedEngine:
         stage clock and no per-request allocation (§18.2).
         """
         n_valid = len(batch)
+        if self.resilience is not None:
+            # surface the resilience section in metrics summaries even
+            # before the first fault (callers replace engine.metrics, so
+            # this cannot live in __init__)
+            self.metrics.resilience_seen = True
         clock = self.tracer.stage_clock()
         own_traces = False
         if clock is not None and traces is None:
@@ -782,14 +949,23 @@ class CachedEngine:
                 clock.tick("near_synthesis")
             miss_idx = [i for i in range(n_valid)
                         if not peek_hit[i] and i not in syn_by_row]
-            # 2. backend answers the misses (paper §2.5 step 2)
+            # 2. backend answers the misses (paper §2.5 step 2). Failure
+            #    containment (§20.2): a failed call marks only its own
+            #    rows — hit/near rows of the same flush serve normally and
+            #    the failed rows fall to degraded serving or an error row.
             miss_values = np.zeros((n, cfg.value_len), dtype=np.int32)
             miss_lens = np.zeros((n,), dtype=np.int32)
-            if miss_idx:
-                toks, lens, answers, llm_time, llm_cost = \
-                    self._generate_misses(batch, miss_idx)
-                miss_values[miss_idx] = np.asarray(toks)
-                miss_lens[miss_idx] = np.asarray(lens)
+            failed, gen_idx = self._split_expired(batch, miss_idx)
+            if gen_idx:
+                out, err = self._resolve_misses(batch, gen_idx)
+                if err is None:
+                    toks, lens, answers, llm_time, llm_cost = out
+                    miss_values[gen_idx] = np.asarray(toks)
+                    miss_lens[gen_idx] = np.asarray(lens)
+                else:
+                    for i in gen_idx:
+                        failed[i] = err
+            degraded = self._serve_degraded(batch, failed, peek)
             if clock is not None:
                 clock.tick("backend_call")
             # synthesized rows ride the same masked insert (insert mask is
@@ -809,6 +985,11 @@ class CachedEngine:
             sid = jnp.asarray(sid_np)
             valid = np.zeros((n,), dtype=bool)
             valid[:n_valid] = True
+            # failed AND degraded rows are never admitted (§20.4): a
+            # cleared valid bit drops them from the step's insert mask and
+            # every device counter, exactly like pad rows
+            for i in failed:
+                valid[i] = False
             # 3. one fused compiled step: commit the peek + masked insert
             t1 = time.perf_counter()
             result, self.runtime = self._step_jit(
@@ -819,7 +1000,8 @@ class CachedEngine:
             cache_time += time.perf_counter() - t1
             if clock is not None:
                 clock.tick("insert")
-            self._inserts_since_rebuild += len(miss_idx) + len(syn_by_row)
+            self._inserts_since_rebuild += \
+                len(miss_idx) - len(failed) + len(syn_by_row)
         else:
             # reference path: pre-fuse once so the miss insert stores the
             # SAME fused key the lookup searched (parity with the fused
@@ -845,13 +1027,23 @@ class CachedEngine:
             row_toks: dict[int, np.ndarray] = {}
             row_lens: dict[int, int] = {}
             row_sid: dict[int, int] = {}
-            if miss_idx:
-                toks, lens, answers, llm_time, llm_cost = \
-                    self._generate_misses(batch, miss_idx)
-                for j, i in enumerate(miss_idx):
-                    row_toks[i] = np.asarray(toks[j])
-                    row_lens[i] = int(lens[j])
-                    row_sid[i] = batch[i].source_id
+            failed, gen_idx = self._split_expired(batch, miss_idx)
+            if gen_idx:
+                out, err = self._resolve_misses(batch, gen_idx)
+                if err is None:
+                    toks, lens, answers, llm_time, llm_cost = out
+                    for j, i in enumerate(gen_idx):
+                        row_toks[i] = np.asarray(toks[j])
+                        row_lens[i] = int(lens[j])
+                        row_sid[i] = batch[i].source_id
+                else:
+                    for i in gen_idx:
+                        failed[i] = err
+            # failed rows simply never enter row_toks, so the subset insert
+            # below skips them (§20.4); unlike the fused path the mutating
+            # lookup above already counted them — accepted on the
+            # reference path
+            degraded = self._serve_degraded(batch, failed, result)
             if clock is not None:
                 clock.tick("backend_call")
             if syn_by_row:
@@ -881,7 +1073,8 @@ class CachedEngine:
 
         if self.sessions is not None:
             self._append_turns(batch, n_valid,
-                               self._canonical_keys(result, emb, win, wlen))
+                               self._canonical_keys(result, emb, win, wlen),
+                               skip=failed)
 
         hit = np.asarray(result.hit)
         scores = np.asarray(result.score)
@@ -922,29 +1115,44 @@ class CachedEngine:
                     self.runtime,
                     was_positive=jnp.asarray(positives),
                     was_near=jnp.asarray(near_served))
+        if self.judge is not None and degraded:
+            # degraded answers are judged for OBSERVATION only (§20.4):
+            # their precision is a brownout quality signal, but they never
+            # feed the threshold/band adaptation — an outage must not move
+            # the edges the healthy path serves under
+            rm = self.metrics.resilience
+            for i, d in degraded.items():
+                rm.degraded_judged += 1
+                if self.judge(batch[i], int(d[2])):
+                    rm.degraded_positives += 1
 
         # metrics: baseline = every query pays the LLM call. Only the
-        # n_valid real rows are recorded — pad rows must not move counters.
+        # n_valid real rows are recorded — pad rows must not move counters,
+        # and neither do failed/degraded rows (§20.4): like the device-side
+        # valid mask, the host accounting sees only the rows the cache
+        # actually resolved; the fault path has its own counters.
+        ok_rows = [i for i in range(n_valid) if i not in failed]
         per_call = getattr(self.backend, "latency_per_call_s", None)
         baseline_time = (per_call or (llm_time / max(len(miss_idx), 1))) \
-            * n_valid
+            * len(ok_rows)
         per_cost = getattr(self.backend, "cost_per_call_usd", 0.0)
         self.metrics.record_batch(
-            [batch[i].category for i in range(n_valid)],
-            hit[:n_valid], positives[:n_valid],
+            [batch[i].category for i in ok_rows],
+            hit[ok_rows], positives[ok_rows],
             judged=[self.judge is not None
                     and (bool(hit[i]) or bool(near_served[i]))
-                    for i in range(n_valid)],
+                    for i in ok_rows],
             cache_time_s=cache_time, llm_time_s=llm_time + syn_time,
             llm_cost=llm_cost + syn_cost,
-            baseline_cost=per_cost * n_valid,
+            baseline_cost=per_cost * len(ok_rows),
             baseline_time=baseline_time,
             tenants=None if self.registry is None else
-            [batch[i].tenant for i in range(n_valid)],
-            contexts=None if self.sessions is None else has_ctx[:n_valid],
-            nears=None if self.synthesizer is None else near_row[:n_valid],
+            [batch[i].tenant for i in ok_rows],
+            contexts=None if self.sessions is None else
+            [has_ctx[i] for i in ok_rows],
+            nears=None if self.synthesizer is None else near_row[ok_rows],
             near_served=None if self.synthesizer is None
-            else near_served[:n_valid],
+            else near_served[ok_rows],
             syn_cost=syn_cost, syn_time=syn_time)
 
         whys = None
@@ -955,23 +1163,44 @@ class CachedEngine:
                 syn_by_row, why_ps, why_topk)
 
         per_q_latency = (cache_time + llm_time + syn_time) / max(n_valid, 1)
+
+        def _path_of(i: int) -> str:
+            if i in degraded:
+                return "degraded"
+            if i in failed:
+                return "error"
+            if hit[i]:
+                return "hit"
+            return "near" if near_served[i] else "miss"
+
         if record_path_latency:
             for i in range(n_valid):
-                path = "hit" if hit[i] else (
-                    "near" if near_served[i] else "miss")
                 self.metrics.record_latency(
-                    path, per_q_latency,
+                    _path_of(i), per_q_latency,
                     tenant=None if self.registry is None
                     else batch[i].tenant)
-        responses = [
-            Response(answer=answers[i], cached=bool(hit[i]),
-                     score=float(scores[i]), latency_s=per_q_latency,
-                     context=has_ctx[i],
-                     near_hit=bool(near_served[i]),
-                     trace_id="" if traces is None or i >= len(traces)
-                     else traces[i].trace_id,
-                     why=None if whys is None else whys[i])
-            for i in range(n_valid)]
+
+        def _mk_response(i: int) -> Response:
+            tr_id = "" if traces is None or i >= len(traces) \
+                else traces[i].trace_id
+            w = None if whys is None else whys[i]
+            if i in degraded:
+                ans, sc, _sid = degraded[i]
+                return Response(answer=ans, cached=False, score=sc,
+                                latency_s=per_q_latency, context=has_ctx[i],
+                                degraded=True, trace_id=tr_id, why=w)
+            if i in failed:
+                return Response(answer="", cached=False,
+                                score=float(scores[i]),
+                                latency_s=per_q_latency, context=has_ctx[i],
+                                error=failed[i], trace_id=tr_id, why=w)
+            return Response(answer=answers[i], cached=bool(hit[i]),
+                            score=float(scores[i]), latency_s=per_q_latency,
+                            context=has_ctx[i],
+                            near_hit=bool(near_served[i]),
+                            trace_id=tr_id, why=w)
+
+        responses = [_mk_response(i) for i in range(n_valid)]
         if clock is not None:
             clock.tick("respond")
             if traces is not None:
@@ -986,13 +1215,14 @@ class CachedEngine:
                         continue
                     tr.spans.extend(clock.spans)
                     tr.annotate(row=i, batch_rows=n_valid,
-                                path="hit" if hit[i] else
-                                ("near" if near_served[i] else "miss"))
+                                path=_path_of(i))
                     if whys is not None and whys[i] is not None:
                         tr.why = whys[i]
                     if own_traces:
                         self.tracer.finish(tr, e2e_s=batch_wall)
         if self.events is not None:
+            fault_kw = {} if not failed else {
+                "failed": len(failed), "degraded": len(degraded)}
             self.events.emit(
                 "serve_batch", rows=n_valid,
                 hits=int(hit[:n_valid].sum()),
@@ -1001,5 +1231,6 @@ class CachedEngine:
                 cache_time_s=round(cache_time, 6),
                 llm_time_s=round(llm_time + syn_time, 6),
                 stats_delta={k: int(getattr(self.stats, k)) - ev_stats0[k]
-                             for k in ev_stats0})
+                             for k in ev_stats0},
+                **fault_kw)
         return responses

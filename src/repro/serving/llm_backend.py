@@ -24,6 +24,25 @@ from repro.data.qa_dataset import QAPair
 from repro.data.tokenizer import HashTokenizer
 
 
+class BackendError(RuntimeError):
+    """A backend ``generate`` call failed for the rows that needed it.
+
+    This is the exception the serving stack resolves *per row* (DESIGN.md
+    §20.2): cache-hit / near-hit / degraded rows in the same micro-batch
+    are served normally and only the true-miss rows whose call failed see
+    it. Subclasses distinguish the fault families the resilience layer
+    reacts to differently (a timeout consumed deadline budget; an
+    unavailable backend did not)."""
+
+
+class BackendUnavailable(BackendError):
+    """The backend refused or errored the call (5xx / connection reset)."""
+
+
+class BackendTimeout(BackendError):
+    """The call consumed its time budget without producing an answer."""
+
+
 @dataclasses.dataclass
 class BackendResult:
     answers: list[str]

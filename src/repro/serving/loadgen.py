@@ -82,6 +82,22 @@ class LoadResult:
         return len(self.responses) / self.wall_s if self.wall_s > 0 else 0.0
 
 
+def availability(responses: Sequence[object]) -> float:
+    """Fraction of a run's slots answered with a usable response.
+
+    Under fault injection (DESIGN.md §20) a generator run with
+    ``return_exceptions=True`` yields a mix of ``Response`` objects,
+    per-row ``BackendError`` / ``Overloaded`` exceptions, and failed
+    ``Response`` rows carrying ``error``. A slot counts as available iff
+    it holds a ``Response`` with no error — degraded responses count (the
+    caller got an answer; that is the point of degraded serving)."""
+    if not responses:
+        return 0.0
+    ok = sum(1 for r in responses
+             if isinstance(r, Response) and not r.error)
+    return ok / len(responses)
+
+
 def build_workload(pairs: Sequence[QAPair], n_requests: int, *,
                    paraphrase_ratio: float = 0.75,
                    burst_prob: float = 0.0, burst_size: int = 4,
@@ -324,8 +340,14 @@ def build_multi_tenant_workload(
 
 
 async def run_open_loop(submit: Submit, requests: Sequence[Request],
-                        rate_qps: float, *, seed: int = 0) -> LoadResult:
-    """Open-loop Poisson: exponential inter-arrivals at ``rate_qps``."""
+                        rate_qps: float, *, seed: int = 0,
+                        return_exceptions: bool = False) -> LoadResult:
+    """Open-loop Poisson: exponential inter-arrivals at ``rate_qps``.
+
+    ``return_exceptions=True`` (fault-injection runs, §20) keeps failed
+    submits — shed ``Overloaded`` rejections, per-row backend errors — in
+    the response list as exception objects instead of aborting the run;
+    score the result with ``availability``."""
     rng = random.Random(seed)
     loop = asyncio.get_running_loop()
     start = loop.time()
@@ -337,7 +359,8 @@ async def run_open_loop(submit: Submit, requests: Sequence[Request],
         if delay > 0:
             await asyncio.sleep(delay)
         tasks.append(asyncio.create_task(submit(req)))
-    responses = list(await asyncio.gather(*tasks))
+    responses = list(await asyncio.gather(
+        *tasks, return_exceptions=return_exceptions))
     return LoadResult(responses=responses, wall_s=loop.time() - start)
 
 
@@ -358,11 +381,20 @@ async def run_closed_loop(submit: Submit, requests: Sequence[Request],
 
 
 async def run_waves(submit: Submit, requests: Sequence[Request],
-                    *, wave: int) -> LoadResult:
-    """Lockstep waves of ``wave`` concurrent submits (sync-batch analogue)."""
+                    *, wave: int,
+                    return_exceptions: bool = False) -> LoadResult:
+    """Lockstep waves of ``wave`` concurrent submits (sync-batch analogue).
+
+    ``return_exceptions=True`` keeps per-slot failures in the response
+    list (see ``run_open_loop``); lockstep waves plus a deterministic
+    fault schedule keyed by backend call index make chaos runs exactly
+    reproducible — the same requests land in the same batches, so the
+    same calls hit the same fault windows every run (§20.1)."""
     t0 = time.perf_counter()
     responses: list[Response] = []
     for i in range(0, len(requests), wave):
         chunk = requests[i:i + wave]
-        responses.extend(await asyncio.gather(*(submit(r) for r in chunk)))
+        responses.extend(await asyncio.gather(
+            *(submit(r) for r in chunk),
+            return_exceptions=return_exceptions))
     return LoadResult(responses=responses, wall_s=time.perf_counter() - t0)

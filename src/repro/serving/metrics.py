@@ -226,6 +226,48 @@ class NearHitMetrics:
 
 
 @dataclasses.dataclass
+class ResilienceMetrics:
+    """Fault-path accounting for resilient serving (DESIGN.md §20.5).
+
+    ``backend_failures`` counts failed backend calls (including failed
+    retries); ``retries`` the §20.3 re-attempts and ``retry_successes``
+    the calls a retry rescued; ``breaker_short_circuits`` the calls the
+    open breaker refused without touching the backend. ``degraded_*``
+    track the §20.4 fallback: rows served from a cached neighbour under
+    the relaxed floor (never admitted to the slab), rows with no servable
+    neighbour, and the judged quality of what was served. ``shed`` counts
+    explicit Overloaded rejections from the scheduler's shed policy.
+    """
+
+    backend_failures: int = 0
+    retries: int = 0
+    retry_successes: int = 0
+    breaker_short_circuits: int = 0
+    degraded_served: int = 0
+    degraded_failed: int = 0
+    degraded_judged: int = 0
+    degraded_positives: int = 0
+    deadline_exhausted: int = 0
+    shed: int = 0
+
+    @property
+    def degraded_precision(self) -> float:
+        return self.degraded_positives / self.degraded_judged \
+            if self.degraded_judged else 0.0
+
+    def row(self) -> dict:
+        return {"backend_failures": self.backend_failures,
+                "retries": self.retries,
+                "retry_successes": self.retry_successes,
+                "breaker_short_circuits": self.breaker_short_circuits,
+                "degraded_served": self.degraded_served,
+                "degraded_failed": self.degraded_failed,
+                "degraded_precision": round(self.degraded_precision, 4),
+                "deadline_exhausted": self.deadline_exhausted,
+                "shed": self.shed}
+
+
+@dataclasses.dataclass
 class ServingMetrics:
     per_category: dict = dataclasses.field(
         default_factory=lambda: defaultdict(CategoryMetrics))
@@ -239,6 +281,10 @@ class ServingMetrics:
     near: NearHitMetrics = dataclasses.field(
         default_factory=NearHitMetrics)       # band-row accounting (§17)
     near_seen: bool = False                   # any nears=... recorded?
+    resilience: ResilienceMetrics = dataclasses.field(
+        default_factory=ResilienceMetrics)    # fault-path accounting (§20)
+    resilience_seen: bool = False             # resilience configured, or
+                                              # any backend failure seen?
     total_cost_usd: float = 0.0
     baseline_cost_usd: float = 0.0          # what 100% API calls would cost
     cache_path_time_s: float = 0.0          # embed + lookup wall time
@@ -359,6 +405,8 @@ class ServingMetrics:
             "tenants": tenants,
             "context": context,
             "near": self.near.row() if self.near_seen else {},
+            "resilience": self.resilience.row()
+            if self.resilience_seen else {},
             "queries": self.queries,
             "total_cost_usd": round(self.total_cost_usd, 4),
             "baseline_cost_usd": round(self.baseline_cost_usd, 4),

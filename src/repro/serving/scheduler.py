@@ -64,6 +64,8 @@ from concurrent.futures import ThreadPoolExecutor
 import numpy as np
 
 from repro.serving.engine import CachedEngine, Request, Response
+from repro.serving.llm_backend import BackendError
+from repro.serving.resilience import Overloaded
 
 
 def normalize_query(text: str) -> str:
@@ -106,10 +108,20 @@ class SchedulerConfig:
                                              # (None -> max_queue)
     tenant_weights: dict | None = None       # DRR quanta by tenant name;
                                              # unlisted tenants weigh 1.0
+    overload_policy: str = "block"           # full queue: "block" parks the
+                                             # submitter until a slot frees
+                                             # (pre-§20 behaviour); "shed"
+                                             # raises Overloaded instead —
+                                             # an explicit rejection beats
+                                             # unbounded latency (§20.5)
 
     def __post_init__(self):
         if self.max_batch <= 0 or self.max_queue <= 0:
             raise ValueError("max_batch and max_queue must be positive")
+        if self.overload_policy not in ("block", "shed"):
+            raise ValueError(
+                f"overload_policy must be 'block' or 'shed', "
+                f"got {self.overload_policy!r}")
         if self.max_wait_ms < 0:
             raise ValueError("max_wait_ms must be >= 0")
         if self.coalesce_sim is not None \
@@ -335,9 +347,19 @@ class AsyncScheduler:
                 while (self._qlen >= self.config.max_queue
                        or len(queue) >= cap_tenant):
                     # backpressure (§12.2): demand an immediate flush and
-                    # wait for a freed slot in *this* tenant's budget
+                    # wait for a freed slot in *this* tenant's budget —
+                    # or, under the shed policy (§20.5), reject loudly
+                    # instead of queueing latency the caller never agreed to
                     self._force_flush = True
                     self._cond.notify_all()
+                    if self.config.overload_policy == "shed":
+                        self.engine.metrics.resilience.shed += 1
+                        self.engine.metrics.resilience_seen = True
+                        raise Overloaded(
+                            f"queue full (tenant {tenant!r}: "
+                            f"{len(queue)}/{cap_tenant}, total "
+                            f"{self._qlen}/{self.config.max_queue}); "
+                            "load shed — retry with backoff")
                     await self._cond.wait()
                     if self._stopping:
                         raise RuntimeError("scheduler stopped while queued")
@@ -432,7 +454,19 @@ class AsyncScheduler:
     async def _serve(self, entries: list[_Entry]) -> None:
         """One engine round for one admission batch, off the event loop."""
         loop = asyncio.get_running_loop()
-        batch = [e.request for e in entries]
+        # deadline budgets (§20.3): the engine must see the budget that
+        # REMAINS after queue wait, so retries can never push a request
+        # past the SLO its caller stated at submit time. Requests without
+        # a deadline pass through untouched (identical object).
+        t_dispatch = time.perf_counter()
+        batch = []
+        for e in entries:
+            r = e.request
+            if r.deadline_ms is not None:
+                waited_ms = (t_dispatch - e.arrival) * 1000.0
+                r = dataclasses.replace(
+                    r, deadline_ms=max(r.deadline_ms - waited_ms, 0.0))
+            batch.append(r)
         try:
             responses = await loop.run_in_executor(
                 self._executor,
@@ -455,10 +489,35 @@ class AsyncScheduler:
         async with self._cond:
             for e, r in zip(entries, responses):
                 tenant = self._tenant_of(e.request)
+                key = coalesce_key(e.request)
+                if r.error:
+                    # per-row failure domain (§20.2): only the rows whose
+                    # backend call actually failed reject — hit/near/
+                    # degraded rows of the same flush resolved normally
+                    exc = BackendError(r.error)
+                    self._unregister_leader(key)
+                    self.engine.metrics.record_latency(
+                        "error", done - e.arrival, tenant=tenant)
+                    if not e.future.done():
+                        e.future.set_exception(exc)
+                    if e.trace:
+                        self.engine.tracer.finish(e.trace,
+                                                  e2e_s=done - e.arrival)
+                    for fut, w_arrival, wtr, _w_req in self._pending.pop(
+                            key, []):
+                        self.engine.metrics.record_latency(
+                            "error", done - w_arrival, tenant=tenant)
+                        if wtr:
+                            self.engine.tracer.finish(
+                                wtr, e2e_s=done - w_arrival)
+                        if not fut.done():
+                            fut.set_exception(exc)
+                    continue
                 # end-to-end latency: queue wait + service (the sync path's
                 # samples are service-only; these are what a client sees)
-                path = "hit" if r.cached else (
-                    "near" if r.near_hit else "miss")
+                path = "degraded" if r.degraded else (
+                    "hit" if r.cached else
+                    ("near" if r.near_hit else "miss"))
                 self.engine.metrics.record_latency(
                     path, done - e.arrival, tenant=tenant)
                 if not e.future.done():
@@ -473,7 +532,6 @@ class AsyncScheduler:
                 # tenant — the coalesce key guarantees it; similarity
                 # waiters additionally passed the cosine >= coalesce_sim
                 # verification against this leader)
-                key = coalesce_key(e.request)
                 self._unregister_leader(key)
                 for fut, w_arrival, wtr, w_req in self._pending.pop(
                         key, []):
@@ -505,7 +563,8 @@ class AsyncScheduler:
         ``coalesced`` (this request paid nothing), ``coalesced_into`` names
         the leader, and the leader's own record — when it carried one —
         rides along with its decision demoted to ``leader_decision``."""
-        leader_decision = ("hit" if r.cached
+        leader_decision = ("degraded" if r.degraded
+                          else "hit" if r.cached
                           else "near_hit" if r.near_hit else "miss")
         why = dict(r.why) if r.why is not None else {
             "score": round(float(r.score), 6),

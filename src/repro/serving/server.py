@@ -48,6 +48,15 @@ TCP port (sniffed off the first line) or on the dedicated
 exposition; ``GET /traces`` and ``GET /events`` drain the retained
 traces / the structured event ring as JSON lines.
 
+Resilient serving (DESIGN.md §20) rides the same additive discipline:
+``deadline_ms`` on a request line carries the caller's latency budget onto
+``Request.deadline_ms`` (queue wait + retries never exceed it); on an
+engine with a resilience config every response line gains ``degraded``
+(true when the answer came from a cached neighbour because the backend
+was unavailable); a shed rejection (``overload_policy="shed"``) answers
+``{"error": ..., "overloaded": true}`` and a per-row backend failure
+answers ``{"error": ...}`` for exactly the rows that needed the backend.
+
 No third-party serving stack (HTTP frameworks, gRPC) is used — the repo's
 offline constraint — but the seam is exactly where one would bolt on.
 """
@@ -58,6 +67,7 @@ import json
 
 from repro.obs.export import MetricsExporter
 from repro.serving.engine import CachedEngine, Request, Response
+from repro.serving.resilience import Overloaded
 from repro.serving.scheduler import AsyncScheduler, SchedulerConfig
 
 
@@ -102,11 +112,12 @@ class AsyncCacheServer:
     async def submit(self, query: str, *, category: str = "default",
                      source_id: int = -1, semantic_key: str = "",
                      tenant: str = "default", session: str = "",
-                     explain: bool = False) -> Response:
+                     explain: bool = False,
+                     deadline_ms: float | None = None) -> Response:
         return await self.scheduler.submit(Request(
             query=query, category=category, source_id=source_id,
             semantic_key=semantic_key, tenant=tenant, session=session,
-            explain=explain))
+            explain=explain, deadline_ms=deadline_ms))
 
     async def submit_request(self, request: Request) -> Response:
         return await self.scheduler.submit(request)
@@ -194,10 +205,16 @@ class AsyncCacheServer:
                     semantic_key=obj.get("semantic_key", ""),
                     tenant=obj.get("tenant", "default"),
                     session=obj.get("session", ""),
-                    explain=bool(obj.get("explain", False)))
+                    explain=bool(obj.get("explain", False)),
+                    deadline_ms=None if obj.get("deadline_ms") is None
+                    else float(obj["deadline_ms"]))
                 payload = {"answer": resp.answer, "cached": resp.cached,
                            "score": resp.score, "latency_s": resp.latency_s,
                            "coalesced": resp.coalesced}
+                if self.engine.resilience is not None:
+                    # additive, gated on the resilience layer actually
+                    # running — pre-§20 deployments keep the exact payload
+                    payload["degraded"] = resp.degraded
                 if "session" in obj:
                     # the context flag only exists for clients that opted
                     # into sessions — a sessionless request line gets
@@ -214,7 +231,10 @@ class AsyncCacheServer:
                     # clients keep the previous payload byte for byte
                     payload["why"] = resp.why
                     payload["trace_id"] = resp.trace_id
+            except Overloaded as exc:  # shed (§20.5): explicit, retryable
+                payload = {"error": str(exc), "overloaded": True}
             except Exception as exc:   # malformed line / scheduler stopped
+                                       # / per-row BackendError (§20.2)
                 payload = {"error": str(exc)}
             if req_id is not None:     # echo: responses can be out of order
                 payload["id"] = req_id

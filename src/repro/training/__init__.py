@@ -2,8 +2,10 @@
 from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_update,
                                       init_adamw, lr_at, make_train_step,
                                       global_norm)
-from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.checkpoint import (CheckpointCorruptError,
+                                       load_checkpoint, open_checkpoint,
+                                       save_checkpoint)
 
 __all__ = ["AdamWConfig", "AdamWState", "adamw_update", "init_adamw",
            "lr_at", "make_train_step", "global_norm", "load_checkpoint",
-           "save_checkpoint"]
+           "save_checkpoint", "open_checkpoint", "CheckpointCorruptError"]

@@ -5,15 +5,31 @@ saved as one compressed npz plus a tiny JSON manifest — restartable,
 inspectable, no framework lock-in. Cache slabs (the Redis analogue) are
 checkpointed with the same machinery, giving the paper's "cache persists
 across restarts" behaviour for free.
+
+Crash safety (DESIGN.md §20.6): both the npz and the manifest are written
+to a temp file in the target directory and published with ``os.replace``
+(atomic on POSIX), so a crash mid-save leaves the previous snapshot
+intact — never a half-written file under the real name. On the read side
+every load goes through ``open_checkpoint``, which reads every member
+eagerly and converts the zoo of zipfile/np.load failure modes a truncated
+or corrupt file produces into one loud ``CheckpointCorruptError`` naming
+the path.
 """
 from __future__ import annotations
 
 import json
 import os
+import zipfile
 from typing import Any
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """The checkpoint file exists but cannot be read back — truncated
+    write, bit rot, or not an npz at all. The snapshot must be discarded;
+    retrying the load cannot succeed."""
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -38,19 +54,61 @@ def _key_str(p) -> str:
 def save_checkpoint(path: str, tree: Any, metadata: dict | None = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
-    np.savez_compressed(path, **flat)
+    # write-then-replace (§20.6): np.savez appends ".npz" to bare string
+    # paths but not to file objects, so write the temp through a handle and
+    # publish both files atomically under their real names
+    data_path = path if path.endswith(".npz") else path + ".npz"
+    tmp_data = data_path + ".tmp"
+    try:
+        with open(tmp_data, "wb") as f:
+            np.savez_compressed(f, **flat)
+        os.replace(tmp_data, data_path)
+    finally:
+        if os.path.exists(tmp_data):
+            os.remove(tmp_data)
     manifest = {"keys": sorted(flat), "metadata": metadata or {}}
-    with open(path + ".manifest.json", "w") as f:
-        json.dump(manifest, f, indent=2)
+    tmp_manifest = path + ".manifest.json.tmp"
+    try:
+        with open(tmp_manifest, "w") as f:
+            json.dump(manifest, f, indent=2)
+        os.replace(tmp_manifest, path + ".manifest.json")
+    finally:
+        if os.path.exists(tmp_manifest):
+            os.remove(tmp_manifest)
+
+
+def open_checkpoint(path: str) -> dict[str, np.ndarray]:
+    """Corrupt-safe checkpoint read: every member loaded eagerly.
+
+    A truncated npz can fail at open time (broken zip directory) OR only
+    when a member is decompressed (the central directory survived but the
+    data didn't), and the raw failure is any of BadZipFile / OSError /
+    EOFError / ValueError deep inside np.load. Reading everything here
+    turns all of those into one ``CheckpointCorruptError`` that names the
+    file, BEFORE any caller starts mutating its own state.
+    """
+    data_path = path if path.endswith(".npz") else path + ".npz"
+    try:
+        with np.load(data_path) as data:
+            return {k: np.asarray(data[k]) for k in data.files}
+    except (zipfile.BadZipFile, OSError, EOFError, ValueError, KeyError) as exc:
+        raise CheckpointCorruptError(
+            f"checkpoint {data_path!r} is truncated or corrupt "
+            f"({type(exc).__name__}: {exc}); the snapshot cannot be "
+            "restored — delete it and fall back to an older one") from exc
 
 
 def load_checkpoint(path: str, template: Any) -> Any:
     """Restore into the structure of ``template`` (shapes must match)."""
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    data = open_checkpoint(path)
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     new_leaves = []
     for p, leaf in leaves_with_paths:
         key = "/".join(_key_str(x) for x in p)
+        if key not in data:
+            raise CheckpointCorruptError(
+                f"checkpoint {path!r} is missing key {key!r} required by "
+                "the restore template")
         arr = data[key]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: "
@@ -63,8 +121,7 @@ def load_checkpoint_flat(path: str) -> dict[str, np.ndarray]:
     """Raw key -> array view of a checkpoint, no template required — the
     entry point for cross-layout restores where the saved tree's structure
     (per-shard tenancy / index leaves) differs from the running one."""
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
-    return {k: data[k] for k in data.files}
+    return open_checkpoint(path)
 
 
 def reshard_runtime(flat: dict[str, np.ndarray], template: Any, *,

@@ -1,0 +1,414 @@
+"""Resilient-serving tests (DESIGN.md §20): deterministic fault injection,
+retry/deadline budgets, circuit breaker, degraded-mode cache serving, load
+shedding, and the no-fault byte-parity guarantee."""
+import asyncio
+import os
+import tempfile
+
+import pytest
+
+from repro.core.types import CacheConfig
+from repro.data.qa_dataset import build_corpus
+from repro.generative.policy import BandPolicy
+from repro.obs.export import REQUIRED_FAMILIES, MetricsExporter
+from repro.serving import (AsyncCacheServer, BackendTimeout,
+                           BackendUnavailable, CachedEngine, CircuitBreaker,
+                           FaultSchedule, FaultWindow, FaultyBackend,
+                           Overloaded, Request, ResilienceConfig, Response,
+                           RetryPolicy, SchedulerConfig, SimulatedLLMBackend,
+                           availability)
+from repro.training.checkpoint import CheckpointCorruptError
+
+
+@pytest.fixture(scope="module")
+def pairs():
+    return build_corpus(120, seed=0)
+
+
+def noop_sleep(s):
+    pass
+
+
+# every backend call faults — the outage never ends
+ALL_ERRORS = FaultSchedule((FaultWindow("error", 0, 10_000),))
+
+NOVEL = [
+    "how do ion thrusters achieve specific impulse",
+    "what is the halting problem in plain words",
+    "why do violins have f-shaped sound holes",
+    "explain how a heat pump beats resistive heating",
+]
+
+
+def make_engine(pairs, *, schedule=None, resilience=None, batch_size=8,
+                latency_s=0.0, block=False, **kw):
+    backend = SimulatedLLMBackend(pairs, latency_per_call_s=latency_s,
+                                  block=block)
+    if schedule is not None:
+        backend = FaultyBackend(backend, schedule)
+    cfg = kw.pop("config", CacheConfig(dim=384, capacity=4096, value_len=48,
+                                       ttl=None, threshold=0.8))
+    return CachedEngine(cfg, backend, batch_size=batch_size,
+                        resilience=resilience, **kw)
+
+
+class TestFaultSchedule:
+    def test_window_validation(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultWindow("meteor", 0, 5)
+        with pytest.raises(ValueError, match="empty fault window"):
+            FaultWindow("error", 5, 5)
+        with pytest.raises(ValueError, match="error_rate"):
+            FaultWindow("brownout", 0, 5, error_rate=1.5)
+        with pytest.raises(ValueError, match="extra_latency_s"):
+            FaultWindow("latency_spike", 0, 5, extra_latency_s=-1.0)
+
+    def test_fault_at_is_deterministic(self):
+        sched = FaultSchedule((FaultWindow("brownout", 0, 50, error_rate=0.5),),
+                              seed=7)
+        first = [sched.fault_at(i) is not None for i in range(50)]
+        second = [sched.fault_at(i) is not None for i in range(50)]
+        assert first == second
+        # a 0.5 brownout over 50 indexes both fires and skips
+        assert any(first) and not all(first)
+        # a different seed flips at least one coin
+        other = FaultSchedule(sched.windows, seed=8)
+        assert first != [other.fault_at(i) is not None for i in range(50)]
+
+    def test_outside_window_is_healthy(self):
+        sched = FaultSchedule((FaultWindow("error", 3, 5),))
+        assert sched.fault_at(2) is None
+        assert sched.fault_at(3) is not None
+        assert sched.fault_at(5) is None
+
+
+class TestFaultyBackend:
+    def test_error_and_timeout_kinds(self, pairs):
+        fb = FaultyBackend(SimulatedLLMBackend(pairs), FaultSchedule((
+            FaultWindow("error", 0, 1), FaultWindow("timeout", 1, 2))))
+        with pytest.raises(BackendUnavailable, match="injected error: call 0"):
+            fb.generate(["q"])
+        with pytest.raises(BackendTimeout, match="injected timeout: call 1"):
+            fb.generate(["q"])
+        assert fb.calls_started == 2
+        assert fb.faults_injected == 2
+        assert fb.inner.calls == 0      # faults never reach the backend
+
+    def test_latency_spike_taxes_but_serves(self, pairs):
+        fb = FaultyBackend(
+            SimulatedLLMBackend(pairs, latency_per_call_s=0.01),
+            FaultSchedule((FaultWindow("latency_spike", 0, 1,
+                                       extra_latency_s=0.5),)))
+        spiked = fb.generate([pairs[0].question])
+        healthy = fb.generate([pairs[0].question])
+        assert spiked.answers == healthy.answers
+        assert spiked.latency_s == pytest.approx(healthy.latency_s + 0.5)
+        assert fb.faults_injected == 0   # a spike is a tax, not a fault
+
+    def test_attribute_delegation(self, pairs):
+        inner = SimulatedLLMBackend(pairs, latency_per_call_s=0.25)
+        fb = FaultyBackend(inner, FaultSchedule())
+        assert fb.latency_per_call_s == 0.25
+        fb.generate(["q"])
+        assert fb.calls == inner.calls == 1
+
+
+class TestRetryPolicy:
+    def test_backoff_exponential_and_capped(self):
+        p = RetryPolicy(base_backoff_s=0.1, multiplier=2.0, max_backoff_s=0.3,
+                        jitter=0.0)
+        assert p.backoff_s(1) == pytest.approx(0.1)
+        assert p.backoff_s(2) == pytest.approx(0.2)
+        assert p.backoff_s(3) == pytest.approx(0.3)   # capped
+        assert p.backoff_s(9) == pytest.approx(0.3)
+
+    def test_jitter_bounded_and_deterministic(self):
+        p = RetryPolicy(base_backoff_s=0.1, multiplier=1.0, jitter=0.5, seed=3)
+        delays = [p.backoff_s(a, key="some query") for a in range(1, 6)]
+        assert delays == [p.backoff_s(a, key="some query")
+                          for a in range(1, 6)]
+        for d in delays:
+            assert 0.05 <= d <= 0.15
+        assert len(set(delays)) > 1      # jitter actually varies by attempt
+
+    def test_allows_attempt_cap_and_budget(self):
+        p = RetryPolicy(max_attempts=3)
+        assert p.allows(1, elapsed_s=0.0, next_backoff_s=0.0)
+        assert not p.allows(3, elapsed_s=0.0, next_backoff_s=0.0)
+        # the next backoff would overrun the remaining SLO: denied
+        assert not p.allows(1, elapsed_s=0.02, next_backoff_s=0.04,
+                            budget_s=0.05)
+        assert p.allows(1, elapsed_s=0.02, next_backoff_s=0.01, budget_s=0.05)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_attempts=0)
+        with pytest.raises(ValueError):
+            RetryPolicy(multiplier=0.5)
+        with pytest.raises(ValueError):
+            RetryPolicy(jitter=1.0)
+
+
+class TestCircuitBreaker:
+    def test_consecutive_failures_trip(self):
+        b = CircuitBreaker(failure_threshold=3, window=100)
+        b.record_failure()
+        b.record_failure()
+        assert b.state == "closed"
+        b.record_failure()
+        assert b.state == "open"
+        assert b.trips == 1
+
+    def test_error_rate_trips_only_with_full_window(self):
+        b = CircuitBreaker(failure_threshold=10, window=4,
+                           error_rate_threshold=0.5)
+        # 2/3 failures but the window is not full yet: no trip
+        b.record_failure()
+        b.record_success()
+        b.record_failure()
+        assert b.state == "closed"
+        b.record_failure()               # window full, 3/4 >= 0.5
+        assert b.state == "open"
+
+    def test_open_half_open_closed_lifecycle(self):
+        t = [0.0]
+        b = CircuitBreaker(failure_threshold=1, cooldown_s=5.0,
+                           clock=lambda: t[0])
+        b.record_failure()
+        assert b.state == "open" and b.trips == 1
+        assert not b.allow()             # cooldown not elapsed
+        assert b.short_circuits == 1
+        t[0] = 5.0
+        assert b.allow()                 # half-open probe admitted
+        assert b.state == "half_open"
+        b.record_success()
+        assert b.state == "closed" and b.recoveries == 1
+        # a failed probe re-trips instead of recovering
+        b.record_failure()
+        t[0] = 10.0
+        assert b.allow()
+        b.record_failure()
+        assert b.state == "open" and b.trips == 3
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            CircuitBreaker(failure_threshold=0)
+        with pytest.raises(ValueError):
+            CircuitBreaker(error_rate_threshold=0.0)
+        with pytest.raises(ValueError):
+            CircuitBreaker(half_open_probes=0)
+
+
+class TestBandPolicyDegradedLo:
+    def test_degraded_lo_stored(self):
+        p = BandPolicy(tau_lo=0.70, tau_hi=0.80, degraded_lo=0.60)
+        assert p.degraded_lo == 0.60
+
+    def test_degraded_lo_must_relax_not_tighten(self):
+        with pytest.raises(ValueError, match="must not exceed tau_lo"):
+            BandPolicy(tau_lo=0.70, tau_hi=0.80, degraded_lo=0.75)
+        with pytest.raises(ValueError):
+            BandPolicy(tau_lo=0.70, tau_hi=0.80, degraded_lo=1.5)
+
+
+class TestFailureContainment:
+    def test_hit_rows_survive_a_failed_backend_call(self, pairs):
+        # satellite: NO resilience config — containment alone must keep a
+        # batch's hit rows serving when the miss rows' backend call throws
+        eng = make_engine(pairs, schedule=ALL_ERRORS)
+        eng.warm(pairs)
+        hit, miss = eng.process([Request(query=pairs[0].question),
+                                 Request(query=NOVEL[0])])
+        assert hit.cached and hit.error == "" and hit.answer
+        assert miss.error != "" and miss.answer == "" and not miss.degraded
+        assert eng.metrics.resilience.backend_failures == 1
+        assert eng.metrics.resilience_seen
+
+
+class TestEngineRetries:
+    def test_retry_recovers_after_transient_fault(self, pairs):
+        sched = FaultSchedule((FaultWindow("error", 0, 1),))
+        res = ResilienceConfig(
+            retry=RetryPolicy(max_attempts=3, base_backoff_s=0.0, jitter=0.0),
+            breaker=None, sleep=noop_sleep)
+        eng = make_engine(pairs, schedule=sched, resilience=res)
+        r = eng.process([Request(query=NOVEL[0])])[0]
+        assert r.error == "" and not r.degraded and r.answer
+        rm = eng.metrics.resilience
+        assert rm.backend_failures == 1
+        assert rm.retries == 1
+        assert rm.retry_successes == 1
+        assert eng.backend.calls_started == 2
+
+    def test_deadline_budget_blocks_the_retry(self, pairs):
+        res = ResilienceConfig(
+            retry=RetryPolicy(max_attempts=3, base_backoff_s=10.0,
+                              jitter=0.0),
+            breaker=None, degraded_serving=False, sleep=noop_sleep)
+        eng = make_engine(pairs, schedule=ALL_ERRORS, resilience=res)
+        r = eng.process([Request(query=NOVEL[0], deadline_ms=50.0)])[0]
+        assert r.error != ""
+        rm = eng.metrics.resilience
+        assert rm.retries == 0           # the 10s backoff never fit in 50ms
+        assert rm.deadline_exhausted == 1
+        assert eng.backend.calls_started == 1
+
+    def test_spent_deadline_fails_fast_without_a_call(self, pairs):
+        res = ResilienceConfig(retry=RetryPolicy(), breaker=None,
+                               degraded_serving=False, sleep=noop_sleep)
+        eng = make_engine(pairs, schedule=FaultSchedule(), resilience=res)
+        r = eng.process([Request(query=NOVEL[0], deadline_ms=0.0)])[0]
+        assert "DeadlineExhausted" in r.error
+        assert eng.backend.calls_started == 0
+        assert eng.metrics.resilience.deadline_exhausted == 1
+
+
+class TestBreakerInEngine:
+    def test_open_breaker_short_circuits_the_backend(self, pairs):
+        res = ResilienceConfig(
+            retry=RetryPolicy(max_attempts=3, base_backoff_s=0.0, jitter=0.0),
+            breaker=CircuitBreaker(failure_threshold=1, cooldown_s=1000.0),
+            degraded_serving=False, sleep=noop_sleep)
+        eng = make_engine(pairs, schedule=ALL_ERRORS, resilience=res)
+        r1 = eng.process([Request(query=NOVEL[0])])[0]
+        assert r1.error != ""
+        assert res.breaker.state == "open"
+        assert eng.backend.calls_started == 1     # trip killed the retries
+        rm = eng.metrics.resilience
+        assert rm.breaker_short_circuits >= 1
+        # next batch never touches the backend at all
+        r2 = eng.process([Request(query=NOVEL[1])])[0]
+        assert "BreakerOpen" in r2.error
+        assert eng.backend.calls_started == 1
+
+
+class TestDegradedServing:
+    def test_serves_best_neighbour_and_never_admits(self, pairs):
+        sched = FaultSchedule((FaultWindow("error", 0, 1),))
+        res = ResilienceConfig(retry=RetryPolicy(max_attempts=1),
+                               breaker=None, degraded_band_lo=0.0,
+                               sleep=noop_sleep)
+        eng = make_engine(pairs, schedule=sched, resilience=res)
+        eng.warm(pairs)
+        inserts_before = int(eng.stats.inserts)
+        r1 = eng.process([Request(query=NOVEL[0])])[0]
+        assert r1.degraded and r1.answer != "" and r1.error == ""
+        assert not r1.cached
+        assert eng.metrics.resilience.degraded_served == 1
+        # the degraded answer was NOT admitted to the slab (§20.4) ...
+        assert int(eng.stats.inserts) == inserts_before
+        # ... so once the outage clears, the same query is a real miss that
+        # pays the backend and gets its own, non-degraded answer
+        r2 = eng.process([Request(query=NOVEL[0])])[0]
+        assert not r2.degraded and not r2.cached and r2.answer
+        assert eng.backend.calls_started == 2
+
+    def test_cold_cache_has_nothing_to_degrade_to(self, pairs):
+        res = ResilienceConfig(retry=RetryPolicy(max_attempts=1),
+                               breaker=None, degraded_band_lo=0.0,
+                               sleep=noop_sleep)
+        eng = make_engine(pairs, schedule=ALL_ERRORS, resilience=res)
+        r = eng.process([Request(query=NOVEL[0])])[0]
+        assert r.error != "" and not r.degraded
+        assert eng.metrics.resilience.degraded_failed == 1
+
+
+class TestNoFaultParity:
+    def test_resilient_engine_matches_plain_engine_bit_for_bit(self, pairs):
+        reqs = [Request(query=p.question) for p in pairs[:16]] \
+            + [Request(query=q) for q in NOVEL] \
+            + [Request(query=p.question) for p in pairs[8:24]]
+
+        def run(resilience, schedule):
+            eng = make_engine(pairs, schedule=schedule, resilience=resilience)
+            eng.warm(pairs[:40])
+            return eng, eng.process(list(reqs))
+
+        plain_eng, plain = run(None, None)
+        res = ResilienceConfig(sleep=noop_sleep)
+        res_eng, resilient = run(res, FaultSchedule())   # no fault windows
+        assert res_eng.backend.faults_injected == 0
+        for a, b in zip(plain, resilient):
+            assert (a.answer, a.cached, a.score, a.near_hit, a.context,
+                    a.degraded, a.error) == \
+                   (b.answer, b.cached, b.score, b.near_hit, b.context,
+                    b.degraded, b.error)
+
+
+class TestOverloadShedding:
+    def test_shed_policy_rejects_loudly_and_strands_nothing(self, pairs):
+        eng = make_engine(pairs, latency_s=0.2, block=True, batch_size=1)
+        eng.serve_batch([Request(query="compile warmup")])
+
+        async def flood():
+            sched = SchedulerConfig(max_batch=1, max_wait_ms=1.0, max_queue=1,
+                                    coalesce=False, overload_policy="shed")
+            async with AsyncCacheServer(eng, sched) as server:
+                return await asyncio.gather(
+                    *(server.submit(q) for q in NOVEL),
+                    return_exceptions=True)
+
+        results = asyncio.run(flood())
+        assert len(results) == 4
+        sheds = [r for r in results if isinstance(r, Overloaded)]
+        served = [r for r in results if isinstance(r, Response)]
+        assert len(sheds) >= 1
+        assert len(sheds) + len(served) == 4      # nothing stranded or lost
+        assert eng.metrics.resilience.shed == len(sheds)
+        for r in sheds:
+            assert "load shed" in str(r)
+        for r in served:
+            assert r.answer and r.error == ""
+
+    def test_overload_policy_validation(self):
+        with pytest.raises(ValueError):
+            SchedulerConfig(overload_policy="panic")
+
+    def test_availability_helper(self):
+        ok = Response(answer="a", cached=True, score=0.9, latency_s=0.0)
+        deg = Response(answer="b", cached=False, score=0.6, latency_s=0.0,
+                       degraded=True)
+        bad = Response(answer="", cached=False, score=0.1, latency_s=0.0,
+                       error="BackendUnavailable: injected")
+        assert availability([]) == 0.0
+        assert availability([ok, deg, bad, Overloaded("queue full")]) \
+            == pytest.approx(0.5)
+
+
+class TestPrometheusFamilies:
+    def test_resilient_engine_exports_the_fault_plane(self, pairs):
+        res = ResilienceConfig(sleep=noop_sleep)
+        eng = make_engine(pairs, schedule=FaultSchedule(), resilience=res)
+        eng.process([Request(query=NOVEL[0])])
+        text = MetricsExporter(eng).render()
+        for fam in ("repro_backend_retries_total",
+                    "repro_breaker_transitions_total",
+                    "repro_degraded_served_total"):
+            assert fam in text
+        assert "repro_breaker_state 0" in text   # closed
+
+    def test_plain_engine_still_serves_every_required_family(self, pairs):
+        eng = make_engine(pairs)
+        eng.process([Request(query=NOVEL[0])])
+        text = MetricsExporter(eng).render()
+        for fam in REQUIRED_FAMILIES:
+            assert fam in text, fam
+        # the breaker gauge is gated on an installed breaker
+        assert "repro_breaker_state" not in text
+
+
+class TestCrashSafeCheckpoints:
+    def test_truncated_cache_file_is_rejected_loudly(self, pairs):
+        eng = make_engine(pairs)
+        eng.warm(pairs[:20])
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "cache.npz")
+            eng.save_cache(path)
+            # atomic write: no temp litter survives a successful save
+            assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+            blob = open(path, "rb").read()
+            with open(path, "wb") as f:
+                f.write(blob[:len(blob) // 2])
+            eng2 = make_engine(pairs)
+            with pytest.raises(CheckpointCorruptError, match="cache.npz"):
+                eng2.load_cache(path)

@@ -10,10 +10,11 @@ import pytest
 
 from repro.core.types import CacheConfig
 from repro.data.qa_dataset import build_corpus, build_test_queries
-from repro.serving import (AsyncCacheServer, Batcher, CachedEngine, Request,
-                           SchedulerConfig, SimulatedLLMBackend,
-                           build_workload, run_closed_loop, run_open_loop,
-                           run_waves)
+from repro.serving import (AsyncCacheServer, BackendError, Batcher,
+                           CachedEngine, FaultSchedule, FaultWindow,
+                           FaultyBackend, Request, Response, SchedulerConfig,
+                           SimulatedLLMBackend, build_workload,
+                           run_closed_loop, run_open_loop, run_waves)
 from repro.serving.engine import PAD_REQUEST
 
 
@@ -450,3 +451,105 @@ class TestTCPServer:
         # client-supplied ids are echoed, so pipelined (and possibly
         # reordered) responses stay correlatable
         assert sorted(l["id"] for l in answers) == [0, 1, 2, 3]
+
+
+# every backend call faults — used to exercise the §20.2 failure domain
+ALL_ERRORS = FaultSchedule((FaultWindow("error", 0, 10_000),))
+
+
+class TestFailureDomainSplit:
+    def test_only_failed_rows_reject_in_a_mixed_batch(self, pairs):
+        # regression (§20.2): a throwing backend used to fail the WHOLE
+        # admission batch; now the hit row of the same flush serves
+        # normally and only the true-miss row rejects
+        eng = make_engine(pairs)
+        eng.warm(pairs)
+        eng.backend = FaultyBackend(eng.backend, ALL_ERRORS)
+        hit_q = pairs[0].question
+        miss_q = DISTINCT_QUERIES[0]
+
+        async def drive():
+            sched = SchedulerConfig(max_batch=4, max_wait_ms=20.0,
+                                    coalesce=False)
+            async with AsyncCacheServer(eng, sched) as server:
+                return await asyncio.gather(server.submit(hit_q),
+                                            server.submit(miss_q),
+                                            return_exceptions=True)
+
+        r_hit, r_miss = asyncio.run(drive())
+        assert isinstance(r_hit, Response)
+        assert r_hit.cached and r_hit.error == "" and r_hit.answer
+        assert isinstance(r_miss, BackendError)
+        assert "injected error" in str(r_miss)
+        assert eng.metrics.resilience.backend_failures == 1
+
+    def test_waiters_inherit_leader_failure_and_state_unwinds(self, pairs):
+        # a failed leader must reject its coalesced waiters too — and leave
+        # no pending entry, leader embedding, or LSH bucket behind
+        eng = make_engine(pairs)
+        eng.backend = FaultyBackend(eng.backend, ALL_ERRORS)
+        q = DISTINCT_QUERIES[1]
+
+        async def drive():
+            sched = SchedulerConfig(max_batch=4, max_wait_ms=10.0,
+                                    coalesce_sim=0.9)
+            server = AsyncCacheServer(eng, sched)
+            async with server:
+                results = await asyncio.gather(
+                    *(server.submit(q) for _ in range(5)),
+                    return_exceptions=True)
+            return results, server.scheduler
+
+        results, sched = asyncio.run(drive())
+        assert len(results) == 5
+        assert all(isinstance(r, BackendError) for r in results)
+        assert eng.backend.calls_started == 1    # ONE failed call for all 5
+        assert sched._pending == {}
+        assert sched._leader_emb == {}
+        assert sched._sim_buckets == {}
+
+
+class TestShutdownUnderFire:
+    def test_stop_mid_execute_resolves_every_future(self, pairs):
+        eng = make_engine(pairs, latency_s=0.15, block=True, batch_size=4)
+        eng.serve_batch([Request(query="compile warmup")])
+
+        async def drive():
+            sched = SchedulerConfig(max_batch=4, max_wait_ms=1.0)
+            server = AsyncCacheServer(eng, sched)
+            await server.start()
+            tasks = [asyncio.create_task(server.submit(q))
+                     for q in DISTINCT_QUERIES[:8]]
+            await asyncio.sleep(0.05)     # first batch is mid-execute now
+            await server.stop()           # drain: serve the backlog, exit
+            results = await asyncio.gather(*tasks, return_exceptions=True)
+            return results, server.scheduler
+
+        results, sched = asyncio.run(drive())
+        assert len(results) == 8
+        # drain semantics: every accepted request is SERVED, none stranded
+        assert all(isinstance(r, Response) for r in results)
+        assert sched._pending == {}
+
+    def test_stop_with_inflight_waiters_strands_nothing(self, pairs):
+        eng = make_engine(pairs, latency_s=0.15, block=True, batch_size=4)
+        eng.serve_batch([Request(query="compile warmup")])
+        q = DISTINCT_QUERIES[2]
+
+        async def drive():
+            sched = SchedulerConfig(max_batch=4, max_wait_ms=1.0)
+            server = AsyncCacheServer(eng, sched)
+            await server.start()
+            tasks = [asyncio.create_task(server.submit(q))
+                     for _ in range(6)]
+            await asyncio.sleep(0.05)     # leader mid-execute, 5 attached
+            await server.stop()
+            with pytest.raises(RuntimeError, match="not running"):
+                await server.submit("too late")
+            results = await asyncio.gather(*tasks, return_exceptions=True)
+            return results, server.scheduler
+
+        results, sched = asyncio.run(drive())
+        assert all(isinstance(r, Response) for r in results)
+        assert sum(r.coalesced for r in results) == 5
+        assert sched._pending == {}

@@ -7,9 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.training import (AdamWConfig, adamw_update, global_norm,
-                            init_adamw, load_checkpoint, lr_at,
-                            save_checkpoint)
+from repro.training import (AdamWConfig, CheckpointCorruptError, adamw_update,
+                            global_norm, init_adamw, load_checkpoint, lr_at,
+                            open_checkpoint, save_checkpoint)
 
 
 def quad_loss(params, target):
@@ -101,6 +101,46 @@ class TestCheckpoint:
         res, _ = c.lookup(restored, emb, 1.0)
         assert bool(jnp.all(res.hit))
         assert int(restored.stats.inserts) == 4
+
+    def test_save_is_atomic_no_tmp_litter(self):
+        """Crash-safe writes (§20.6): the npz and manifest are staged to
+        ``.tmp`` siblings and os.replace'd in — a successful save leaves no
+        temp files, and the final paths exist."""
+        tree = {"w": jnp.ones((4, 4))}
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck.npz")
+            save_checkpoint(p, tree, metadata={"note": "atomic"})
+            names = sorted(os.listdir(d))
+            assert not [n for n in names if n.endswith(".tmp")], names
+            assert "ck.npz" in names and "ck.npz.manifest.json" in names
+
+    def test_truncated_checkpoint_rejected_loudly(self):
+        """A partially-written (chopped mid-file) checkpoint must raise
+        CheckpointCorruptError naming the file — not a bare zipfile/EOF
+        error, and never a silently-garbage tree."""
+        tree = {"layer": {"w": jnp.arange(64.0).reshape(8, 8)},
+                "step": jnp.asarray(3)}
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck.npz")
+            save_checkpoint(p, tree)
+            blob = open(p, "rb").read()
+            for frac in (0.5, 0.9):       # chop mid-archive and mid-member
+                with open(p, "wb") as f:
+                    f.write(blob[:int(len(blob) * frac)])
+                with pytest.raises(CheckpointCorruptError, match="ck.npz"):
+                    open_checkpoint(p)
+                with pytest.raises(CheckpointCorruptError):
+                    load_checkpoint(p, jax.tree_util.tree_map(
+                        jnp.zeros_like, tree))
+
+    def test_missing_key_is_a_corrupt_checkpoint(self):
+        tree = {"w": jnp.ones((2, 2))}
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck.npz")
+            save_checkpoint(p, tree)
+            with pytest.raises(CheckpointCorruptError):
+                load_checkpoint(p, {"w": jnp.ones((2, 2)),
+                                    "extra": jnp.ones((2,))})
 
 
 class TestTrainSmallModel:
